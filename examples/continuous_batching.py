@@ -1,0 +1,44 @@
+"""Continuous-batching serving: a slot pool over one static donated KV
+cache; requests of different lengths join and leave between decode steps.
+
+    PYTHONPATH=src python examples/continuous_batching.py
+"""
+import sys
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.rlhf import live_device_bytes
+from repro.serving import ContinuousBatcher
+
+
+def main():
+    cfg = get_config("llama3_2_3b").smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cb = ContinuousBatcher(model, cfg, params, slots=4, capacity=96,
+                           temperature=0.8, top_k=40)
+    rng = np.random.RandomState(0)
+    for i in range(10):
+        cb.submit(rng.randint(0, cfg.vocab_size, size=16),
+                  max_new_tokens=8 + 4 * (i % 4))
+    t0 = time.time()
+    done = cb.run_until_drained()
+    dt = time.time() - t0
+    tok = sum(len(r.out_tokens) for r in done)
+    print(f"served {len(done)} requests, {tok} tokens in {cb.steps} decode "
+          f"steps ({dt:.1f}s, {tok/dt:.0f} tok/s)")
+    print(f"live device memory at end: {live_device_bytes()/2**20:.1f} MiB "
+          f"(static pool — no growth with request count)")
+    for r in done[:3]:
+        print(f"  req {r.rid}: {len(r.out_tokens)} tokens ->",
+              r.out_tokens[:8], "...")
+
+
+if __name__ == "__main__":
+    main()

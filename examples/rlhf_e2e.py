@@ -1,0 +1,72 @@
+"""End-to-end RLHF driver: PPO over the four-model setup (actor, critic,
+reference, reward) with a verifiable programmatic reward, phase-boundary
+memory management (the paper's technique), and checkpointing.
+
+Default scale is CPU-friendly (~6M-param actor, 120 PPO iterations — reward
+climbs from the 1/64 random baseline to >0.5). Scale up with the flags.
+
+    PYTHONPATH=src python examples/rlhf_e2e.py [--steps 120] [--d-model 128]
+"""
+import argparse
+import dataclasses
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, "src")
+
+from repro.checkpoint import save
+from repro.configs import get_config
+from repro.rlhf import RLHFConfig, RLHFTrainer
+from repro.rlhf.reward import make_target_token_reward
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--memory-policy", default="after_inference",
+                    choices=("none", "after_inference", "after_all"))
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        get_config("llama3_2_3b").smoke(), num_layers=args.layers,
+        d_model=args.d_model, d_ff=2 * args.d_model, vocab_size=64,
+        num_heads=4, num_kv_heads=2, head_dim=args.d_model // 4)
+    rl = RLHFConfig(prompt_len=8, gen_len=16, lr=3e-3, critic_lr=3e-3,
+                    kl_coef=0.0, top_k=0,
+                    memory_policy=args.memory_policy)
+    trainer = RLHFTrainer(cfg, cfg, rl, jax.random.PRNGKey(0),
+                          reward_fn=make_target_token_reward(7))
+
+    key = jax.random.PRNGKey(1)
+    t0 = time.time()
+    for step in range(args.steps):
+        k1, k2, key = jax.random.split(key, 3)
+        prompts = jax.random.randint(k1, (args.batch, rl.prompt_len), 0,
+                                     cfg.vocab_size)
+        m = trainer.train_step(prompts, k2)
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} reward {m['mean_reward']:+.4f} "
+                  f"kl {m['kl']:.4f} clip {m['clip_frac']:.3f} "
+                  f"vf {m['vf_loss']:.4f} ({time.time()-t0:.0f}s)")
+
+    # per-phase live-memory report (the paper's profiler, on the real run)
+    recs = trainer.memory.records[-7:]
+    print("\nlast-iteration phase memory (policy="
+          f"{args.memory_policy}):")
+    for r in recs:
+        print(f"  {r['phase']:16s} {r['kind']:10s} "
+              f"{r['live_bytes']/2**20:8.2f} MiB live")
+    if args.ckpt_dir:
+        print("saved:", save(args.ckpt_dir, args.steps,
+                             trainer.actor_state["params"]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Checkpointing: pytree <-> npz with path-keyed leaves. Sharding-aware:
+arrays are gathered to host on save and re-placed with the provided
+shardings on restore (per-leaf NamedSharding tree optional)."""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for kp, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in kp)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree: Any) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    tmp = path + ".tmp.npz"
+    flat = _flatten(tree)
+    np.savez(tmp, **flat)
+    os.replace(tmp, path)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Any,
+            shardings: Any = None) -> Any:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    data = np.load(path)
+    flat_like = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree_util.tree_structure(like)
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(flat_like))
+    leaves = []
+    for (kp, leaf), sh in zip(flat_like, shard_leaves):
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in kp)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        arr = arr.astype(leaf.dtype)
+        leaves.append(jax.device_put(arr, sh) if sh is not None
+                      else jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

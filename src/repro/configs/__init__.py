@@ -1,0 +1,14 @@
+from repro.configs.base import (
+    ASSIGNED_ARCHS, ATTN, MAMBA, MLA, MLAConfig, ModelConfig, MoEConfig,
+    PAPER_ARCHS, SHAPES, SSMConfig, ShapeConfig, get_config, list_archs,
+    register,
+)
+
+# paper models register on import so that get_config("opt_1_3b") etc. work
+from repro.configs import paper_models as _paper_models  # noqa: F401
+
+__all__ = [
+    "ASSIGNED_ARCHS", "ATTN", "MAMBA", "MLA", "MLAConfig", "ModelConfig",
+    "MoEConfig", "PAPER_ARCHS", "SHAPES", "SSMConfig", "ShapeConfig",
+    "get_config", "list_archs", "register",
+]

@@ -1,0 +1,284 @@
+"""Config system: model configs, input shapes, and the architecture registry.
+
+Every assigned architecture lives in its own ``configs/<id>.py`` file and
+registers a full-size :class:`ModelConfig` plus a reduced smoke variant
+(2 layers, d_model <= 512, <= 4 experts) used by CPU tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field, replace
+from typing import Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Layer kinds making up a repeating "period" of the network.
+# ---------------------------------------------------------------------------
+ATTN = "attn"     # (sliding-window capable) GQA/MHA self-attention block
+MLA = "mla"       # DeepSeek multi-head latent attention block
+MAMBA = "mamba"   # Mamba2 SSD block
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_expert: int                 # per-expert FFN hidden size
+    num_shared_experts: int = 0   # DeepSeek-style always-on shared experts
+    router_aux_coef: float = 0.01
+    capacity_factor: float = 1.25
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V3 multi-head latent attention dims."""
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 SSD dims."""
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk_size: int = 256
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int                # query heads (0 for attention-free)
+    num_kv_heads: int
+    d_ff: int                     # dense FFN hidden (0 if every layer is MoE/SSM)
+    vocab_size: int
+    # --- layer pattern ------------------------------------------------------
+    # The network is `num_layers / len(period)` repetitions of `period`.
+    period: Tuple[str, ...] = (ATTN,)
+    moe_period: Tuple[bool, ...] = (False,)   # which period slots are MoE FFNs
+    first_k_dense: int = 0                    # leading layers forced dense FFN
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # --- attention details --------------------------------------------------
+    head_dim: int = 0                         # 0 => d_model // num_heads
+    qkv_bias: bool = False
+    mlp_gated: bool = True                    # swiglu (3 mats) vs gelu (2 mats)
+    rope_theta: float = 10000.0
+    sliding_window: int = 0                   # 0 = full attention at train time
+    # decode-time window used only for the long_500k sub-quadratic path:
+    long_context_window: int = 8192
+    # --- structure ----------------------------------------------------------
+    encoder_layers: int = 0                   # >0 => encoder-decoder
+    input_mode: str = "tokens"                # tokens | embeddings | encdec
+    num_prefix_embeddings: int = 0            # VLM patch / audio frame stub len
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    mtp_depth: int = 0                        # DeepSeek multi-token prediction
+    # --- numerics / memory defaults (see DESIGN.md §5) ----------------------
+    param_dtype: str = "bfloat16"
+    optimizer: str = "adamw"                  # adamw | adamw_bf16 | adafactor
+    remat: str = "full"                       # none | dots | full
+    microbatches: int = 1                     # gradient-accumulation steps
+    source: str = ""                          # citation bracket from the pool
+
+    # -- derived -------------------------------------------------------------
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        if self.num_heads:
+            return self.d_model // self.num_heads
+        return 0
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer kind for all num_layers (decoder side)."""
+        reps = -(-self.num_layers // len(self.period))
+        return tuple((self.period * reps)[: self.num_layers])
+
+    def layer_is_moe(self) -> Tuple[bool, ...]:
+        reps = -(-self.num_layers // len(self.moe_period))
+        flags = list((self.moe_period * reps)[: self.num_layers])
+        for i in range(min(self.first_k_dense, self.num_layers)):
+            flags[i] = False
+        return tuple(flags)
+
+    def num_period_groups(self) -> int:
+        assert self.num_layers % len(self.period) == 0, (
+            f"{self.name}: num_layers {self.num_layers} not divisible by "
+            f"period {len(self.period)}")
+        return self.num_layers // len(self.period)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used by rooflines / 6ND)."""
+        d, v = self.d_model, self.vocab_size
+        hd = self.resolved_head_dim()
+        total = v * d  # embeddings
+        if not self.tie_embeddings:
+            total += v * d
+        kinds = self.layer_kinds()
+        is_moe = self.layer_is_moe()
+        for kind, moe_l in zip(kinds, is_moe):
+            total += 2 * d  # two norms
+            if kind == ATTN:
+                q = d * self.num_heads * hd
+                kv = 2 * d * self.num_kv_heads * hd
+                o = self.num_heads * hd * d
+                total += q + kv + o
+                if self.qkv_bias:
+                    total += (self.num_heads + 2 * self.num_kv_heads) * hd
+            elif kind == MLA:
+                m = self.mla
+                qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+                total += d * m.q_lora_rank + m.q_lora_rank * self.num_heads * qk_hd
+                total += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                total += m.kv_lora_rank * self.num_heads * (m.qk_nope_head_dim + m.v_head_dim)
+                total += self.num_heads * m.v_head_dim * d
+            elif kind == MAMBA:
+                s = self.ssm
+                di = s.d_inner(d)
+                nh = s.n_heads(d)
+                total += d * (2 * di + 2 * s.d_state * 0 + nh)  # in_proj(zx)+dt
+                total += d * 2 * s.d_state * 2                  # B,C projections
+                total += s.d_conv * (di + 2 * s.d_state)        # conv
+                total += di * d                                 # out_proj
+                total += 2 * nh                                 # A_log, D
+            if moe_l and self.moe is not None:
+                e = self.moe
+                per = 3 * d * e.d_expert
+                total += (e.num_experts + e.num_shared_experts) * per
+                total += d * e.num_experts  # router
+            elif kind != MAMBA:
+                total += (3 if self.mlp_gated else 2) * d * self.d_ff
+        # encoder stack (attention + dense FFN, full attention, no cache)
+        for _ in range(self.encoder_layers):
+            q = d * self.num_heads * hd
+            kv = 2 * d * self.num_kv_heads * hd
+            o = self.num_heads * hd * d
+            total += q + kv + o + (3 if self.mlp_gated else 2) * d * self.d_ff + 2 * d
+        total += d  # final norm
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: routed top-k + shared only)."""
+        if self.moe is None:
+            return self.param_count()
+        e = self.moe
+        dense_equiv = replace(
+            self, moe=MoEConfig(
+                num_experts=e.top_k, top_k=e.top_k, d_expert=e.d_expert,
+                num_shared_experts=e.num_shared_experts))
+        return dense_equiv.param_count()
+
+    def smoke(self) -> "ModelConfig":
+        """Reduced same-family variant for CPU smoke tests."""
+        per = len(self.period)
+        n_layers = per if per >= 2 else 2
+        nh = min(self.num_heads, 4) or 0
+        nkv = min(self.num_kv_heads, nh) or 0
+        if self.num_heads and self.num_kv_heads:
+            # keep GQA grouping valid
+            while nh % max(nkv, 1):
+                nkv -= 1
+        kw = dict(
+            name=self.name + "-smoke",
+            num_layers=n_layers,
+            d_model=256,
+            num_heads=nh,
+            num_kv_heads=nkv,
+            d_ff=512 if self.d_ff else 0,
+            vocab_size=512,
+            head_dim=64 if self.num_heads else 0,
+            first_k_dense=min(self.first_k_dense, 1),
+            encoder_layers=2 if self.encoder_layers else 0,
+            num_prefix_embeddings=8 if self.num_prefix_embeddings else 0,
+            long_context_window=64,
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+            remat="none",
+            optimizer="adamw",
+            microbatches=1,
+            param_dtype="float32",
+        )
+        if self.moe is not None:
+            kw["moe"] = MoEConfig(
+                num_experts=4, top_k=2, d_expert=128,
+                num_shared_experts=min(self.moe.num_shared_experts, 1),
+                capacity_factor=8.0)   # drop-free: exact decode==forward
+        if self.mla is not None:
+            kw["mla"] = MLAConfig(q_lora_rank=64, kv_lora_rank=32,
+                                  qk_nope_head_dim=32, qk_rope_head_dim=16,
+                                  v_head_dim=32)
+        if self.ssm is not None:
+            kw["ssm"] = SSMConfig(d_state=16, d_conv=4, expand=2,
+                                  head_dim=32, chunk_size=32)
+        if self.mtp_depth:
+            kw["mtp_depth"] = 1
+        return replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned).
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode | long_decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "long_decode"),
+}
+
+ASSIGNED_ARCHS = (
+    "llama3_2_3b",
+    "command_r_plus_104b",
+    "mamba2_370m",
+    "qwen1_5_110b",
+    "granite_moe_3b_a800m",
+    "internvl2_2b",
+    "qwen1_5_4b",
+    "deepseek_v3_671b",
+    "jamba_v0_1_52b",
+    "seamless_m4t_large_v2",
+)
+PAPER_ARCHS = ("opt_1_3b", "opt_350m", "gpt2_xl", "gpt2_medium", "llama2_7b")
+
+_REGISTRY: dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    key = name.replace("-", "_").replace(".", "_")
+    if key not in _REGISTRY:
+        try:
+            importlib.import_module(f"repro.configs.{key}")
+        except ImportError as e:
+            raise KeyError(f"unknown architecture {name!r}") from e
+    return _REGISTRY[key]
+
+
+def list_archs() -> Sequence[str]:
+    for key in ASSIGNED_ARCHS + PAPER_ARCHS:
+        get_config(key)
+    return tuple(_REGISTRY)

@@ -1,0 +1,21 @@
+"""command-r-plus-104b [dense] — GQA, no-bias [hf:CohereForAI/c4ai-command-r-v01]."""
+from repro.configs.base import ATTN, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="command_r_plus_104b",
+    family="dense",
+    num_layers=64,
+    d_model=12288,
+    num_heads=96,
+    num_kv_heads=8,
+    d_ff=33792,
+    vocab_size=256000,
+    period=(ATTN,),
+    qkv_bias=False,
+    rope_theta=75_000_000.0,
+    tie_embeddings=True,
+    # >=100B on a 256-chip v5e pod: bf16 Adam moments (DESIGN.md §5)
+    optimizer="adamw_bf16",
+    microbatches=2,           # same trade as qwen1_5_110b (§Perf C)
+    source="[hf:CohereForAI/c4ai-command-r-v01]",
+))

@@ -1,0 +1,25 @@
+"""seamless-m4t-large-v2 [audio] — enc-dec, multimodal [arXiv:2308.11596].
+
+Backbone only: the mel-spectrogram + conformer feature extractor is the
+allowed stub — ``input_specs()`` supplies precomputed frame embeddings for
+the 24-layer text/unit encoder; the 24-layer decoder is fully implemented
+(self-attn with KV cache + cross-attn to encoder output).
+"""
+from repro.configs.base import ATTN, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="seamless_m4t_large_v2",
+    family="audio",
+    num_layers=24,                # decoder layers
+    encoder_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,
+    period=(ATTN,),
+    input_mode="encdec",
+    num_prefix_embeddings=1024,   # frame-embedding sequence length stub
+    mlp_gated=False,              # classic transformer FFN
+    source="[arXiv:2308.11596]",
+))

@@ -1,0 +1,15 @@
+# The paper's primary contribution: understanding + alleviating RLHF memory
+# consumption. Allocator simulator (allocator.py), jaxpr liveness tracer
+# (trace.py), RLHF phase plans (phases.py), memory-management strategies
+# (strategies.py), empty_cache-policy profiler (profiler.py).
+from repro.core.allocator import CachingAllocator
+from repro.core.phases import Phase, build_rlhf_phases
+from repro.core.profiler import POLICIES, RunResult, run_iteration
+from repro.core.strategies import (MemoryStrategy, PAPER_STRATEGIES,
+                                   lora_trainable_fraction)
+from repro.core.trace import Trace, trace_function
+
+__all__ = ["CachingAllocator", "Phase", "build_rlhf_phases", "POLICIES",
+           "RunResult", "run_iteration", "MemoryStrategy",
+           "PAPER_STRATEGIES", "lora_trainable_fraction", "Trace",
+           "trace_function"]

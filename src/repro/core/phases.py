@@ -1,0 +1,271 @@
+"""RLHF phase plans: the PPO iteration of DeepSpeed-Chat / ColossalChat as a
+sequence of traced phases (paper §2.1 / §3.1).
+
+One PPO iteration touches four models:
+
+  1. rollout      — actor prefill + N decode steps (experience generation)
+  2. score_reward — reward-model forward over the generated sequences
+  3. score_ref    — reference-model forward (KL logprobs)
+  4. score_values — critic forward (value estimates)
+  5. score_old    — actor forward (old logprobs)
+  6. train_actor  — PPO update (fwd+bwd+opt)
+  7. train_critic — value-function update
+
+Each phase is a jaxpr-derived event trace at the *paper's* scale (OPT-1.3b
+actor/ref + OPT-350m critic/reward, batch 2, prompt 256 + generate 256).
+``naive_generation`` models ColossalChat's original ``generate()`` (paper
+App. B): every decode step reallocates a grown KV cache instead of writing
+into a fixed-capacity one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.trace import Trace, trace_function
+from repro.models import Model
+from repro.steps import (init_train_state, make_decode_step,
+                         make_prefill_step, make_train_step)
+
+
+@dataclass
+class Phase:
+    name: str
+    kind: str                     # "inference" | "training"
+    trace: Trace
+    repeats: int = 1              # decode steps replay the same trace
+    model: str = "actor"          # which persistent model it touches
+    flops: float = 0.0            # analytic, for the time-overhead model
+    hbm_bytes: float = 0.0        # weight traffic (decode is BW-bound)
+    # phase outputs (experience / kv caches) stay live until the named
+    # phase completes — None frees them immediately
+    free_after: Optional[str] = None
+
+
+@dataclass
+class PersistentBuffers:
+    """Long-lived allocations (model weights, optimizer states) shared
+    across phases: name -> list[(nbytes, tag)]."""
+    buffers: Dict[str, List[Tuple[int, str]]] = field(default_factory=dict)
+
+
+def _batch_specs(cfg: ModelConfig, B: int, S: int, train: bool):
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if train:
+        for k in ("loss_mask", "advantages", "old_logp", "ref_logp",
+                  "returns"):
+            batch[k] = jax.ShapeDtypeStruct((B, S), jnp.float32)
+    return batch
+
+
+def _tags_for(tree, tag):
+    return jax.tree.map(lambda _: tag, tree)
+
+
+def _fwd_flops(cfg: ModelConfig, tokens: int) -> float:
+    return 2.0 * cfg.param_count() * tokens
+
+
+def build_rlhf_phases(actor_cfg: ModelConfig, critic_cfg: ModelConfig, *,
+                      batch: int = 2, prompt_len: int = 256,
+                      gen_len: int = 256, grad_ckpt: bool = False,
+                      naive_generation: bool = False,
+                      min_bytes: int = 64 * 1024,
+                      ppo_epochs: int = 1):
+    """Returns (phases, persistent buffers)."""
+    remat = "full" if grad_ckpt else "none"
+    # fp16/bf16 mixed precision as the paper's frameworks use; fused
+    # (flash) attention everywhere, as the 2023 frameworks' kernels did
+    from repro.models import layers as _L
+    _L.FLASH_MIN_ELEMS = 1 << 14
+    actor_cfg = dataclasses.replace(actor_cfg, remat=remat,
+                                    param_dtype="bfloat16")
+    critic_cfg = dataclasses.replace(critic_cfg, remat=remat,
+                                     param_dtype="bfloat16")
+    S = prompt_len + gen_len
+    actor = Model(actor_cfg)
+    critic = Model(critic_cfg, with_value=True)
+
+    a_params = jax.eval_shape(actor.init, jax.random.PRNGKey(0))
+    c_params = jax.eval_shape(critic.init, jax.random.PRNGKey(0))
+    a_step = make_train_step(actor, actor_cfg, kind="ppo")
+    c_step = make_train_step(critic, critic_cfg, kind="critic")
+    a_state = jax.eval_shape(
+        lambda k: init_train_state(actor, actor_cfg, k, a_step.optimizer),
+        jax.random.PRNGKey(0))
+    c_state = jax.eval_shape(
+        lambda k: init_train_state(critic, critic_cfg, k, c_step.optimizer),
+        jax.random.PRNGKey(0))
+
+    persistent = PersistentBuffers()
+
+    def add_persistent(name, tree, tag):
+        leaves = jax.tree.leaves(tree)
+        persistent.buffers[name] = [
+            (int(jnp.dtype(l.dtype).itemsize *
+                 __import__("numpy").prod(l.shape)), tag) for l in leaves]
+
+    add_persistent("actor_params", a_state["params"], "param")
+    add_persistent("actor_opt", a_state["opt"], "opt")
+    add_persistent("critic_params", c_state["params"], "param")
+    add_persistent("critic_opt", c_state["opt"], "opt")
+    add_persistent("ref_params", a_params, "param")     # frozen copy
+    add_persistent("reward_params", c_params, "param")  # frozen copy
+
+    phases: List[Phase] = []
+
+    # ---- rollout: prefill + gen_len decode steps --------------------------
+    cap = S
+    pf = make_prefill_step(actor, actor_cfg, capacity=cap)
+    pf_batch = _batch_specs(actor_cfg, batch, prompt_len, train=False)
+    tr_pf = trace_function(
+        pf, (a_params, pf_batch),
+        (_tags_for(a_params, "param"), _tags_for(pf_batch, "input")),
+        min_bytes=min_bytes)
+    a_bytes = actor_cfg.param_count() * 2
+    c_bytes = critic_cfg.param_count() * 2
+    phases.append(Phase("rollout_prefill", "inference", tr_pf,
+                        flops=_fwd_flops(actor_cfg, batch * prompt_len),
+                        hbm_bytes=a_bytes,
+                        free_after="rollout_decode"))
+
+    caches = jax.eval_shape(lambda: actor.init_cache(batch, cap, jnp.bfloat16))
+    caches_w = {"segments": caches, "cross_kv": None}
+    dec = make_decode_step(actor, actor_cfg)
+    tok = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    tr_dec = trace_function(
+        dec, (a_params, caches_w, tok, tok),
+        (_tags_for(a_params, "param"), _tags_for(caches_w, "cache"),
+         "input", "input"), min_bytes=min_bytes // 8)
+    if naive_generation:
+        # HF-style dynamic KV cache, as the paper's frameworks used at the
+        # time (DeepSpeed-Chat / ColossalChat generate(), paper App. B):
+        # every step, every layer does new_kv = cat(old_kv, kv_t) — the new
+        # (slightly larger) buffer is allocated while the old one is still
+        # live, so no cached block ever fits and reserved memory churns.
+        cache_bytes = sum(
+            int(jnp.dtype(l.dtype).itemsize * __import__("numpy").prod(l.shape))
+            for l in jax.tree.leaves(caches))
+        L = actor_cfg.num_layers
+        per_layer_tok = cache_bytes / (L * cap)     # bytes per layer per token
+        grow = Trace()
+        live = {}                                    # layer -> (vid, nb)
+        vid = iter(range(10_000_000, 10**9))
+        # decode-trace vids with no matching free (step outputs): free them
+        # at step end so the synthetic trace stays balanced
+        open_vids = {}
+        for op, v, b, tg in tr_dec.events:
+            if tg == "cache":
+                continue
+            if op == "alloc":
+                open_vids[v] = (b, tg)
+            else:
+                open_vids.pop(v, None)
+        for t in range(gen_len):
+            cur = prompt_len + t + 1
+            for l in range(L):
+                v = next(vid)
+                nb = int(per_layer_tok * cur)
+                grow.alloc(v, nb, "temp")            # cat() result
+                if l in live:
+                    grow.free(*live[l], "temp")
+                live[l] = (v, nb)
+            # per-step activation temps from the real decode trace
+            base = 500_000_000 + t * 200_000
+            for op, v, b, tg in tr_dec.events:
+                if tg == "cache":
+                    continue
+                (grow.alloc if op == "alloc" else grow.free)(base + v, b, tg)
+            for v, (b, tg) in open_vids.items():
+                grow.free(base + v, b, tg)
+        for l, (v, nb) in live.items():
+            grow.free(v, nb, "temp")
+        phases.append(Phase("rollout_decode", "inference", grow,
+                            flops=_fwd_flops(actor_cfg, batch * gen_len),
+                            hbm_bytes=a_bytes * gen_len))
+    else:
+        phases.append(Phase("rollout_decode", "inference", tr_dec,
+                            repeats=gen_len,
+                            flops=_fwd_flops(actor_cfg, batch * gen_len),
+                            hbm_bytes=a_bytes * gen_len))
+
+    # ---- scoring inferences ------------------------------------------------
+    full_batch = _batch_specs(actor_cfg, batch, S, train=False)
+
+    def fwd_trace(model, params, cfg, value=False):
+        fn = (lambda p, b: model.forward_value(p, b)) if value else \
+            (lambda p, b: model.forward(p, b)[0])
+        return trace_function(
+            fn, (params, full_batch),
+            (_tags_for(params, "param"), _tags_for(full_batch, "input")),
+            min_bytes=min_bytes)
+
+    phases.append(Phase("score_reward", "inference",
+                        fwd_trace(critic, c_params, critic_cfg, value=True),
+                        model="reward", hbm_bytes=c_bytes,
+                        flops=_fwd_flops(critic_cfg, batch * S),
+                        free_after="train_critic"))
+    phases.append(Phase("score_ref", "inference",
+                        fwd_trace(actor, a_params, actor_cfg), model="ref",
+                        flops=_fwd_flops(actor_cfg, batch * S),
+                        hbm_bytes=a_bytes, free_after="train_critic"))
+    phases.append(Phase("score_values", "inference",
+                        fwd_trace(critic, c_params, critic_cfg, value=True),
+                        model="critic", hbm_bytes=c_bytes,
+                        flops=_fwd_flops(critic_cfg, batch * S),
+                        free_after="train_critic"))
+    phases.append(Phase("score_old_logp", "inference",
+                        fwd_trace(actor, a_params, actor_cfg), model="actor",
+                        flops=_fwd_flops(actor_cfg, batch * S),
+                        hbm_bytes=a_bytes, free_after="train_critic"))
+
+    # ---- training ----------------------------------------------------------
+    tb = _batch_specs(actor_cfg, batch, S, train=True)
+    tr_actor = trace_function(
+        a_step, (a_state, tb),
+        ({"params": _tags_for(a_state["params"], "param"),
+          "opt": _tags_for(a_state["opt"], "opt"), "step": "opt"},
+         _tags_for(tb, "input")), min_bytes=min_bytes)
+    phases.append(Phase("train_actor", "training", tr_actor,
+                        repeats=ppo_epochs, hbm_bytes=3 * a_bytes,
+                        flops=3 * _fwd_flops(actor_cfg, batch * S)))
+    tr_critic = trace_function(
+        c_step, (c_state, tb),
+        ({"params": _tags_for(c_state["params"], "param"),
+          "opt": _tags_for(c_state["opt"], "opt"), "step": "opt"},
+         _tags_for(tb, "input")), min_bytes=min_bytes)
+    phases.append(Phase("train_critic", "training", tr_critic,
+                        repeats=ppo_epochs, model="critic",
+                        hbm_bytes=3 * c_bytes,
+                        flops=3 * _fwd_flops(critic_cfg, batch * S)))
+    return phases, persistent
+
+
+def build_grpo_phases(actor_cfg: ModelConfig, *, batch: int = 2,
+                      group_size: int = 8, prompt_len: int = 256,
+                      gen_len: int = 256, grad_ckpt: bool = False,
+                      naive_generation: bool = False,
+                      min_bytes: int = 64 * 1024):
+    """GRPO (beyond-paper ablation): two models only — actor + frozen
+    reference; no critic, no reward-value model, no value scoring phases.
+    The rollout batch is batch*group_size. Same trace machinery as PPO."""
+    ppo_phases, ppo_persist = build_rlhf_phases(
+        actor_cfg, actor_cfg, batch=batch * group_size,
+        prompt_len=prompt_len, gen_len=gen_len, grad_ckpt=grad_ckpt,
+        naive_generation=naive_generation, min_bytes=min_bytes)
+    keep = {"rollout_prefill", "rollout_decode", "score_ref",
+            "score_old_logp", "train_actor"}
+    phases = [p for p in ppo_phases if p.name in keep]
+    for p in phases:
+        if p.free_after == "train_critic":
+            p.free_after = "train_actor"
+    persistent = PersistentBuffers({
+        k: v for k, v in ppo_persist.buffers.items()
+        if k in ("actor_params", "actor_opt", "ref_params")})
+    return phases, persistent

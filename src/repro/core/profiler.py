@@ -1,0 +1,153 @@
+"""Memory profiler: replays RLHF phase traces through the caching-allocator
+simulator under a (strategy, empty_cache policy) pair and reports the
+paper's measurements — peak reserved / fragmentation / peak allocated,
+per-phase timelines (Figure 1), and the modelled end-to-end time.
+
+Realism notes (each maps to a paper observation):
+  * inference-phase outputs (experience tensors, KV caches) stay live until
+    the phase named by ``free_after`` completes — so training allocates on
+    top of partially-occupied segments, the paper's §3.1 mechanism;
+  * generation length varies per PPO iteration (sampling stops at EOS), so
+    successive iterations have *different* allocation patterns — the
+    "varying object sizes" of Appendix A;
+  * the time model is max(flops/rate, weight-bytes/bandwidth) per phase plus
+    cudaMalloc and empty_cache latencies — decode is bandwidth-bound.
+
+empty_cache policies (paper §3.3): none | after_inference | after_training |
+after_all.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.allocator import MB, CachingAllocator
+from repro.core.phases import PersistentBuffers, Phase
+from repro.core.strategies import MemoryStrategy
+
+POLICIES = ("none", "after_inference", "after_training", "after_all")
+
+# time model constants (documented in EXPERIMENTS.md §Paper-claims)
+_FLOPS_RATE = 60e12            # sustained bf16 FLOP/s per GPU (3090-class)
+_HBM_BW = 800e9                # B/s
+_CUDA_MALLOC_MS = 0.75         # cudaMalloc/cudaFree latency
+_EMPTY_CACHE_MS = 2.0          # empty_cache API call overhead
+
+
+@dataclass
+class PhaseRecord:
+    name: str
+    kind: str
+    reserved_end: int
+    allocated_end: int
+    peak_reserved: int
+    frag_end: int
+
+
+@dataclass
+class RunResult:
+    strategy: str
+    policy: str
+    peak_reserved: int
+    peak_allocated: int
+    frag_at_peak: int
+    max_frag: int
+    n_cuda_malloc: int
+    n_empty_cache: int
+    time_s: float
+    phase_records: List[PhaseRecord] = field(default_factory=list)
+    timeline: List[Tuple[int, int, int]] = field(default_factory=list)
+
+    def row(self) -> dict:
+        GB = 1 << 30
+        return {
+            "strategy": self.strategy, "policy": self.policy,
+            "reserved_gb": round(self.peak_reserved / GB, 2),
+            "frag_gb": round(self.frag_at_peak / GB, 2),
+            "allocated_gb": round(self.peak_allocated / GB, 2),
+            "time_s": round(self.time_s, 2),
+        }
+
+
+def _should_empty(policy: str, phase_kind: str) -> bool:
+    if policy == "after_all":
+        return True
+    if policy == "after_inference":
+        return phase_kind == "inference"
+    if policy == "after_training":
+        return phase_kind == "training"
+    return False
+
+
+def run_iteration(plans, persistent: PersistentBuffers,
+                  strategy: MemoryStrategy, policy: str = "none", *,
+                  ndp: int = 4, trainable_fraction: float = 1.0,
+                  capacity: int = 24 << 30,
+                  timeline: bool = False) -> RunResult:
+    """Replay PPO iterations. ``plans`` is a list of phase lists — one per
+    iteration (varying generation lengths) — or a single phase list.
+    ``capacity`` models the device HBM (24 GB RTX-3090 for Table 1,
+    80 GB A100 for Table 2)."""
+    if plans and isinstance(plans[0], Phase):
+        plans = [plans]
+    alloc = CachingAllocator(timeline=timeline, capacity=capacity)
+    scale = lambda tag: strategy.scale(tag, ndp=ndp,
+                                       trainable_fraction=trainable_fraction)
+
+    # persistent model/optimizer buffers live for the whole run
+    for name, bufs in persistent.buffers.items():
+        for nb, tag in bufs:
+            s = scale(tag)
+            if s > 0 and nb * s >= 4096:
+                alloc.malloc(int(nb * s))
+
+    total_time = 0.0
+    n_empty = 0
+    records: List[PhaseRecord] = []
+    for phases in plans:
+        deferred: Dict[str, List[int]] = {}
+        for ph in phases:
+            for rep in range(ph.repeats):
+                handle_map: Dict[int, int] = {}
+                for op, vid, nb, tag in ph.trace.events:
+                    size = int(nb * scale(tag))
+                    if size < 512:
+                        continue
+                    if op == "alloc":
+                        handle_map[vid] = alloc.malloc(size)
+                    else:
+                        h = handle_map.pop(vid, None)
+                        if h is not None:
+                            alloc.free(h)
+                leftovers = list(handle_map.values())
+                if ph.free_after and rep == ph.repeats - 1:
+                    deferred.setdefault(ph.free_after, []).extend(leftovers)
+                else:
+                    for h in leftovers:
+                        alloc.free(h)
+            # outputs scheduled to die after this phase
+            for h in deferred.pop(ph.name, []):
+                alloc.free(h)
+            total_time += max(ph.flops / _FLOPS_RATE,
+                              ph.hbm_bytes / _HBM_BW)
+            if _should_empty(policy, ph.kind):
+                alloc.empty_cache()
+                n_empty += 1
+            records.append(PhaseRecord(
+                ph.name, ph.kind, alloc.reserved, alloc.allocated,
+                alloc.stats.peak_reserved, alloc.fragmentation()))
+        # anything still deferred dies at iteration end
+        for hs in deferred.values():
+            for h in hs:
+                alloc.free(h)
+
+    st = alloc.stats
+    time_s = (total_time + st.n_cuda_malloc * _CUDA_MALLOC_MS / 1e3
+              + (n_empty + st.n_forced_flush) * _EMPTY_CACHE_MS / 1e3)
+    return RunResult(
+        strategy=strategy.name, policy=policy,
+        peak_reserved=st.peak_reserved, peak_allocated=st.peak_allocated,
+        frag_at_peak=st.frag_at_peak, max_frag=st.max_frag,
+        n_cuda_malloc=st.n_cuda_malloc, n_empty_cache=n_empty,
+        time_s=time_s, phase_records=records,
+        timeline=alloc.timeline if timeline else [])

@@ -1,0 +1,84 @@
+"""Memory-management strategies (paper §2.2) and how they scale the traced
+allocation events.
+
+The paper's experiment grid is DP over 4 GPUs (no TP), LoRA dim 128. Each
+strategy maps to per-tag size multipliers applied when a trace is replayed
+through the allocator simulator:
+
+  tag            None   ZeRO-1      ZeRO-2      ZeRO-3          offload
+  param          1      1           1           1/ndp           -
+  opt            1      1/ndp       1/ndp       1/ndp           0 (host)
+  grad           1      1           1/ndp       1/ndp           -
+  layer_slice    0      0           0           1 (gather temp) -
+  temp/input     1      1           1           1               -
+
+``layer_slice`` events are the per-layer parameter slices of the scan: with
+ZeRO-3 they are real transient buffers (the per-layer all-gather of the
+sharded weights — the varied-size churn the paper blames for fragmentation);
+without ZeRO-3 the layer weights are views into persistent storage, so the
+events vanish. Gradient checkpointing is not a multiplier — it swaps in the
+remat="full" trace of the same model (the liveness change emerges from the
+jaxpr, see core.trace).
+
+LoRA scales grad/opt by the trainable fraction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+
+@dataclass(frozen=True)
+class MemoryStrategy:
+    name: str
+    zero_stage: int = 0          # 0 = none
+    cpu_offload: bool = False
+    grad_ckpt: bool = False
+
+    def scale(self, tag: str, *, ndp: int, trainable_fraction: float = 1.0,
+              param_persistent: bool = True) -> float:
+        z = self.zero_stage
+        if tag == "param":
+            return 1.0 / ndp if z >= 3 else 1.0
+        if tag == "opt":
+            if self.cpu_offload:
+                return 0.0
+            base = 1.0 / ndp if z >= 1 else 1.0
+            return base * trainable_fraction
+        if tag == "grad":
+            base = 1.0 / ndp if z >= 2 else 1.0
+            return base * trainable_fraction
+        if tag == "layer_slice":
+            return 1.0 if z >= 3 else 0.0
+        if tag in ("input", "temp", "cache"):
+            return 1.0
+        return 1.0
+
+
+PAPER_STRATEGIES = (
+    MemoryStrategy("None"),
+    MemoryStrategy("ZeRO-1", zero_stage=1),
+    MemoryStrategy("ZeRO-2", zero_stage=2),
+    MemoryStrategy("ZeRO-3", zero_stage=3),
+    MemoryStrategy("ZeRO-3 + CPU Offloading", zero_stage=3, cpu_offload=True),
+    MemoryStrategy("Gradient Checkpointing", grad_ckpt=True),
+    MemoryStrategy("All Enabled", zero_stage=3, cpu_offload=True,
+                   grad_ckpt=True),
+)
+
+
+def lora_trainable_fraction(n_params: int, cfg, rank: int = 128) -> float:
+    """Approximate LoRA-r trainable fraction for a transformer config: every
+    2D projection W[d_in, d_out] adds r*(d_in+d_out) trainable params."""
+    if rank <= 0:
+        return 1.0
+    d, ff, L = cfg.d_model, max(cfg.d_ff, 1), cfg.num_layers
+    hd = cfg.resolved_head_dim()
+    per_layer = 0
+    per_layer += rank * (d + cfg.num_heads * hd)          # wq
+    per_layer += 2 * rank * (d + cfg.num_kv_heads * hd)   # wk, wv
+    per_layer += rank * (cfg.num_heads * hd + d)          # wo
+    n_mlp = 3 if cfg.mlp_gated else 2
+    per_layer += n_mlp * rank * (d + ff)
+    lora = per_layer * L
+    return min(1.0, lora / max(n_params, 1))

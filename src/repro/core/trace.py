@@ -1,0 +1,293 @@
+"""jaxpr liveness tracer: turns a real JAX computation into the alloc/free
+event stream that drives the allocator simulator.
+
+This is what makes the reproduction *trace-driven* rather than hard-coded
+(DESIGN.md §2): the memory behaviour of each RLHF phase — and the effect of
+each memory-management strategy — emerges from the actual jaxpr of our real
+models:
+
+  * sequential walk with last-use liveness (alloc outputs, free dead inputs);
+  * ``scan`` bodies are inlined ``length`` times — per-iteration xs slices
+    are *transient full-size* buffers while the stacked xs stay persistent,
+    which is exactly the ZeRO-3 per-layer all-gather churn the paper blames
+    for fragmentation;
+  * ``remat``/``checkpoint`` regions recurse, so gradient checkpointing's
+    liveness reduction emerges from the jaxpr, not from a model;
+  * inputs are tagged (param / opt / input / cache) so strategies can scale
+    persistent buffers (ZeRO sharding, CPU offload) without touching the
+    event structure; internal temps whose byte size matches a parameter leaf
+    are tagged ``grad`` (gradient buffers mirror parameter shapes).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.extend import core as jcore
+
+Event = Tuple[str, int, int, str]   # (op, vid, nbytes, tag)
+
+
+@dataclass
+class Trace:
+    events: List[Event] = field(default_factory=list)
+    n_vars: int = 0
+
+    def alloc(self, vid: int, nbytes: int, tag: str):
+        self.events.append(("alloc", vid, nbytes, tag))
+
+    def free(self, vid: int, nbytes: int, tag: str):
+        self.events.append(("free", vid, nbytes, tag))
+
+    def total_alloc_bytes(self) -> int:
+        return sum(e[2] for e in self.events if e[0] == "alloc")
+
+    def peak_live(self) -> int:
+        live = peak = 0
+        for op, _, b, _ in self.events:
+            live += b if op == "alloc" else -b
+            peak = max(peak, live)
+        return peak
+
+
+def _aval_bytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+_SUBJAXPR_PRIMS = ("pjit", "closed_call", "custom_jvp_call",
+                   "custom_vjp_call", "custom_vjp_call_jaxpr", "remat2",
+                   "checkpoint", "core_call", "xla_call")
+
+
+def _sub_jaxpr(eqn):
+    p = eqn.params
+    for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+        if key in p:
+            j = p[key]
+            return j.jaxpr if hasattr(j, "jaxpr") else j
+    return None
+
+
+class _Tracer:
+    def __init__(self, trace: Trace, min_bytes: int):
+        self.trace = trace
+        self.ids = itertools.count(1)
+        self.min_bytes = min_bytes
+
+    def run(self, jaxpr, invar_tags: Dict, skip_alloc_outvars=frozenset(),
+            param_sizes: Optional[set] = None):
+        """Emit events for one execution of `jaxpr`. invar_tags maps var ->
+        (vid, nbytes, tag, persistent: bool). Returns {outvar: entry}."""
+        env: Dict = dict(invar_tags)
+        param_sizes = param_sizes or set()
+
+        # liveness: last use index per var
+        last_use: Dict = {}
+        for i, eqn in enumerate(jaxpr.eqns):
+            for v in eqn.invars:
+                if isinstance(v, jcore.Var):
+                    last_use[v] = i
+        for v in jaxpr.outvars:
+            if isinstance(v, jcore.Var):
+                last_use[v] = len(jaxpr.eqns) + 1
+
+        def lookup(v):
+            if isinstance(v, jcore.Literal):
+                return None
+            return env.get(v)
+
+        def new_entry(v, tag="temp", persistent=False):
+            nb = _aval_bytes(v.aval)
+            if nb in param_sizes and tag == "temp":
+                tag = "grad"
+            vid = next(self.ids)
+            entry = (vid, nb, tag, persistent)
+            if not isinstance(v, jcore.Literal):
+                env[v] = entry
+            if nb >= self.min_bytes:
+                self.trace.alloc(vid, nb, tag)
+            return entry
+
+        def free_entry(entry):
+            vid, nb, tag, persistent = entry
+            if not persistent and nb >= self.min_bytes:
+                self.trace.free(vid, nb, tag)
+
+        for i, eqn in enumerate(jaxpr.eqns):
+            name = eqn.primitive.name
+            sub = _sub_jaxpr(eqn) if name in _SUBJAXPR_PRIMS else None
+            if name == "scan":
+                self._scan(eqn, env, lookup, new_entry, free_entry,
+                           param_sizes)
+            elif name == "while":
+                self._while(eqn, env, lookup, new_entry, free_entry,
+                            param_sizes)
+            elif sub is not None:
+                pairs = [(inner, lookup(outer))
+                         for outer, inner in zip(eqn.invars, sub.invars)]
+                out_env = self._call_sub(sub, pairs, param_sizes)
+                for outer, inner in zip(eqn.outvars, sub.outvars):
+                    e = out_env.get(inner)
+                    if e is None:
+                        e = new_entry(outer)
+                    else:
+                        env[outer] = e
+            else:
+                for v in eqn.outvars:
+                    if str(v) == "_" or v in skip_alloc_outvars:
+                        continue
+                    new_entry(v)
+            # free inputs that died at this eqn
+            for v in set(x for x in eqn.invars if isinstance(x, jcore.Var)):
+                if last_use.get(v) == i:
+                    e = env.pop(v, None)
+                    if e is not None:
+                        free_entry(e)
+
+        out = {}
+        for v in jaxpr.outvars:
+            if isinstance(v, jcore.Var) and v in env:
+                out[v] = env[v]
+        # free remaining non-output temps
+        outset = set(id(e) for e in out.values())
+        for v, e in list(env.items()):
+            if isinstance(v, jcore.Var) and id(e) not in outset and \
+                    last_use.get(v, 0) <= len(jaxpr.eqns):
+                pass  # already freed at last use
+        return out
+
+    def _call_sub(self, sub, pairs, param_sizes):
+        """Run a sub-jaxpr with *borrowed* caller entries (the callee never
+        frees them — the caller's liveness does). Returned outvar entries are
+        resolved back to the caller's originals."""
+        return self._call_sub_skip(sub, pairs, param_sizes, frozenset())
+
+    def _call_sub_skip(self, sub, pairs, param_sizes, skip_outvars):
+        orig_by_vid = {}
+        tags = {}
+        for inner, e in pairs:
+            if e is None:
+                continue
+            orig_by_vid[e[0]] = e
+            tags[inner] = (e[0], e[1], e[2], True)   # borrowed
+        out_env = self.run(sub, tags, skip_alloc_outvars=skip_outvars,
+                           param_sizes=param_sizes)
+        return {v: orig_by_vid.get(e[0], e) for v, e in out_env.items()}
+
+    # ------------------------------------------------------------------ scan
+    def _scan(self, eqn, env, lookup, new_entry, free_entry, param_sizes):
+        body = eqn.params["jaxpr"].jaxpr
+        length = eqn.params["length"]
+        n_consts = eqn.params["num_consts"]
+        n_carry = eqn.params["num_carry"]
+        consts = eqn.invars[:n_consts]
+        init = eqn.invars[n_consts:n_consts + n_carry]
+        xs = eqn.invars[n_consts + n_carry:]
+        carry_out = eqn.outvars[:n_carry]
+        ys = eqn.outvars[n_carry:]
+
+        # ys buffers are allocated up front and written in place
+        ys_entries = [new_entry(v, tag="temp") for v in ys]
+        carry_entries = [lookup(v) or new_entry(v) for v in init]
+
+        body_consts = body.invars[:n_consts]
+        body_carry = body.invars[n_consts:n_consts + n_carry]
+        body_xs = body.invars[n_consts + n_carry:]
+        body_out_carry = body.outvars[:n_carry]
+        body_out_ys = set(v for v in body.outvars[n_carry:]
+                          if isinstance(v, jcore.Var))
+
+        carry_owned = [False] * len(carry_entries)   # init carries: outer owns
+        reps = min(length, MAX_SCAN_REPS)
+        for it in range(reps):
+            pairs = []
+            for outer, inner in zip(consts, body_consts):
+                pairs.append((inner, lookup(outer)))
+            for e, inner in zip(carry_entries, body_carry):
+                pairs.append((inner, e))
+            # per-iteration xs slice: a transient buffer of the *sliced*
+            # size (under ZeRO-3 this is the gathered per-layer params)
+            slice_entries = []
+            for inner in body_xs:
+                vid = next(self.ids)
+                nb = _aval_bytes(inner.aval)
+                if nb >= self.min_bytes:
+                    self.trace.alloc(vid, nb, "layer_slice")
+                e = (vid, nb, "layer_slice", False)
+                pairs.append((inner, e))
+                slice_entries.append(e)
+            out_env = self._call_sub_skip(body, pairs, param_sizes,
+                                          body_out_ys)
+            known_vids = {e[0] for _, e in pairs if e is not None}
+            new_carries, new_owned = [], []
+            for inner in body_out_carry:
+                e = out_env.get(inner) if isinstance(inner, jcore.Var) else None
+                new_carries.append(e)
+                new_owned.append(e is not None and e[0] not in known_vids)
+            for old, owned, new in zip(carry_entries, carry_owned, new_carries):
+                if owned and old is not None and new is not None and \
+                        old[0] != new[0]:
+                    free_entry((old[0], old[1], old[2], False))
+            carry_entries = [n if n is not None else o
+                             for n, o in zip(new_carries, carry_entries)]
+            carry_owned = [nw or (n is None and ow) for n, nw, ow in
+                           zip(new_carries, new_owned, carry_owned)]
+            for e in slice_entries:
+                free_entry(e)
+        for outer, e, owned in zip(carry_out, carry_entries, carry_owned):
+            if e is not None:
+                # outer takes ownership of scan-created carries
+                env[outer] = (e[0], e[1], e[2], not owned)
+
+    # ----------------------------------------------------------------- while
+    def _while(self, eqn, env, lookup, new_entry, free_entry, param_sizes):
+        body = eqn.params["body_jaxpr"].jaxpr
+        n_b = eqn.params["body_nconsts"]
+        n_c = eqn.params["cond_nconsts"]
+        pairs = [(inner, lookup(outer))
+                 for outer, inner in zip(eqn.invars[n_c + n_b:],
+                                         body.invars[n_b:])]
+        self._call_sub(body, pairs, param_sizes)
+        for v in eqn.outvars:
+            new_entry(v)
+
+
+MAX_SCAN_REPS = 512
+
+
+def trace_function(fn, args, arg_tags, *, min_bytes: int = 64 * 1024,
+                   donate_tags: Sequence[str] = ()) -> Trace:
+    """Trace `fn(*args)`. ``arg_tags`` is a pytree (matching args) of
+    category strings for the persistent inputs: param | opt | input | cache.
+    Returns the alloc/free event stream (inputs emitted first as persistent
+    allocs, freed at the end unless persistent)."""
+    closed = jax.make_jaxpr(fn)(*args)
+    jaxpr = closed.jaxpr
+    flat_args, _ = jax.tree_util.tree_flatten(args)
+    flat_tags, _ = jax.tree_util.tree_flatten(arg_tags)
+    assert len(flat_args) == len(flat_tags), (len(flat_args), len(flat_tags))
+
+    trace = Trace()
+    tr = _Tracer(trace, min_bytes)
+    param_sizes = set()
+    for a, t in zip(flat_args, flat_tags):
+        if t == "param":
+            nb = int(np.prod(a.shape)) * np.dtype(a.dtype).itemsize
+            param_sizes.add(nb)
+            if np.dtype(a.dtype).itemsize == 2:
+                param_sizes.add(2 * nb)   # fp32 grad/update temps of the leaf
+
+    invar_tags = {}
+    for v, a, t in zip(jaxpr.invars, flat_args, flat_tags):
+        nb = _aval_bytes(v.aval)
+        vid = next(tr.ids)
+        invar_tags[v] = (vid, nb, t, True)   # persistent: allocator-external
+    tr.run(jaxpr, invar_tags, param_sizes=param_sizes)
+    trace.n_vars = next(tr.ids)
+    return trace

@@ -1,0 +1,7 @@
+from repro.data.tokenizer import ByteTokenizer
+from repro.data.datasets import (PromptDataset, SyntheticTextDataset,
+                                 synthetic_instruction_prompts)
+from repro.data.loader import Batcher
+
+__all__ = ["ByteTokenizer", "PromptDataset", "SyntheticTextDataset",
+           "synthetic_instruction_prompts", "Batcher"]

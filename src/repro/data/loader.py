@@ -1,0 +1,23 @@
+"""Device batcher: host numpy batches -> (sharded) jax arrays."""
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+
+class Batcher:
+    def __init__(self, it: Iterator[np.ndarray],
+                 sharding: Optional[jax.sharding.Sharding] = None):
+        self._it = it
+        self._sharding = sharding
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        batch = next(self._it)
+        if self._sharding is not None:
+            return jax.device_put(batch, self._sharding)
+        return jax.device_put(batch)

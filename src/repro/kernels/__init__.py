@@ -1,0 +1,9 @@
+# Pallas TPU kernels for the perf-critical compute layers, each with a
+# pure-jnp oracle in ref.py and a jit'd dispatch wrapper in ops.py:
+#   flash_attention  — training/prefill attention (online softmax, GQA)
+#   decode_attention — flash-decode over rolling KV caches (pos-masked)
+#   ssd_scan         — Mamba2 SSD chunk scan (sequential chunk grid axis)
+#   rmsnorm          — fused row norm
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel. Deliberately naive — these are
+the ground truth the kernels (and the XLA flash path) are validated against.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  q_offset: int = 0):
+    """q [B,Sq,H,D], k/v [B,Sk,K,Dv]; H % K == 0. fp32 softmax, dense."""
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg,
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    qi = jnp.arange(Sq)[:, None] + q_offset
+    kj = jnp.arange(k.shape[1])[None, :]
+    m = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        m = kj <= qi
+        if window:
+            m &= kj > qi - window
+    s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos, position, *,
+                         window: int = 0):
+    """One-token decode. q [B,H,D]; caches [B,C,K,D]; pos [B,C] absolute
+    positions (-1 empty); position [B] current."""
+    B, H, D = q.shape
+    K = k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bckd->bkgc", qg,
+                   k_cache.astype(jnp.float32)) / math.sqrt(D)
+    valid = (pos >= 0) & (pos <= position[:, None])
+    if window:
+        valid &= pos > (position[:, None] - window)
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgc,bckd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, v_cache.shape[-1]).astype(q.dtype)
+
+
+def ssd_ref(x, a, b, c, initial_state=None):
+    """Sequential (step-by-step) SSD recurrence — the strongest oracle.
+    x [B,S,H,P] (pre-multiplied by dt), a [B,S,H] (log-decay), b/c [B,S,N].
+    Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def step(state, xs):
+        xt, at, bt, ct = xs
+        dA = jnp.exp(at.astype(jnp.float32))            # [B,H]
+        upd = xt.astype(jnp.float32)[..., None] * bt[:, None, None, :]
+        state = state * dA[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, ct.astype(jnp.float32))
+        return state, y
+
+    xs = (x.transpose(1, 0, 2, 3), a.transpose(1, 0, 2),
+          b.transpose(1, 0, 2), c.transpose(1, 0, 2))
+    final, ys = jax.lax.scan(step, initial_state.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final.astype(x.dtype)
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)

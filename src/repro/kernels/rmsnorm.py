@@ -1,0 +1,44 @@
+"""Fused RMSNorm — Pallas TPU kernel (row blocks, fp32 reduction)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps)
+                  * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows",
+                                             "interpret"))
+def rmsnorm(x, scale, *, eps: float = 1e-5, block_rows: int = 256,
+            interpret: bool = True):
+    """x [..., D], scale [D]."""
+    orig_shape = x.shape
+    D = x.shape[-1]
+    rows = 1
+    for d in x.shape[:-1]:
+        rows *= d
+    xf = x.reshape(rows, D)
+    block_rows = min(block_rows, max(rows, 1))
+    pr = (-rows) % block_rows
+    xf = jnp.pad(xf, ((0, pr), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=((rows + pr) // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows + pr, D), x.dtype),
+        interpret=interpret,
+    )(xf, scale)
+    return out[:rows].reshape(orig_shape)

@@ -1,0 +1,229 @@
+"""Trip-count-aware analysis of optimized (post-SPMD, per-device) HLO text.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE, which
+under-reports looped work by the trip count (layers scan x microbatches).
+This module re-derives the roofline terms from the HLO text itself:
+
+  * a first pass builds a global symbol table %name -> result shape (this
+    dump format does not inline operand types);
+  * computations are parsed into blocks; while ops carry
+    ``known_trip_count`` in their backend_config — multipliers propagate
+    ENTRY -> called computations (body/cond x trip, fusions/calls x 1);
+  * flops: every ``dot`` contributes 2 * |result| * K (K = contracted dims
+    of the lhs operand, looked up in the symbol table) x multiplier;
+  * collective bytes per op type (all-gather / all-reduce / all-to-all /
+    collective-permute: result bytes; reduce-scatter: operand bytes);
+  * HBM-traffic proxy: op output bytes outside fusion bodies (+ fusion
+    operand bytes) x multiplier — an upper bound on bytes moved.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->")
+_OPCODE_RE = re.compile(r"\)?\s*([a-z][\w\-]*)\s*\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALL_SINGLE = re.compile(
+    r"(?:to_apply|condition|body|calls)=%([\w.\-]+)")
+_CALL_BRACED = re.compile(
+    r"(?:calls|branch_computations)=\{([^}]*)\}")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_COLLS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+          "collective-permute")
+
+# opcodes that imply real HBM traffic on TPU (elementwise chains fuse):
+_TRAFFIC_OPS = frozenset((
+    "fusion", "dot", "convolution", "reduce", "reduce-window", "scatter",
+    "gather", "dynamic-slice", "dynamic-update-slice", "copy", "transpose",
+    "concatenate", "pad", "slice", "reverse", "sort", "select-and-scatter",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+))
+
+
+def _shapes_bytes(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclass
+class OpInfo:
+    name: str
+    opcode: str
+    out_bytes: int
+    out_shapes: list
+    operand_names: List[str]
+    calls: List[str]
+    trip: int = 1
+    flops: float = 0.0
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[OpInfo] = field(default_factory=list)
+    is_entry: bool = False
+
+
+def parse_module(text: str):
+    comps: Dict[str, Computation] = {}
+    symbols: Dict[str, list] = {}          # name -> out shape list
+    cur: Optional[Computation] = None
+    entry = ""
+    for raw in text.splitlines():
+        s = raw.strip()
+        if not s:
+            continue
+        # computation headers sit at column 0 and end with "{" — param
+        # lists may contain nested parens (tuple types), so no paren regex
+        if (raw.startswith("%") or raw.startswith("ENTRY")) and \
+                s.endswith("{") and "->" in s:
+            is_entry = raw.startswith("ENTRY")
+            name = s.split("(", 1)[0].replace("ENTRY", "").strip().lstrip("%")
+            cur = Computation(name, is_entry=is_entry)
+            comps[name] = cur
+            if is_entry:
+                entry = name
+            continue
+        if s.startswith("}"):
+            cur = None
+            continue
+        dm = _DEF_RE.match(s)
+        if not dm or cur is None:
+            continue
+        name, rhs = dm.group(1), dm.group(2)
+        om = _OPCODE_RE.search(rhs)
+        if not om:
+            continue
+        opcode = om.group(1)
+        head = rhs[:om.start(1)]
+        out_shapes = _SHAPE_RE.findall(head)
+        symbols[name] = out_shapes
+        # operand names: inside the first (...) after the opcode
+        depth = 0
+        i = om.end(1)
+        start = rhs.find("(", i - 1)
+        j = start
+        while j < len(rhs):
+            if rhs[j] == "(":
+                depth += 1
+            elif rhs[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        operand_str = rhs[start + 1:j] if start >= 0 else ""
+        operands = _OPERAND_RE.findall(operand_str)
+        attrs = rhs[j + 1:] if j < len(rhs) else ""
+        calls = [m.group(1) for m in _CALL_SINGLE.finditer(attrs)]
+        for m in _CALL_BRACED.finditer(attrs):
+            for nm in m.group(1).split(","):
+                nm = nm.strip().lstrip("%")
+                if nm and nm not in calls:
+                    calls.append(nm)
+        trip = 1
+        tm = _TRIP.search(attrs)
+        if tm:
+            trip = int(tm.group(1))
+        op = OpInfo(name, opcode, _shapes_bytes(out_shapes), out_shapes,
+                    operands, calls, trip)
+        if opcode == "dot":
+            mm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", attrs)
+            op.flops = (mm, operands)      # resolved in second pass
+        cur.ops.append(op)
+    # second pass: resolve dot flops via the symbol table
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "dot" and isinstance(op.flops, tuple):
+                mm, operands = op.flops
+                op.flops = 0.0
+                if mm and operands:
+                    lhs = symbols.get(operands[0])
+                    if lhs:
+                        dims = [int(x) for x in lhs[0][1].split(",") if x]
+                        k = 1
+                        for d in (int(x) for x in mm.group(1).split(",") if x):
+                            if d < len(dims):
+                                k *= dims[d]
+                        out_elems = 1
+                        if op.out_shapes:
+                            for x in op.out_shapes[0][1].split(","):
+                                if x:
+                                    out_elems *= int(x)
+                        op.flops = 2.0 * out_elems * k
+    return comps, symbols, entry
+
+
+@dataclass
+class HLOSummary:
+    flops: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=dict)
+    hbm_bytes: float = 0.0
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+def analyze(text: str) -> HLOSummary:
+    comps, symbols, entry = parse_module(text)
+    if not entry and comps:
+        entry = max(comps, key=lambda k: len(comps[k].ops))
+    fused = set()
+    for c in comps.values():
+        for op in c.ops:
+            if op.opcode == "fusion":
+                fused.update(op.calls)
+    summary = HLOSummary()
+    stack = []
+
+    def operand_bytes(op: OpInfo) -> int:
+        return sum(_shapes_bytes(symbols.get(n, [])) for n in
+                   op.operand_names)
+
+    def visit(name: str, mult: float):
+        comp = comps.get(name)
+        if comp is None or name in stack:
+            return
+        stack.append(name)
+        in_fusion = name in fused
+        for op in comp.ops:
+            summary.flops += (op.flops or 0.0) * mult
+            base = op.opcode.replace("-start", "").replace("-done", "")
+            if base in _COLLS:
+                nb = op.out_bytes
+                if base == "reduce-scatter":
+                    ob = operand_bytes(op)
+                    nb = ob or nb
+                elif base == "all-reduce":
+                    nb *= 2      # ring cost: reduce-scatter + all-gather
+                summary.coll_bytes[base] = summary.coll_bytes.get(base, 0) \
+                    + nb * mult
+            if not in_fusion and op.opcode in _TRAFFIC_OPS:
+                nb = op.out_bytes
+                if op.opcode in ("fusion", "dot", "convolution"):
+                    nb += operand_bytes(op)
+                summary.hbm_bytes += nb * mult
+            child_mult = mult * (op.trip if op.opcode == "while" else 1)
+            for callee in op.calls:
+                visit(callee, child_mult)
+        stack.pop()
+
+    visit(entry, 1.0)
+    return summary

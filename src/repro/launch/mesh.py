@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing never touches jax
+device state. Single pod: 256 v5e chips as (data=16, model=16). Multi-pod:
+2 pods = 512 chips as (pod=2, data=16, model=16) — the pod axis carries
+pure data parallelism over DCN.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Degenerate 1-device mesh for CPU smoke runs."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# TPU v5e hardware constants for the roofline (per chip).
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW_PER_LINK = 50e9        # B/s per link (~45-50 GB/s on v5e)
+ICI_LINKS = 4                 # 2D torus on v5e: 4 links/chip
+DCN_BW = 25e9                 # B/s per host NIC (pod axis)

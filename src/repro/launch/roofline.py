@@ -1,0 +1,112 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline derivation per (arch x shape) on the single-pod mesh.
+
+Three terms (seconds, per step):
+  compute    = HLO flops (trip-count corrected) / (chips * 197 TF/s)
+  memory     = HLO byte-traffic proxy / (chips * 819 GB/s)
+  collective = per-type collective bytes / (chips * links * 50 GB/s)
+               (pod-axis DCN collectives would use 25 GB/s — single-pod here)
+
+MODEL_FLOPS = 6 * N_active * tokens (train; x1/3 for pure forward) gives the
+useful-work ratio. Emits JSON consumed by EXPERIMENTS.md §Roofline.
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline [--out roofline.json]
+"""
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config
+from repro.launch import hlo_analysis
+from repro.launch.dryrun import build_lowerable
+from repro.launch.mesh import (HBM_BW, ICI_BW_PER_LINK, ICI_LINKS,
+                               PEAK_FLOPS_BF16, make_production_mesh)
+
+CHIPS = 256
+
+
+def model_flops(cfg, shape) -> float:
+    n = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def analyze_one(arch: str, shape_name: str, mesh=None, strat=None) -> dict:
+    mesh = mesh or make_production_mesh()
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    fn, args, in_sh, out_sh, donate = build_lowerable(arch, shape_name, mesh,
+                                                      strat)
+    compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                       donate_argnums=donate).lower(*args).compile()
+    summ = hlo_analysis.analyze(compiled.as_text())
+    mem = compiled.memory_analysis()
+
+    # per-device quantities from the partitioned module
+    t_compute = summ.flops / PEAK_FLOPS_BF16
+    t_memory = summ.hbm_bytes / HBM_BW
+    t_coll = summ.total_collective_bytes / (ICI_BW_PER_LINK * ICI_LINKS)
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    hlo_global_flops = summ.flops * CHIPS
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "compute_s": round(t_compute, 4),
+        "memory_s": round(t_memory, 4),
+        "collective_s": round(t_coll, 4),
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global_flops,
+        "useful_ratio": round(mf / hlo_global_flops, 3)
+        if hlo_global_flops else None,
+        "collective_bytes_per_device": {k: int(v)
+                                        for k, v in summ.coll_bytes.items()},
+        "hbm_bytes_per_device": int(summ.hbm_bytes),
+        "device_mem_gib": round(
+            (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+             - mem.alias_size_in_bytes) / 2**30, 2),
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="roofline.json")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    args = ap.parse_args()
+    mesh = make_production_mesh()
+    combos = ([(args.arch, args.shape)] if args.arch else
+              [(a, s) for a in ASSIGNED_ARCHS for s in SHAPES])
+    records = []
+    for arch, shape in combos:
+        t0 = time.time()
+        try:
+            rec = analyze_one(arch, shape, mesh)
+            rec["analysis_s"] = round(time.time() - t0, 1)
+            print(f"[roofline] {arch:25s} {shape:12s} "
+                  f"C {rec['compute_s']:8.3f}s M {rec['memory_s']:8.3f}s "
+                  f"X {rec['collective_s']:8.3f}s -> {rec['dominant']:10s} "
+                  f"useful {rec['useful_ratio']}", flush=True)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape, "error": str(e)[:300]}
+            print(f"[roofline] {arch:25s} {shape:12s} FAIL {e}", flush=True)
+        records.append(rec)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

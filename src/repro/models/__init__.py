@@ -1,0 +1,3 @@
+from repro.models.transformer import Model, Segment, build_segments
+
+__all__ = ["Model", "Segment", "build_segments"]

@@ -1,0 +1,138 @@
+"""Memory-efficient (flash) attention in pure JAX with a custom VJP.
+
+Forward: online-softmax scan over KV chunks — never materializes the
+[Sq, Sk] score matrix; residuals are only (q, k, v, out, lse). Backward:
+recomputes scores chunk-by-chunk. fp32 accumulation throughout.
+
+This is the XLA-level twin of the Pallas TPU kernel in
+``repro.kernels.flash_attention`` (same blocking strategy; the kernel owns
+the VMEM tiling). The dry-run and CPU tests run this path; kernels/ tests
+assert both agree with the naive oracle.
+
+Masking is structural: ``causal`` and ``window`` (sliding) are static; the
+chunk loop uses absolute indices so padded KV positions are masked out.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _chunk_mask(q_idx, k_idx, causal: bool, window: int, kv_len: int):
+    """[Sq, Ck] bool validity. k_idx may exceed kv_len-1 (padding)."""
+    m = k_idx[None, :] < kv_len
+    if causal:
+        m &= k_idx[None, :] <= q_idx[:, None]
+        if window:
+            m &= k_idx[None, :] > q_idx[:, None] - window
+    return m
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_sdpa(q, k, v, causal: bool = True, window: int = 0,
+               chunk: int = 1024, q_offset: int = 0):
+    """q [B,Sq,H,D], k/v [B,Sk,K,Dk/Dv], H % K == 0. Returns [B,Sq,H,Dv]."""
+    out, _ = _flash_fwd_res(q, k, v, causal, window, chunk, q_offset)
+    return out
+
+
+def _pad_kv(k, v, chunk):
+    Sk = k.shape[1]
+    pad = (-Sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return k, v, Sk
+
+
+def _flash_fwd_res(q, k, v, causal, window, chunk, q_offset):
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    Dv = v.shape[-1]
+    G = H // K
+    scale = 1.0 / math.sqrt(D)
+    k, v, Sk = _pad_kv(k, v, chunk)
+    nc = k.shape[1] // chunk
+    qg = (q * scale).reshape(B, Sq, K, G, D)
+    q_idx = jnp.arange(Sq) + q_offset
+    kc = k.reshape(B, nc, chunk, K, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nc, chunk, K, Dv).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, xs):
+        acc, m, l = carry
+        kb, vb, ci = xs
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qg, kb).astype(jnp.float32)
+        k_idx = ci * chunk + jnp.arange(chunk)
+        mask = _chunk_mask(q_idx, k_idx, causal, window, Sk)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p.astype(vb.dtype), vb).astype(jnp.float32)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, Sq, K, G, Dv), jnp.float32)
+    m0 = jnp.full((B, Sq, K, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, K, G), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0),
+                                  (kc, vc, jnp.arange(nc)))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = (acc / l_safe[..., None]).reshape(B, Sq, H, Dv).astype(q.dtype)
+    lse = m + jnp.log(l_safe)                                   # [B,Sq,K,G]
+    return out, lse
+
+
+def _fwd(q, k, v, causal, window, chunk, q_offset):
+    out, lse = _flash_fwd_res(q, k, v, causal, window, chunk, q_offset)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd(causal, window, chunk, q_offset, res, dout):
+    q, k, v, out, lse = res
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    Dv = v.shape[-1]
+    G = H // K
+    scale = 1.0 / math.sqrt(D)
+    kp, vp, Sk = _pad_kv(k, v, chunk)
+    nc = kp.shape[1] // chunk
+    qg = (q * scale).reshape(B, Sq, K, G, D)
+    dog = dout.reshape(B, Sq, K, G, Dv)
+    og = out.reshape(B, Sq, K, G, Dv)
+    delta = jnp.sum(dog.astype(jnp.float32) * og.astype(jnp.float32), -1)
+    q_idx = jnp.arange(Sq) + q_offset
+    kc = kp.reshape(B, nc, chunk, K, D).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(B, nc, chunk, K, Dv).transpose(1, 0, 2, 3, 4)
+
+    def body(dq_acc, xs):
+        kb, vb, ci = xs
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qg, kb).astype(jnp.float32)
+        k_idx = ci * chunk + jnp.arange(chunk)
+        mask = _chunk_mask(q_idx, k_idx, causal, window, Sk)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                         # [B,q,K,G,c]
+        dv_b = jnp.einsum("bqkgc,bqkgd->bckd", p.astype(dout.dtype), dog)
+        dp = jnp.einsum("bqkgd,bckd->bqkgc", dog, vb).astype(jnp.float32)
+        ds = p * (dp - delta[..., None])                        # fp32
+        ds = ds.astype(q.dtype)
+        dq_b = jnp.einsum("bqkgc,bckd->bqkgd", ds, kb)
+        dk_b = jnp.einsum("bqkgc,bqkgd->bckd", ds, qg)
+        return dq_acc + dq_b.astype(jnp.float32), (dk_b, dv_b)
+
+    dq0 = jnp.zeros((B, Sq, K, G, D), jnp.float32)
+    dq, (dk_c, dv_c) = jax.lax.scan(body, dq0, (kc, vc, jnp.arange(nc)))
+    dq = (dq * scale).reshape(B, Sq, H, D).astype(q.dtype)
+    dk = dk_c.transpose(1, 0, 2, 3, 4).reshape(B, nc * chunk, K, D)[:, :Sk]
+    dv = dv_c.transpose(1, 0, 2, 3, 4).reshape(B, nc * chunk, K, Dv)[:, :Sk]
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_sdpa.defvjp(_fwd, _bwd)

@@ -1,0 +1,408 @@
+"""Core transformer layers: RMSNorm, RoPE, GQA attention (+QKV bias,
+sliding window, KV cache), DeepSeek MLA, and (gated) MLPs.
+
+All functions are pure; parameters are plain dicts of jnp arrays. Projection
+weights are stored with *fused* head dims (``[d_model, heads*head_dim]``) so
+that tensor-parallel sharding over the ``model`` mesh axis stays divisible
+even when the head count is not (e.g. granite's 24 heads on a 16-way axis) —
+see DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+
+
+def _init(key, shape, scale=0.02, dtype=jnp.float32):
+    return (scale * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def init_norm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rms_norm(x: jax.Array, params: dict, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (NeoX-style half rotation)
+# ---------------------------------------------------------------------------
+def rope_tables(positions: jax.Array, dim: int, theta: float):
+    """positions [..., S] -> (sin, cos) of shape [..., S, dim/2], fp32."""
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    angles = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x [B, S, H, D]; sin/cos [B, S, D/2]."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin[:, :, None, :]
+    cos = cos[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Masked softmax attention core (shared by full-seq and decode paths)
+# ---------------------------------------------------------------------------
+def sdpa(q, k, v, mask, use_kernel: bool = False):
+    """q [B,Sq,H,D], k/v [B,Sk,K,D] with H % K == 0; mask [B,1|H,Sq,Sk] bool.
+    Softmax in fp32. (Kernel routing happens in attn_core / decode paths,
+    where masks are structural.)"""
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    group = H // K
+    qg = q.reshape(B, Sq, K, group, D)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    logits = logits / math.sqrt(D)
+    m = mask[:, :, None] if mask.shape[1] == 1 else mask.reshape(B, K, group, Sq, -1)
+    logits = jnp.where(m, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, Sq, H, v.shape[-1])   # v head dim may differ (MLA)
+
+
+FLASH_MIN_ELEMS = 1 << 20   # use flash path when Sq*Sk exceeds this (mutable)
+
+
+def attn_core(q, k, v, *, causal: bool, window: int = 0,
+              use_kernel: bool = False):
+    """Structural-mask attention. ``use_kernel`` routes to the Pallas flash
+    kernel (interpret mode on CPU); otherwise large score matrices take the
+    XLA flash twin and small ones the dense softmax."""
+    Sq, Sk = q.shape[1], k.shape[1]
+    if use_kernel and Sq > 1:
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal, window=window)
+    if Sq > 1 and Sq * Sk >= FLASH_MIN_ELEMS:
+        from repro.models.flash import flash_sdpa
+        return flash_sdpa(q, k, v, causal, window, min(1024, max(Sk, 16)))
+    mask = causal_mask(Sq, Sk, window=window) if causal else \
+        jnp.ones((1, 1, Sq, Sk), bool)
+    mask = jnp.broadcast_to(mask, (q.shape[0], 1, Sq, Sk))
+    return sdpa(q, k, v, mask)
+
+
+def causal_mask(Sq: int, Sk: int, q_offset: int = 0, window: int = 0) -> jax.Array:
+    """[1, 1, Sq, Sk] causal (optionally sliding-window) mask."""
+    qi = jnp.arange(Sq)[:, None] + q_offset
+    kj = jnp.arange(Sk)[None, :]
+    m = kj <= qi
+    if window:
+        m &= kj > qi - window
+    return m[None, None]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig, dtype, cross: bool = False) -> dict:
+    d, h, kvh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim()
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _init(ks[0], (d, h * hd), dtype=dtype),
+        "wk": _init(ks[1], (d, kvh * hd), dtype=dtype),
+        "wv": _init(ks[2], (d, kvh * hd), dtype=dtype),
+        "wo": _init(ks[3], (h * hd, d), scale=0.02 / math.sqrt(2 * cfg.num_layers),
+                    dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kvh * hd,), dtype)
+        p["bv"] = jnp.zeros((kvh * hd,), dtype)
+    return p
+
+
+def _project_qkv(params, x, cfg: ModelConfig, kv_x=None):
+    B, S, _ = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim()
+    kv_x = x if kv_x is None else kv_x
+    Skv = kv_x.shape[1]
+    q = x @ params["wq"]
+    k = kv_x @ params["wk"]
+    v = kv_x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    return (q.reshape(B, S, h, hd), k.reshape(B, Skv, kvh, hd),
+            v.reshape(B, Skv, kvh, hd))
+
+
+def _fill_cache(init_cache, entries, positions):
+    """Write the last min(S, capacity) per-position entries into a rolling
+    cache. ``entries``: dict name -> [B,S,...] tensors; positions [B,S]."""
+    B, S = positions.shape
+    any_buf = next(iter(init_cache.values()))
+    cap = any_buf.shape[1]
+    n = min(S, cap)
+    slots = (positions[:, -n:] % cap).astype(jnp.int32)
+    bi = jnp.arange(B)[:, None]
+    new = {k: init_cache[k].at[bi, slots].set(v[:, -n:])
+           for k, v in entries.items()}
+    new["pos"] = init_cache["pos"].at[bi, slots].set(
+        positions[:, -n:].astype(jnp.int32))
+    return new
+
+
+def attention_fwd(params, x, positions, cfg: ModelConfig, *,
+                  window: int = 0, use_kernel: bool = False,
+                  init_cache: Optional[dict] = None):
+    """Full-sequence (train / prefill) self-attention. With ``init_cache``
+    also returns the filled rolling KV cache (single-pass prefill)."""
+    q, k, v = _project_qkv(params, x, cfg)
+    sin, cos = rope_tables(positions, cfg.resolved_head_dim(), cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    out = attn_core(q, k, v, causal=True, window=window,
+                    use_kernel=use_kernel)
+    out = out.reshape(x.shape[0], x.shape[1], -1) @ params["wo"]
+    if init_cache is None:
+        return out
+    return out, _fill_cache(init_cache, {"k": k, "v": v}, positions)
+
+
+def cross_attention_fwd(params, x, enc_kv, cfg: ModelConfig) -> jax.Array:
+    """Cross-attention: k/v precomputed from encoder output ([B,Se,K,hd] x2)."""
+    B, S, _ = x.shape
+    h, hd = cfg.num_heads, cfg.resolved_head_dim()
+    q = (x @ params["wq"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+    q = q.reshape(B, S, h, hd)
+    k, v = enc_kv
+    out = attn_core(q, k, v, causal=False)
+    return out.reshape(B, S, -1) @ params["wo"]
+
+
+def encode_cross_kv(params, enc_out, cfg: ModelConfig):
+    B, Se, _ = enc_out.shape
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim()
+    k = enc_out @ params["wk"]
+    v = enc_out @ params["wv"]
+    if cfg.qkv_bias:
+        k, v = k + params["bk"], v + params["bv"]
+    return k.reshape(B, Se, kvh, hd), v.reshape(B, Se, kvh, hd)
+
+
+# --- KV cache ---------------------------------------------------------------
+def init_kv_cache(cfg: ModelConfig, batch: int, capacity: int, dtype) -> dict:
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim()
+    return {
+        "k": jnp.zeros((batch, capacity, kvh, hd), dtype),
+        "v": jnp.zeros((batch, capacity, kvh, hd), dtype),
+        # absolute position stored in each slot; -1 = empty
+        "pos": jnp.full((batch, capacity), -1, jnp.int32),
+    }
+
+
+def attention_decode(params, x, position, cache, cfg: ModelConfig, *,
+                     window: int = 0, use_kernel: bool = False):
+    """One-token decode. x [B,1,D], position [B] absolute. Rolling buffer:
+    slot = position % capacity (capacity == window for the long-context
+    path). Returns (out [B,1,D], new_cache)."""
+    B = x.shape[0]
+    cap = cache["k"].shape[1]
+    q, k, v = _project_qkv(params, x, cfg)
+    sin, cos = rope_tables(position[:, None], cfg.resolved_head_dim(),
+                           cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    slot = (position % cap).astype(jnp.int32)
+    bidx = jnp.arange(B)
+    new_k = cache["k"].at[bidx, slot].set(k[:, 0])
+    new_v = cache["v"].at[bidx, slot].set(v[:, 0])
+    new_pos = cache["pos"].at[bidx, slot].set(position.astype(jnp.int32))
+    if use_kernel:
+        # Pallas flash-decode kernel: data-driven masking from the cache's
+        # per-slot positions (rolling buffer + window handled in-kernel)
+        from repro.kernels import ops as kops
+        out = kops.decode_attention(q[:, 0], new_k, new_v, new_pos, position,
+                                    window=window)[:, None]
+    else:
+        valid = new_pos >= 0
+        valid &= new_pos <= position[:, None]
+        if window:
+            valid &= new_pos > (position[:, None] - window)
+        mask = valid[:, None, None, :]  # [B,1,1,cap]
+        out = sdpa(q, new_k, new_v, mask)
+    out = out.reshape(B, 1, -1) @ params["wo"]
+    return out, {"k": new_k, "v": new_v, "pos": new_pos}
+
+
+# ---------------------------------------------------------------------------
+# DeepSeek-V3 Multi-head Latent Attention (MLA)
+# ---------------------------------------------------------------------------
+def init_mla(key, cfg: ModelConfig, dtype) -> dict:
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "q_down": _init(ks[0], (d, m.q_lora_rank), dtype=dtype),
+        "q_norm": init_norm(m.q_lora_rank, dtype),
+        "q_up": _init(ks[1], (m.q_lora_rank, h * qk_hd), dtype=dtype),
+        "kv_down": _init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), dtype=dtype),
+        "kv_norm": init_norm(m.kv_lora_rank, dtype),
+        "kv_up": _init(ks[3], (m.kv_lora_rank, h * (m.qk_nope_head_dim + m.v_head_dim)),
+                       dtype=dtype),
+        "wo": _init(ks[4], (h * m.v_head_dim, d),
+                    scale=0.02 / math.sqrt(2 * cfg.num_layers), dtype=dtype),
+    }
+
+
+def _mla_q(params, x, positions, cfg):
+    m: MLAConfig = cfg.mla
+    B, S, _ = x.shape
+    h = cfg.num_heads
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ql = rms_norm(x @ params["q_down"], params["q_norm"], cfg.norm_eps)
+    q = (ql @ params["q_up"]).reshape(B, S, h, qk_hd)
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    sin, cos = rope_tables(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, sin, cos)
+    return q_nope, q_rope
+
+
+def _mla_kv_from_latent(params, c_kv, cfg):
+    """Expand latent [B,S,r] into per-head K_nope and V."""
+    m: MLAConfig = cfg.mla
+    B, S, _ = c_kv.shape
+    h = cfg.num_heads
+    kv = (c_kv @ params["kv_up"]).reshape(B, S, h, m.qk_nope_head_dim + m.v_head_dim)
+    return kv[..., :m.qk_nope_head_dim], kv[..., m.qk_nope_head_dim:]
+
+
+def mla_fwd(params, x, positions, cfg: ModelConfig, *, window: int = 0,
+            init_cache: Optional[dict] = None):
+    m: MLAConfig = cfg.mla
+    B, S, _ = x.shape
+    q_nope, q_rope = _mla_q(params, x, positions, cfg)
+    down = x @ params["kv_down"]
+    c_kv = rms_norm(down[..., :m.kv_lora_rank], params["kv_norm"], cfg.norm_eps)
+    k_rope = down[..., m.kv_lora_rank:][:, :, None, :]  # single shared rope head
+    sin, cos = rope_tables(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    k_rope = apply_rope(k_rope, sin, cos)
+    k_nope, v = _mla_kv_from_latent(params, c_kv, cfg)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:3] + (m.qk_rope_head_dim,))], -1)
+    out = attn_core(q, k, v, causal=True, window=window)
+    out = out.reshape(B, S, -1) @ params["wo"]
+    if init_cache is None:
+        return out
+    filled = _fill_cache(init_cache, {"c_kv": c_kv, "k_rope": k_rope[:, :, 0]},
+                         positions)
+    return out, filled
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, capacity: int, dtype) -> dict:
+    m: MLAConfig = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, capacity, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, capacity, m.qk_rope_head_dim), dtype),
+        "pos": jnp.full((batch, capacity), -1, jnp.int32),
+    }
+
+
+def mla_decode(params, x, position, cache, cfg: ModelConfig, *,
+               window: int = 0, absorbed: bool = True):
+    """MLA decode: the cache stores only the compressed latent + rope key —
+    the paper-relevant memory saving (kv_lora_rank + rope_dim per token
+    instead of 2*H*hd).
+
+    ``absorbed=True`` (default, §Perf hillclimb B): attention runs *in the
+    latent space* — q_nope is absorbed through kv_up's K half and the
+    context is re-expanded through its V half only once per step, so the
+    cache is never expanded to per-head K/V. Per-step matmul flops drop
+    from O(cap * r * H * (nope+v)) to O(cap * r * H), ~128x for
+    DeepSeek-V3 (identical math; validated against absorbed=False in
+    tests)."""
+    m: MLAConfig = cfg.mla
+    B = x.shape[0]
+    H = cfg.num_heads
+    cap = cache["c_kv"].shape[1]
+    q_nope, q_rope = _mla_q(params, x, position[:, None], cfg)
+    down = x @ params["kv_down"]
+    c_kv_t = rms_norm(down[..., :m.kv_lora_rank], params["kv_norm"], cfg.norm_eps)
+    k_rope_t = down[..., m.kv_lora_rank:][:, :, None, :]
+    sin, cos = rope_tables(position[:, None], m.qk_rope_head_dim, cfg.rope_theta)
+    k_rope_t = apply_rope(k_rope_t, sin, cos)
+    slot = (position % cap).astype(jnp.int32)
+    bidx = jnp.arange(B)
+    new_ckv = cache["c_kv"].at[bidx, slot].set(c_kv_t[:, 0])
+    new_krope = cache["k_rope"].at[bidx, slot].set(k_rope_t[:, 0, 0])
+    new_pos = cache["pos"].at[bidx, slot].set(position.astype(jnp.int32))
+    valid = (new_pos >= 0) & (new_pos <= position[:, None])
+    if window:
+        valid &= new_pos > (position[:, None] - window)
+    new_cache = {"c_kv": new_ckv, "k_rope": new_krope, "pos": new_pos}
+
+    if not absorbed:
+        k_nope, v = _mla_kv_from_latent(params, new_ckv, cfg)   # [B,cap,H,*]
+        k = jnp.concatenate([
+            k_nope,
+            jnp.broadcast_to(new_krope[:, :, None, :],
+                             k_nope.shape[:3] + (m.qk_rope_head_dim,)),
+        ], -1)
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        out = sdpa(q, k, v, valid[:, None, None, :])
+        out = out.reshape(B, 1, -1) @ params["wo"]
+        return out, new_cache
+
+    kv_up = params["kv_up"].reshape(m.kv_lora_rank, H,
+                                    m.qk_nope_head_dim + m.v_head_dim)
+    w_uk = kv_up[..., :m.qk_nope_head_dim]             # [r, H, nope]
+    w_uv = kv_up[..., m.qk_nope_head_dim:]             # [r, H, v]
+    # absorb q through the K-expansion: scores live in latent space
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0], w_uk)
+    s = jnp.einsum("bhr,bcr->bhc", q_lat.astype(jnp.float32),
+                   new_ckv.astype(jnp.float32))
+    s = s + jnp.einsum("bhp,bcp->bhc", q_rope[:, 0].astype(jnp.float32),
+                       new_krope.astype(jnp.float32))
+    s = s / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bhc,bcr->bhr", p.astype(new_ckv.dtype), new_ckv)
+    out = jnp.einsum("bhr,rhv->bhv", ctx_lat, w_uv)    # [B, H, v]
+    out = out.reshape(B, 1, H * m.v_head_dim) @ params["wo"]
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def init_mlp(key, d: int, d_ff: int, gated: bool, num_layers: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": _init(ks[0], (d, d_ff), dtype=dtype),
+        "w_out": _init(ks[1], (d_ff, d), scale=0.02 / math.sqrt(2 * num_layers),
+                       dtype=dtype),
+    }
+    if gated:
+        p["w_gate"] = _init(ks[2], (d, d_ff), dtype=dtype)
+    return p
+
+
+def mlp_fwd(params, x, gated: bool) -> jax.Array:
+    h = x @ params["w_in"]
+    if gated:
+        h = jax.nn.silu(x @ params["w_gate"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ params["w_out"]

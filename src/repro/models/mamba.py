@@ -1,0 +1,191 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block in pure JAX.
+
+Full-sequence path uses the chunked SSD algorithm (quadratic within a chunk
+on the MXU, linear across chunks); decode is the O(1)-state recurrence. The
+chunk-scan hot loop also exists as a Pallas TPU kernel
+(repro.kernels.ssd_scan) validated against :func:`ssd_chunked` here.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.layers import _init, rms_norm
+from repro.sharding import ctx
+
+
+def segsum(x: jax.Array) -> jax.Array:
+    """x [..., L] -> [..., L, L] where out[i,j] = sum_{j<k<=i} x[k], -inf above
+    the diagonal (diagonal itself is 0)."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, a, b, c, chunk: int,
+                initial_state: Optional[jax.Array] = None,
+                use_kernel: bool = False):
+    """Chunked SSD.
+
+    x [B,S,H,P] (pre-multiplied by dt), a [B,S,H] (= dt * A, log-decay
+    increments, <= 0), b/c [B,S,N] (single group shared across heads).
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.ssd_scan(x, a, b, c, chunk, initial_state)
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    xc = x.reshape(B, nc, chunk, H, P)
+    bc = b.reshape(B, nc, chunk, N)
+    cc = c.reshape(B, nc, chunk, N)
+    ac = a.reshape(B, nc, chunk, H).transpose(0, 3, 1, 2)     # [B,H,nc,L]
+    ac = ac.astype(jnp.float32)
+    a_cum = jnp.cumsum(ac, axis=-1)
+
+    # 1. intra-chunk (diagonal blocks)
+    L = jnp.exp(segsum(ac))                                    # [B,H,nc,l,l]
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp",
+                        cc, bc, L.astype(x.dtype), xc)
+
+    # 2. per-chunk final states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)            # [B,H,nc,l]
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn",
+                        bc, decay_states.astype(x.dtype), xc)
+
+    # 3. inter-chunk recurrence (matmul form over the chunk axis)
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, P, N), x.dtype)
+    chunk_decay = a_cum[..., -1]                               # [B,H,nc]
+    padded = jnp.pad(chunk_decay, ((0, 0), (0, 0), (1, 0)))
+    decay_chunk = jnp.exp(segsum(padded))                      # [B,H,nc+1,nc+1]
+    states_cat = jnp.concatenate([initial_state[:, None], states], axis=1)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn",
+                            decay_chunk.astype(x.dtype), states_cat)
+    prev_states, final_state = new_states[:, :-1], new_states[:, -1]
+
+    # 4. state -> output within each chunk
+    state_decay_out = jnp.exp(a_cum)                           # [B,H,nc,l]
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp",
+                       cc, prev_states, state_decay_out.astype(x.dtype))
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    return y, final_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+def init_mamba(key, cfg: ModelConfig, dtype) -> dict:
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    conv_dim = di + 2 * s.d_state
+    ks = jax.random.split(key, 4)
+    dt = jnp.exp(jax.random.uniform(ks[2], (nh,)) *
+                 (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+    return {
+        "in_proj": _init(ks[0], (d, 2 * di + 2 * s.d_state + nh), dtype=dtype),
+        "conv_w": _init(ks[1], (s.d_conv, conv_dim), scale=0.2, dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": _init(ks[3], (di, d),
+                          scale=0.02 / math.sqrt(2 * cfg.num_layers), dtype=dtype),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, bias: jax.Array,
+                 prepend: Optional[jax.Array] = None):
+    """Depthwise causal conv. xbc [B,S,C], w [W,C]. Returns (y, tail) where
+    tail is the last W-1 inputs (the decode conv state)."""
+    W = w.shape[0]
+    if prepend is None:
+        prepend = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[2]), xbc.dtype)
+    full = jnp.concatenate([prepend, xbc], axis=1)             # [B,S+W-1,C]
+    y = sum(full[:, i:i + xbc.shape[1]] * w[i] for i in range(W))
+    tail = full[:, -(W - 1):] if W > 1 else full[:, :0]
+    return y + bias, tail
+
+
+def _split_zxbcdt(z_xbc_dt, di: int, n: int, nh: int):
+    z = z_xbc_dt[..., :di]
+    xbc = z_xbc_dt[..., di:2 * di + 2 * n]
+    dt = z_xbc_dt[..., 2 * di + 2 * n:]
+    return z, xbc, dt
+
+
+def mamba_fwd(params, x, cfg: ModelConfig, *, return_state: bool = False,
+              use_kernel: bool = False):
+    """Full-sequence forward. x [B,S,D] -> y [B,S,D] (and optionally the
+    decode cache {conv_state, ssm_state})."""
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    di, n, nh, p = s.d_inner(d), s.d_state, s.n_heads(d), s.head_dim
+    B, S, _ = x.shape
+    z, xbc, dt = _split_zxbcdt(x @ params["in_proj"], di, n, nh)
+    xbc, conv_tail = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :di].reshape(B, S, nh, p)
+    xs = ctx.constrain(xs, "dp", None, "model", None)   # heads over TP
+    b_mat = xbc[..., di:di + n]
+    c_mat = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                              # [nh]
+    y, final_state = ssd_chunked(
+        xs * dt.astype(xs.dtype)[..., None], dt * A, b_mat, c_mat,
+        min(s.chunk_size, S), use_kernel=use_kernel)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xs
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z), {"scale": params["norm"]}, cfg.norm_eps)
+    out = y @ params["out_proj"]
+    if return_state:
+        return out, {"conv_state": conv_tail, "ssm_state": final_state}
+    return out
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    di, n, nh, p = s.d_inner(d), s.d_state, s.n_heads(d), s.head_dim
+    return {
+        "conv_state": jnp.zeros((batch, s.d_conv - 1, di + 2 * n), dtype),
+        "ssm_state": jnp.zeros((batch, nh, p, n), dtype),
+    }
+
+
+def mamba_decode(params, x, cache, cfg: ModelConfig):
+    """One-token recurrent step. x [B,1,D] -> (y [B,1,D], new_cache)."""
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    di, n, nh, p = s.d_inner(d), s.d_state, s.n_heads(d), s.head_dim
+    B = x.shape[0]
+    z, xbc_t, dt = _split_zxbcdt(x[:, 0] @ params["in_proj"], di, n, nh)
+    window = jnp.concatenate([cache["conv_state"], xbc_t[:, None]], axis=1)
+    conv = jnp.einsum("bwc,wc->bc", window, params["conv_w"]) + params["conv_b"]
+    conv = jax.nn.silu(conv)
+    new_conv_state = window[:, 1:]
+    xs = conv[..., :di].reshape(B, nh, p)
+    b_vec = conv[..., di:di + n]
+    c_vec = conv[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # [B,nh]
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A)                                        # [B,nh]
+    upd = (dt.astype(xs.dtype)[..., None] * xs)[..., None] * b_vec[:, None, None, :]
+    new_state = cache["ssm_state"] * dA[..., None, None].astype(xs.dtype) + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, c_vec)
+    y = y + params["D"].astype(y.dtype)[None, :, None] * xs
+    y = y.reshape(B, di)
+    y = rms_norm(y * jax.nn.silu(z), {"scale": params["norm"]}, cfg.norm_eps)
+    out = (y @ params["out_proj"])[:, None]
+    return out, {"conv_state": new_conv_state, "ssm_state": new_state}

@@ -1,0 +1,157 @@
+"""Mixture-of-Experts FFN with shard-local sort-based dispatch.
+
+TPU-native adaptation (DESIGN.md §2): a GShard one-hot dispatch tensor is
+O(T*E*C); a *global* sort/gather forces XLA to all-gather every token to
+every device. Instead we expose the data-parallel sharding to the routing
+math: tokens [T, D] are viewed as [n_dp_shards, T_local, D] (the leading
+axis laid out on the dp mesh axes), routing/sort/scatter are vmapped over
+that axis so they stay shard-local, and the only cross-device movement is
+the (dp-sharded tokens) -> (model-sharded experts) all-to-all implied by the
+expert matmul sharding. Experts run as one batched MXU matmul
+[s, E, C_local, D] x [E, D, F].
+
+Capacity dropping is per shard: C_local = ceil(T_local * k / E * cf).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.layers import _init, init_mlp, mlp_fwd
+from repro.sharding import ctx
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    e: MoEConfig = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _init(ks[0], (d, e.num_experts), scale=0.02, dtype=jnp.float32),
+        "w_in": _init(ks[1], (e.num_experts, d, e.d_expert), dtype=dtype),
+        "w_gate": _init(ks[2], (e.num_experts, d, e.d_expert), dtype=dtype),
+        "w_out": _init(ks[3], (e.num_experts, e.d_expert, d),
+                       scale=0.02 / math.sqrt(2 * cfg.num_layers), dtype=dtype),
+    }
+    if e.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, e.num_shared_experts * e.d_expert,
+                               True, cfg.num_layers, dtype)
+    return p
+
+
+def router_topk(logits: jax.Array, k: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """logits [T, E] fp32 -> (gates [T,k], idx [T,k], aux_loss scalar)."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * sum_e fraction_e * prob_e
+    E = logits.shape[-1]
+    me = probs.mean(0)                                       # mean prob per expert
+    ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    ce = ce / idx.size
+    aux = E * jnp.sum(me * ce)
+    return gates, idx, aux
+
+
+def _num_dp_shards(T: int) -> int:
+    mesh = ctx.current_mesh()
+    if mesh is None:
+        return 1
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n if (n > 1 and T % n == 0) else 1
+
+
+def _route_local(xf, router_w, k: int, C: int):
+    """Shard-local routing. xf [Tl, D] -> (gathered [E*C+1 rows worth of
+    indices], ...). Returns (dest [Tl*k], src_token [Tl*k], gate [Tl*k],
+    keep [Tl*k], aux)."""
+    E = router_w.shape[-1]
+    logits = xf.astype(jnp.float32) @ router_w
+    gates, idx, aux = router_topk(logits, k)
+    Tl = xf.shape[0]
+    token_idx = jnp.repeat(jnp.arange(Tl), k)
+    expert_idx = idx.reshape(-1)
+    gate_flat = gates.reshape(-1)
+    order = jnp.argsort(expert_idx)
+    sorted_expert = expert_idx[order]
+    sorted_token = token_idx[order]
+    sorted_gate = gate_flat[order]
+    counts = jnp.zeros((E,), jnp.int32).at[expert_idx].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(Tl * k) - starts[sorted_expert]
+    keep = pos < C
+    dest = jnp.where(keep, sorted_expert * C + pos, E * C)   # OOB rows dropped
+    return dest, sorted_token, sorted_gate, keep, aux
+
+
+def moe_fwd(params, x, cfg: ModelConfig, *,
+            capacity_factor: Optional[float] = None):
+    """x [B, S, D] -> (y [B, S, D], aux_loss).
+
+    Uses the shard_map expert-parallel path (explicit all-to-all) whenever
+    the token grid tiles the mesh; falls back to the single-shard sort-based
+    dispatch for small/decode shapes and meshless CPU runs."""
+    e: MoEConfig = cfg.moe
+    if capacity_factor is None:
+        capacity_factor = e.capacity_factor
+    B, S, D = x.shape
+    from repro.models import moe_shard_map as msm
+    if msm.usable(cfg, B, S):
+        y, aux = msm.moe_fwd_shard_map(params, x, cfg,
+                                       capacity_factor=capacity_factor)
+        if e.num_shared_experts:
+            y = y + mlp_fwd(params["shared"], x, True)
+        return y, aux
+    T = B * S
+    ndp = _num_dp_shards(T)
+    Tl = T // ndp
+    k, E = e.top_k, e.num_experts
+    C = int(math.ceil(Tl * k / E * capacity_factor))
+    C = max(4, -(-C // 4) * 4)
+
+    xs = x.reshape(ndp, Tl, D)
+    xs = ctx.constrain(xs, "dp", None, None)
+    dest, src, gate, keep, aux = jax.vmap(
+        lambda xf: _route_local(xf, params["router"], k, C))(xs)
+
+    sidx = jnp.arange(ndp)[:, None]
+    # dispatch: batched gather, row dim sharded over model (rows are
+    # expert-sorted, so this pre-stages the all-to-all locality)
+    xk = jnp.take_along_axis(xs, src[..., None], axis=1)     # [s, Tl*k, D]
+    xk = ctx.constrain(xk, "dp", None, None)
+    gathered = jnp.zeros((ndp, E * C, D), x.dtype).at[
+        sidx, dest].set(xk, mode="drop")
+    ge = gathered.reshape(ndp, E, C, D)
+    # dp-sharded on s; expert-parallel on E when divisible (else C over model)
+    if _expert_parallel_ok(E):
+        ge = ctx.constrain(ge, "dp", "model", None, None)
+    else:
+        ge = ctx.constrain(ge, "dp", None, "model", None)
+    h = jnp.einsum("secd,edf->secf", ge, params["w_in"])
+    g = jnp.einsum("secd,edf->secf", ge, params["w_gate"])
+    out_e = jnp.einsum("secf,efd->secd", jax.nn.silu(g) * h, params["w_out"])
+    out_rows = out_e.reshape(ndp, E * C, D)
+
+    contrib = jnp.take_along_axis(
+        out_rows, jnp.minimum(dest, E * C - 1)[..., None], axis=1)
+    contrib = ctx.constrain(contrib, "dp", None, None)
+    contrib = contrib * (gate * keep).astype(x.dtype)[..., None]
+    y = jnp.zeros((ndp, Tl, D), x.dtype).at[sidx, src].add(contrib)
+    y = ctx.constrain(y, "dp", None, None).reshape(B, S, D)
+
+    if e.num_shared_experts:
+        y = y + mlp_fwd(params["shared"], x, True)
+    return y, aux.mean() * e.router_aux_coef
+
+
+def _expert_parallel_ok(E: int) -> bool:
+    mesh = ctx.current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return False
+    return E % mesh.shape["model"] == 0

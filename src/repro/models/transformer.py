@@ -1,0 +1,431 @@
+"""Composable decoder (and encoder-decoder) LM over the layer-kind zoo.
+
+A network is a list of *segments*; each segment is ``n_groups`` repetitions
+of a layer *period* (e.g. Jamba's ``(M,M,M,M,A,M,M,M)``), scanned with
+``jax.lax.scan`` over stacked parameters so the HLO stays small even for
+80-layer models. ``first_k_dense`` (DeepSeek) becomes its own leading
+segment. Supports forward (train), prefill (build caches) and one-token
+decode, with full / sliding-window attention, MoE FFNs, MLA, Mamba2 and
+cross-attention for enc-dec models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, MAMBA, MLA, ModelConfig
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.sharding import ctx
+
+
+@dataclass(frozen=True)
+class Segment:
+    kinds: Tuple[str, ...]
+    moe_flags: Tuple[bool, ...]
+    n_groups: int
+
+
+def build_segments(cfg: ModelConfig) -> List[Segment]:
+    per = len(cfg.period)
+    segs: List[Segment] = []
+    k = cfg.first_k_dense
+    if k:
+        assert k % per == 0, (cfg.name, k, per)
+        segs.append(Segment(cfg.period, (False,) * per, k // per))
+    rest = cfg.num_layers - k
+    assert rest % per == 0, (cfg.name, rest, per)
+    if rest:
+        segs.append(Segment(cfg.period, cfg.moe_period, rest // per))
+    return segs
+
+
+def _stack_groups(groups: List[Any]):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+
+
+def _model_size() -> int:
+    mesh = ctx.current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return 1
+    return mesh.shape["model"]
+
+
+class Model:
+    """cfg-driven LM. ``with_value=True`` adds a scalar value head (critic /
+    reward models in the RLHF pipeline share this class)."""
+
+    def __init__(self, cfg: ModelConfig, with_value: bool = False):
+        self.cfg = cfg
+        self.with_value = with_value
+        self.segments = build_segments(cfg)
+        self.is_encdec = cfg.input_mode == "encdec"
+
+    # ------------------------------------------------------------------ init
+    def _init_slot(self, key, kind: str, is_moe: bool, cross: bool, dtype):
+        cfg = self.cfg
+        ks = jax.random.split(key, 6)
+        slot: Dict[str, Any] = {"norm1": L.init_norm(cfg.d_model, dtype)}
+        if kind == ATTN:
+            slot["mixer"] = L.init_attention(ks[0], cfg, dtype)
+        elif kind == MLA:
+            slot["mixer"] = L.init_mla(ks[0], cfg, dtype)
+        elif kind == MAMBA:
+            slot["mixer"] = M.init_mamba(ks[0], cfg, dtype)
+        else:
+            raise ValueError(kind)
+        if cross:
+            slot["norm_x"] = L.init_norm(cfg.d_model, dtype)
+            slot["cross"] = L.init_attention(ks[1], cfg, dtype)
+        if is_moe and cfg.moe is not None:
+            slot["norm2"] = L.init_norm(cfg.d_model, dtype)
+            slot["ffn"] = MOE.init_moe(ks[2], cfg, dtype)
+        elif cfg.d_ff:
+            slot["norm2"] = L.init_norm(cfg.d_model, dtype)
+            slot["ffn"] = L.init_mlp(ks[2], cfg.d_model, cfg.d_ff,
+                                     cfg.mlp_gated, cfg.num_layers, dtype)
+        return slot
+
+    def _init_group(self, key, seg: Segment, cross: bool, dtype):
+        ks = jax.random.split(key, len(seg.kinds))
+        return {f"slot{i}": self._init_slot(ks[i], kind, seg.moe_flags[i], cross, dtype)
+                for i, kind in enumerate(seg.kinds)}
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        n_seg = len(self.segments)
+        ks = jax.random.split(key, n_seg + 6)
+        params: Dict[str, Any] = {
+            "embed": L._init(ks[0], (cfg.vocab_size, cfg.d_model), dtype=dtype),
+            "final_norm": L.init_norm(cfg.d_model, dtype),
+        }
+        cross = self.is_encdec
+        for si, seg in enumerate(self.segments):
+            gks = jax.random.split(ks[1 + si], seg.n_groups)
+            groups = [self._init_group(gks[g], seg, cross, dtype)
+                      for g in range(seg.n_groups)]
+            params[f"segment{si}"] = _stack_groups(groups)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L._init(ks[n_seg + 1], (cfg.d_model, cfg.vocab_size),
+                                        dtype=dtype)
+        if self.with_value:
+            params["value_head"] = {
+                "w": L._init(ks[n_seg + 2], (cfg.d_model, 1), dtype=jnp.float32),
+                "b": jnp.zeros((1,), jnp.float32),
+            }
+        if cfg.encoder_layers:
+            eseg = Segment((ATTN,), (False,), cfg.encoder_layers)
+            gks = jax.random.split(ks[n_seg + 3], cfg.encoder_layers)
+            groups = [self._init_group(gks[g], eseg, False, dtype)
+                      for g in range(cfg.encoder_layers)]
+            params["encoder"] = _stack_groups(groups)
+            params["encoder_norm"] = L.init_norm(cfg.d_model, dtype)
+        if cfg.mtp_depth:
+            mseg = self.segments[-1]
+            params["mtp"] = {
+                "proj": L._init(ks[n_seg + 4], (2 * cfg.d_model, cfg.d_model),
+                                dtype=dtype),
+                "norm_h": L.init_norm(cfg.d_model, dtype),
+                "norm_e": L.init_norm(cfg.d_model, dtype),
+                "layer": self._init_group(
+                    ks[n_seg + 5],
+                    Segment(mseg.kinds[:1], mseg.moe_flags[:1], 1), False, dtype),
+            }
+        return params
+
+    # ------------------------------------------------------------ embeddings
+    def embed(self, params, tokens):
+        return jnp.take(params["embed"], tokens, axis=0)
+
+    def unembed(self, params, h):
+        h = L.rms_norm(h, params["final_norm"], self.cfg.norm_eps)
+        w = params["embed"].T if self.cfg.tie_embeddings else params["lm_head"]
+        logits = h @ w
+        if logits.ndim == 3:
+            # vocab-parallel when V divides TP; else shard the seq dim
+            if logits.shape[-1] % max(_model_size(), 1) == 0:
+                logits = ctx.constrain(logits, "dp", None, "model")
+            else:
+                logits = ctx.constrain(logits, "dp", "model", None)
+        return logits
+
+    # -------------------------------------------------------------- full seq
+    def _slot_fwd(self, slot, h, positions, kind, has_ffn, is_moe, *,
+                  window, cross_kv=None, init_cache=None):
+        """One layer. If ``init_cache`` is given (prefill), also fills and
+        returns the slot's decode cache in the same pass."""
+        cfg = self.cfg
+        cache = {}
+        # (§Perf hillclimb C, refuted: per-slot Megatron-SP constraints were
+        # tried here — GSPMD already picks its schedule and the extra
+        # constraints cost +5..23% memory-term on jamba/llama; reverted.
+        # The group-boundary seq-parallel constraint in _stack_fwd stays.)
+        x = L.rms_norm(h, slot["norm1"], cfg.norm_eps)
+        if kind == ATTN:
+            y = L.attention_fwd(slot["mixer"], x, positions, cfg,
+                                window=window, init_cache=init_cache)
+            if init_cache is not None:
+                y, cache = y
+            h = h + y
+        elif kind == MLA:
+            y = L.mla_fwd(slot["mixer"], x, positions, cfg,
+                          window=window, init_cache=init_cache)
+            if init_cache is not None:
+                y, cache = y
+            h = h + y
+        elif kind == MAMBA:
+            if init_cache is not None:
+                y, cache = M.mamba_fwd(slot["mixer"], x, cfg, return_state=True)
+            else:
+                y = M.mamba_fwd(slot["mixer"], x, cfg)
+            h = h + y
+        if cross_kv is not None:
+            xx = L.rms_norm(h, slot["norm_x"], cfg.norm_eps)
+            h = h + L.cross_attention_fwd(slot["cross"], xx, cross_kv, cfg)
+        aux = jnp.zeros((), jnp.float32)
+        if has_ffn:
+            x2 = L.rms_norm(h, slot["norm2"], cfg.norm_eps)
+            if is_moe:
+                y, aux = MOE.moe_fwd(slot["ffn"], x2, cfg)
+            else:
+                y = L.mlp_fwd(slot["ffn"], x2, cfg.mlp_gated)
+            h = h + y
+        return h, aux, cache
+
+    def _seg_has_ffn(self, seg: Segment, i: int) -> bool:
+        return (seg.moe_flags[i] and self.cfg.moe is not None) or self.cfg.d_ff > 0
+
+    def _stack_fwd(self, params, h, positions, *, window=0, cross_kv=None,
+                   init_caches=None):
+        """Run all segments. Returns (h, aux, filled_caches_per_segment)."""
+        cfg = self.cfg
+        aux_total = jnp.zeros((), jnp.float32)
+        all_caches = []
+        for si, seg in enumerate(self.segments):
+            def group_fwd(carry, xs, seg=seg, si=si):
+                hh, aux = carry
+                # sequence parallelism at layer boundaries: the remat-saved
+                # residual stream shards over ("dp", "model") — 16x smaller
+                # checkpoint footprint; XLA all-gathers into the mixers.
+                hh = ctx.constrain(hh, "dp", "model", None)
+                gp, ckv, ic = xs
+                seg_specs = ctx.segment_param_specs()
+                if seg_specs is not None:
+                    gp = jax.tree.map(ctx.constrain_spec, gp, seg_specs[si])
+                caches = {}
+                for i, kind in enumerate(seg.kinds):
+                    is_moe = seg.moe_flags[i] and cfg.moe is not None
+                    hh, a, c = self._slot_fwd(
+                        gp[f"slot{i}"], hh, positions, kind,
+                        self._seg_has_ffn(seg, i), is_moe,
+                        window=window,
+                        cross_kv=None if ckv is None else ckv[i],
+                        init_cache=None if ic is None else ic[f"slot{i}"])
+                    caches[f"slot{i}"] = c
+                    aux = aux + a
+                return (hh, aux), caches
+
+            body = group_fwd
+            if cfg.remat == "full":
+                body = jax.checkpoint(group_fwd)
+            elif cfg.remat == "dots":
+                body = jax.checkpoint(
+                    group_fwd,
+                    policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+            xs = (params[f"segment{si}"],
+                  cross_kv[si] if cross_kv is not None else None,
+                  init_caches[si] if init_caches is not None else None)
+            (h, aux_total), caches = jax.lax.scan(
+                body, (h, aux_total), xs)
+            all_caches.append(caches)
+        return h, aux_total, all_caches
+
+    # ---------------------------------------------------------------- encode
+    def encode(self, params, frame_embeds):
+        """Bidirectional encoder over precomputed frame embeddings."""
+        cfg = self.cfg
+        h = frame_embeds
+        Se = h.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(Se), h.shape[:2])
+
+        def group_fwd(hh, gp):
+            hh = ctx.constrain(hh, "dp", "model", None)
+            x = L.rms_norm(hh, gp["slot0"]["norm1"], cfg.norm_eps)
+            q, k, v = L._project_qkv(gp["slot0"]["mixer"], x, cfg)
+            sin, cos = L.rope_tables(positions, cfg.resolved_head_dim(),
+                                     cfg.rope_theta)
+            q, k = L.apply_rope(q, sin, cos), L.apply_rope(k, sin, cos)
+            o = L.attn_core(q, k, v, causal=False).reshape(hh.shape[0], Se, -1)
+            hh = hh + o @ gp["slot0"]["mixer"]["wo"]
+            x2 = L.rms_norm(hh, gp["slot0"]["norm2"], cfg.norm_eps)
+            hh = hh + L.mlp_fwd(gp["slot0"]["ffn"], x2, cfg.mlp_gated)
+            return hh, None
+
+        body = jax.checkpoint(group_fwd) if cfg.remat != "none" else group_fwd
+        h, _ = jax.lax.scan(body, h, params["encoder"])
+        return L.rms_norm(h, params["encoder_norm"], cfg.norm_eps)
+
+    def _cross_kvs(self, params, enc_out):
+        """Per-decoder-layer cross K/V, stacked per segment.
+        Sharded (batch over dp, kv heads — or head_dim — over model)."""
+        def con(x):  # [G, B, Se, K, hd]
+            kh = "model" if x.shape[3] % _model_size() == 0 else None
+            hd = None if kh else "model"
+            return ctx.constrain(x, None, "dp", None, kh, hd)
+        out = []
+        for si, seg in enumerate(self.segments):
+            def per_group(gp):
+                return tuple(
+                    L.encode_cross_kv(gp[f"slot{i}"]["cross"], enc_out, self.cfg)
+                    for i in range(len(seg.kinds)))
+            kvs = jax.vmap(per_group, in_axes=0)(params[f"segment{si}"])
+            out.append(jax.tree.map(con, kvs))
+        return out
+
+    # --------------------------------------------------------------- forward
+    def _prepare_inputs(self, params, batch):
+        cfg = self.cfg
+        cross_kv = None
+        if cfg.input_mode == "tokens":
+            h = self.embed(params, batch["tokens"])
+        elif cfg.input_mode == "embeddings":
+            tok = self.embed(params, batch["tokens"])
+            h = jnp.concatenate([batch["prefix_embeds"].astype(tok.dtype), tok], 1)
+        elif cfg.input_mode == "encdec":
+            h = self.embed(params, batch["tokens"])
+            enc_out = self.encode(params, batch["frame_embeds"].astype(h.dtype))
+            cross_kv = self._cross_kvs(params, enc_out)
+        else:
+            raise ValueError(cfg.input_mode)
+        S = h.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S), h.shape[:2])
+        return h, positions, cross_kv
+
+    def forward(self, params, batch, *, window: int = 0):
+        """Full-sequence forward -> (logits [B,S,V], aux_loss, h_final)."""
+        h, positions, cross_kv = self._prepare_inputs(params, batch)
+        # cross_kv from _cross_kvs is already per-segment stacked; pass as xs
+        h, aux, _ = self._stack_fwd(params, h, positions, window=window,
+                                    cross_kv=cross_kv)
+        return self.unembed(params, h), aux, h
+
+    def forward_value(self, params, batch):
+        """[B,S] per-token scalar values (critic / reward)."""
+        h, positions, cross_kv = self._prepare_inputs(params, batch)
+        h, _, _ = self._stack_fwd(params, h, positions, cross_kv=cross_kv)
+        h = L.rms_norm(h, params["final_norm"], self.cfg.norm_eps)
+        vh = params["value_head"]
+        return (h.astype(jnp.float32) @ vh["w"] + vh["b"])[..., 0]
+
+    def mtp_logits(self, params, h, tokens):
+        """DeepSeek multi-token prediction: predict t_{i+2} from h_i and
+        emb(t_{i+1}). Runs on the full (shifted, end-padded) sequence so the
+        token grid keeps tiling the mesh (the MoE shard_map path applies);
+        returns logits [B, S, V] where index i scores tokens[:, i+2]
+        (the last two positions are padding — mask them in the loss)."""
+        cfg = self.cfg
+        mtp = params["mtp"]
+        shifted = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+        e_next = self.embed(params, shifted)
+        h_in = jnp.concatenate([
+            L.rms_norm(h, mtp["norm_h"], cfg.norm_eps),
+            L.rms_norm(e_next, mtp["norm_e"], cfg.norm_eps)], -1)
+        hh = h_in @ mtp["proj"]
+        S = hh.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S), hh.shape[:2])
+        seg = self.segments[-1]
+        kind = seg.kinds[0]
+        is_moe = seg.moe_flags[0] and cfg.moe is not None
+        hh, _, _ = self._slot_fwd(mtp["layer"]["slot0"], hh, positions, kind,
+                                  self._seg_has_ffn(seg, 0), is_moe, window=0)
+        return self.unembed(params, hh)
+
+    # ------------------------------------------------------------- kv caches
+    def init_cache(self, batch: int, capacity: int, dtype) -> list:
+        """Per-segment stacked decode caches."""
+        cfg = self.cfg
+        caches = []
+        for seg in self.segments:
+            slot_caches = {}
+            for i, kind in enumerate(seg.kinds):
+                if kind == ATTN:
+                    c = L.init_kv_cache(cfg, batch, capacity, dtype)
+                elif kind == MLA:
+                    c = L.init_mla_cache(cfg, batch, capacity, dtype)
+                else:
+                    c = M.init_mamba_cache(cfg, batch, dtype)
+                slot_caches[f"slot{i}"] = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (seg.n_groups,) + x.shape), c)
+            caches.append(slot_caches)
+        return caches
+
+    def prefill(self, params, batch, capacity: int, *, window: int = 0):
+        """Process a prompt, returning (last-position logits [B,V], caches).
+
+        caches = {"segments": [...], "cross_kv": [...]|None}. Attention /
+        MLA caches hold the last ``min(S, capacity)`` positions of a rolling
+        buffer; Mamba slots hold (conv_state, ssm_state). Single pass.
+        """
+        h, positions, cross_kv = self._prepare_inputs(params, batch)
+        B = h.shape[0]
+        init_caches = self.init_cache(B, capacity, h.dtype)
+        h_out, aux, filled = self._stack_fwd(
+            params, h, positions, window=window, cross_kv=cross_kv,
+            init_caches=init_caches)
+        logits = self.unembed(params, h_out[:, -1:])[:, 0]
+        return logits, {"segments": filled, "cross_kv": cross_kv}
+
+    def decode_step(self, params, caches, token, position, *, window: int = 0):
+        """token [B] int32, position [B] int32 -> (logits [B,V], caches)."""
+        cfg = self.cfg
+        h = self.embed(params, token[:, None])
+        cross_kv = caches.get("cross_kv")
+        new_segments = []
+        for si, seg in enumerate(self.segments):
+            def group_dec(hh, xs, seg=seg):
+                gp, cache, ckv = xs
+                new_cache = {}
+                for i, kind in enumerate(seg.kinds):
+                    slot = gp[f"slot{i}"]
+                    x = L.rms_norm(hh, slot["norm1"], cfg.norm_eps)
+                    if kind == ATTN:
+                        y, nc = L.attention_decode(slot["mixer"], x, position,
+                                                   cache[f"slot{i}"], cfg,
+                                                   window=window)
+                    elif kind == MLA:
+                        y, nc = L.mla_decode(slot["mixer"], x, position,
+                                             cache[f"slot{i}"], cfg,
+                                             window=window)
+                    else:
+                        y, nc = M.mamba_decode(slot["mixer"], x,
+                                               cache[f"slot{i}"], cfg)
+                    hh = hh + y
+                    new_cache[f"slot{i}"] = nc
+                    if ckv is not None:
+                        xx = L.rms_norm(hh, slot["norm_x"], cfg.norm_eps)
+                        hh = hh + L.cross_attention_fwd(slot["cross"], xx,
+                                                        ckv[i], cfg)
+                    if self._seg_has_ffn(seg, i):
+                        x2 = L.rms_norm(hh, slot["norm2"], cfg.norm_eps)
+                        is_moe = seg.moe_flags[i] and cfg.moe is not None
+                        if is_moe:
+                            y2, _ = MOE.moe_fwd(slot["ffn"], x2, cfg)
+                        else:
+                            y2 = L.mlp_fwd(slot["ffn"], x2, cfg.mlp_gated)
+                        hh = hh + y2
+                return hh, new_cache
+
+            xs = (params[f"segment{si}"], caches["segments"][si],
+                  cross_kv[si] if cross_kv is not None else None)
+            h, seg_cache = jax.lax.scan(group_dec, h, xs)
+            new_segments.append(seg_cache)
+        logits = self.unembed(params, h)[:, 0]
+        new_caches = dict(caches)
+        new_caches["segments"] = new_segments
+        return logits, new_caches

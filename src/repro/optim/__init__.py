@@ -1,0 +1,18 @@
+from repro.optim.adamw import AdamW
+from repro.optim.adafactor import Adafactor
+from repro.optim.schedule import warmup_cosine
+from repro.optim.clip import clip_by_global_norm, global_norm
+
+
+def make_optimizer(name: str, **kw):
+    if name == "adamw":
+        return AdamW(moment_dtype="float32", **kw)
+    if name == "adamw_bf16":
+        return AdamW(moment_dtype="bfloat16", **kw)
+    if name == "adafactor":
+        return Adafactor(**kw)
+    raise ValueError(name)
+
+
+__all__ = ["AdamW", "Adafactor", "warmup_cosine", "clip_by_global_norm",
+           "global_norm", "make_optimizer"]

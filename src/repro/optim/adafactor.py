@@ -1,0 +1,84 @@
+"""Adafactor (factored second moment, no first moment) — the memory-lean
+optimizer used for the 671B config. For rank>=2 leaves the second moment is
+stored as a (row, col) outer-product factorization over the last two dims;
+rank<2 (or tiny) leaves keep a full second moment."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= 128 and p.shape[-2] >= 128
+
+
+@dataclass(frozen=True)
+class Adafactor:
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+    def init(self, params):
+        def per_leaf(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {
+            "v": jax.tree.map(per_leaf, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def init_specs(self, param_specs, params=None):
+        """Factored dims inherit the matching spec entries."""
+        def per_leaf(spec, p):
+            if _factored(p):
+                sr = P(*spec[:-1]) if spec else P()
+                sc = P(*(tuple(spec[:-2]) + tuple(spec[-1:]))) if spec else P()
+                return {"vr": sr, "vc": sc}
+            return {"v": spec}
+        specs = jax.tree.map(per_leaf, param_specs, params,
+                             is_leaf=lambda x: isinstance(x, P))
+        return {"v": specs, "count": P()}
+
+    def update(self, grads, state, params, lr):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        beta = 1.0 - c ** (-self.decay)
+
+        def upd(g, v, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + self.eps
+            if "vr" in v:
+                vr = beta * v["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * v["vc"] + (1 - beta) * g2.mean(-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(-1)[..., None, None], self.eps))
+                u = g32 * jax.lax.rsqrt(denom + self.eps)
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                vv = beta * v["v"] + (1 - beta) * g2
+                u = g32 * jax.lax.rsqrt(vv + self.eps)
+                new_v = {"v": vv}
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms_u / self.clip_threshold)
+            new_p = (p.astype(jnp.float32)
+                     - lr * (u + self.weight_decay * p.astype(jnp.float32)))
+            return new_p.astype(p.dtype), new_v
+
+        out = jax.tree.map(upd, grads, state["v"], params,
+                           is_leaf=lambda x: isinstance(x, dict) and
+                           ("v" in x or "vr" in x))
+        leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+        new_p = jax.tree.unflatten(treedef, [l[0] for l in leaves])
+        new_v = jax.tree.unflatten(treedef, [l[1] for l in leaves])
+        return new_p, {"v": new_v, "count": count}
+
+    def state_bytes_per_param(self) -> int:
+        return 0  # factored: O(rows+cols), negligible vs params

@@ -1,0 +1,64 @@
+"""AdamW with configurable moment dtype (fp32, or bf16 for the >=100B
+configs — see DESIGN.md §5). Pure pytree functions; shard specs for the
+optimizer state are derived from the parameter specs (ZeRO: the caller
+re-spec's them onto the data axis)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: str = "float32"
+
+    def init(self, params):
+        dt = jnp.dtype(self.moment_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def init_specs(self, param_specs, params=None):
+        """Optimizer-state PartitionSpecs mirroring the parameter specs."""
+        from jax.sharding import PartitionSpec as P
+        return {
+            "mu": param_specs,
+            "nu": param_specs,
+            "count": P(),
+        }
+
+    def update(self, grads, state, params, lr):
+        count = state["count"] + 1
+        b1, b2 = self.b1, self.b2
+        c = count.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** c
+        bc2 = 1.0 - b2 ** c
+        dt = jnp.dtype(self.moment_dtype)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            step = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + self.eps)
+            step = step + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * step
+            return new_p.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+        out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+        new_p = jax.tree.unflatten(treedef, [l[0] for l in leaves])
+        new_m = jax.tree.unflatten(treedef, [l[1] for l in leaves])
+        new_v = jax.tree.unflatten(treedef, [l[2] for l in leaves])
+        return new_p, {"mu": new_m, "nu": new_v, "count": count}
+
+    def state_bytes_per_param(self) -> int:
+        return 2 * jnp.dtype(self.moment_dtype).itemsize

@@ -1,0 +1,9 @@
+from repro.rlhf.experience import ExperienceBuffer
+from repro.rlhf.ppo import gae, kl_shaped_rewards, whiten
+from repro.rlhf.rollout import Rollout, RolloutResult, sample_token
+from repro.rlhf.trainer import (PhaseMemoryManager, RLHFConfig, RLHFTrainer,
+                                live_device_bytes)
+
+__all__ = ["ExperienceBuffer", "gae", "kl_shaped_rewards", "whiten",
+           "Rollout", "RolloutResult", "sample_token", "PhaseMemoryManager",
+           "RLHFConfig", "RLHFTrainer", "live_device_bytes"]

@@ -1,0 +1,38 @@
+"""Experience buffer: accumulates rollout batches and serves PPO
+minibatches (multiple PPO epochs over shuffled experience)."""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ExperienceBuffer:
+    def __init__(self):
+        self._batches: List[Dict[str, jax.Array]] = []
+
+    def add(self, batch: Dict[str, jax.Array]):
+        self._batches.append(batch)
+
+    def __len__(self):
+        return sum(int(b["tokens"].shape[0]) for b in self._batches)
+
+    def minibatches(self, size: int, key, epochs: int = 1
+                    ) -> Iterator[Dict[str, jax.Array]]:
+        if not self._batches:
+            return
+        cat = {k: jnp.concatenate([b[k] for b in self._batches])
+               for k in self._batches[0]}
+        n = cat["tokens"].shape[0]
+        for e in range(epochs):
+            perm = jax.random.permutation(jax.random.fold_in(key, e), n)
+            for i in range(0, n - size + 1, size):
+                idx = perm[i:i + size]
+                yield {k: jnp.take(v, idx, axis=0) for k, v in cat.items()}
+
+    def clear(self):
+        """Phase-boundary hygiene: drop references so device buffers die
+        (the trainer's PhaseMemoryManager then collects)."""
+        self._batches.clear()

@@ -1,0 +1,92 @@
+"""GRPO (group-relative policy optimization) — critic-free RLHF.
+
+For each prompt, sample a group of G responses; the advantage of response i
+is its reward standardized within the group. Removes the critic and reward
+*value* model from the memory picture entirely (two of the paper's four
+models) — the memory-minimal member of the framework's RLHF family, and a
+natural beyond-paper data point for the §Paper-claims study.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import Model
+from repro.rlhf.rollout import Rollout
+from repro.rlhf.trainer import PhaseMemoryManager
+from repro.steps import init_train_state, make_train_step, _prefix_len
+
+
+@dataclasses.dataclass
+class GRPOConfig:
+    prompt_len: int = 8
+    gen_len: int = 16
+    group_size: int = 8
+    kl_coef: float = 0.02
+    lr: float = 1e-3
+    temperature: float = 1.0
+    top_k: int = 0
+    memory_policy: str = "after_inference"
+
+
+class GRPOTrainer:
+    """Two models only: actor + frozen reference. reward_fn is programmatic
+    (verifiable rewards) or any callable (tokens, mask) -> [B]."""
+
+    def __init__(self, actor_cfg: ModelConfig, rl: GRPOConfig, key,
+                 reward_fn: Callable):
+        self.rl = rl
+        self.actor_cfg = actor_cfg
+        self.actor = Model(actor_cfg)
+        self.reward_fn = reward_fn
+        self.actor_step = make_train_step(self.actor, actor_cfg, kind="ppo",
+                                          lr=rl.lr, kl_coef=rl.kl_coef)
+        self.actor_state = init_train_state(self.actor, actor_cfg, key,
+                                            self.actor_step.optimizer)
+        self.ref_params = jax.tree.map(jnp.copy, self.actor_state["params"])
+        self.rollout = Rollout(self.actor, actor_cfg,
+                               capacity=rl.prompt_len + rl.gen_len,
+                               temperature=rl.temperature, top_k=rl.top_k)
+        self.memory = PhaseMemoryManager(policy=rl.memory_policy)
+        self._jit_step = jax.jit(self.actor_step, donate_argnums=(0,))
+        self._jit_logp = jax.jit(self._token_logp)
+
+    def _token_logp(self, params, batch):
+        from repro.steps import _action_logp
+        logits, _, _ = self.actor.forward(params, batch)
+        return _action_logp(logits, batch["tokens"],
+                            _prefix_len(self.actor_cfg))
+
+    def train_step(self, prompts: jax.Array, key) -> Dict[str, float]:
+        """prompts [B, P]; each prompt is expanded to a group of G."""
+        G = self.rl.group_size
+        B = prompts.shape[0]
+        grouped = jnp.repeat(prompts, G, axis=0)          # [B*G, P]
+        ro = self.rollout.generate(self.actor_state["params"],
+                                   {"tokens": grouped}, self.rl.gen_len, key)
+        self.memory.boundary("rollout", "inference")
+
+        batch = {"tokens": ro.tokens}
+        old_logp = self._jit_logp(self.actor_state["params"], batch)
+        ref_logp = self._jit_logp(self.ref_params, batch)
+        self.memory.boundary("score", "inference")
+
+        rewards = self.reward_fn(ro.tokens, ro.mask)       # [B*G]
+        rg = rewards.reshape(B, G)
+        adv_seq = (rg - rg.mean(axis=1, keepdims=True)) / (
+            rg.std(axis=1, keepdims=True) + 1e-6)
+        adv = adv_seq.reshape(B * G)[:, None] * ro.mask    # token-broadcast
+
+        exp = {"tokens": ro.tokens, "loss_mask": ro.mask,
+               "advantages": adv, "old_logp": old_logp * ro.mask,
+               "ref_logp": ref_logp * ro.mask,
+               "returns": jnp.zeros_like(ro.mask)}
+        self.actor_state, m = self._jit_step(self.actor_state, exp)
+        self.memory.boundary("train_actor", "training", exp)
+        out = {k: float(v) for k, v in m.items()}
+        out["mean_reward"] = float(rewards.mean())
+        return out

@@ -1,0 +1,46 @@
+"""PPO math: per-token rewards (KL-shaped), GAE, advantage whitening."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kl_shaped_rewards(logp, ref_logp, terminal_reward, mask, *,
+                      kl_coef: float = 0.1, clip_reward: float = 5.0):
+    """Per-token reward: -kl_coef * (logp - ref_logp), plus the sequence
+    reward on the final generated token. All [B, S]."""
+    kl = logp - ref_logp
+    rewards = -kl_coef * kl * mask
+    # index of last valid token per row
+    idx = jnp.maximum(mask.sum(-1).astype(jnp.int32) - 1, 0)
+    last_pos = jnp.clip(idx, 0, mask.shape[1] - 1)
+    terminal = jnp.clip(terminal_reward, -clip_reward, clip_reward)
+    rewards = rewards.at[jnp.arange(rewards.shape[0]), last_pos].add(terminal)
+    return rewards
+
+
+def gae(rewards, values, mask, *, gamma: float = 1.0, lam: float = 0.95):
+    """Generalized advantage estimation over the generated region.
+    rewards/values/mask [B, S] -> (advantages, returns) [B, S]."""
+    B, S = rewards.shape
+
+    def step(carry, xs):
+        adv_next, val_next = carry
+        r, v, m = xs
+        delta = r + gamma * val_next * m - v
+        adv = delta + gamma * lam * adv_next * m
+        return (adv, v), adv
+
+    xs = (rewards.T, values.T, mask.T)
+    xs = jax.tree.map(lambda x: x[::-1], xs)
+    (_, _), adv_rev = jax.lax.scan(step, (jnp.zeros(B), jnp.zeros(B)), xs)
+    advantages = adv_rev[::-1].T * mask
+    returns = advantages + values
+    return advantages, returns
+
+
+def whiten(x, mask, *, eps: float = 1e-8):
+    n = jnp.maximum(mask.sum(), 1.0)
+    mean = jnp.sum(x * mask) / n
+    var = jnp.sum(jnp.square(x - mean) * mask) / n
+    return (x - mean) * jax.lax.rsqrt(var + eps) * mask

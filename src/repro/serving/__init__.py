@@ -1,0 +1,3 @@
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+__all__ = ["ContinuousBatcher", "Request"]

@@ -1,0 +1,133 @@
+"""Continuous-batching serving scheduler over the fixed-capacity donated
+KV cache.
+
+A fixed pool of B slots; requests join free slots between decode steps
+(their prompts prefilled into the shared rolling cache at the slot's
+absolute positions), finished sequences (EOS or max tokens) free their
+slots immediately. One jitted decode step serves all active slots; idle
+slots decode into a scratch row that is masked out. This is the memory
+shape the paper's inference phases *should* have had: a single statically
+allocated cache, zero allocator churn at request boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import Model
+from repro.rlhf.rollout import sample_token
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # [P] int32
+    max_new_tokens: int
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    def __init__(self, model: Model, cfg: ModelConfig, params, *,
+                 slots: int = 4, capacity: int = 128,
+                 temperature: float = 1.0, top_k: int = 0,
+                 eos_id: Optional[int] = None, seed: int = 0):
+        self.model, self.cfg, self.params = model, cfg, params
+        self.B, self.capacity = slots, capacity
+        self.temperature, self.top_k, self.eos_id = temperature, top_k, eos_id
+        self.queue: Deque[Request] = deque()
+        self.active: List[Optional[Request]] = [None] * slots
+        self.pos = np.zeros(slots, np.int64)        # next absolute position
+        self.last_tok = np.zeros(slots, np.int64)
+        cache_dtype = jax.tree.leaves(params)[0].dtype
+        self.caches = model.init_cache(slots, capacity, cache_dtype)
+        self.caches = {"segments": self.caches, "cross_kv": None}
+        self.key = jax.random.PRNGKey(seed)
+        self.steps = 0
+
+        def decode(params, caches, tok, pos, key, live):
+            logits, caches = model.decode_step(params, caches, tok, pos)
+            t, _ = sample_token(key, logits, temperature=temperature,
+                                top_k=top_k)
+            t = jnp.where(live, t, 0).astype(jnp.int32)
+            return t, caches
+
+        self._decode = jax.jit(decode, donate_argnums=(1,))
+        # per-slot prefill: batch of 1 written into slot s of the cache
+        self._prefill = jax.jit(
+            lambda params, batch: model.prefill(params, batch, capacity))
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> Request:
+        req = Request(len(self.queue) + 1_000 * (self.steps + 1),
+                      np.asarray(prompt, np.int32), max_new_tokens)
+        self.queue.append(req)
+        return req
+
+    # -- internals -----------------------------------------------------------
+    def _admit(self):
+        for s in range(self.B):
+            if self.active[s] is None and self.queue:
+                req = self.queue.popleft()
+                lg, caches1 = self._prefill(
+                    self.params, {"tokens": jnp.asarray(req.prompt)[None]})
+                # splice slot-s rows of the fresh cache into the pool
+                def splice(pool, new):
+                    return pool.at[:, s:s + 1].set(new)
+                self.caches["segments"] = jax.tree.map(
+                    lambda pool, new: pool.at[:, s:s + 1].set(new),
+                    self.caches["segments"], caches1["segments"])
+                self.key, k = jax.random.split(self.key)
+                tok, _ = sample_token(k, lg, temperature=self.temperature,
+                                      top_k=self.top_k)
+                self.active[s] = req
+                self.pos[s] = len(req.prompt)
+                self.last_tok[s] = int(tok[0])
+                req.out_tokens.append(int(tok[0]))
+
+    def _retire(self):
+        done = []
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            hit_eos = (self.eos_id is not None
+                       and req.out_tokens
+                       and req.out_tokens[-1] == self.eos_id)
+            if hit_eos or len(req.out_tokens) >= req.max_new_tokens:
+                req.done = True
+                done.append(req)
+                self.active[s] = None   # slot freed; cache rows overwritten
+        return done
+
+    def step(self) -> List[Request]:
+        """Admit, one decode step for all live slots, retire. Returns the
+        requests completed this step."""
+        self._admit()
+        live = np.array([r is not None for r in self.active])
+        if live.any():
+            self.key, k = jax.random.split(self.key)
+            tok, self.caches = self._decode(
+                self.params, self.caches,
+                jnp.asarray(self.last_tok, jnp.int32),
+                jnp.asarray(self.pos, jnp.int32), k, jnp.asarray(live))
+            tok = np.asarray(tok)
+            for s, req in enumerate(self.active):
+                if req is not None:
+                    req.out_tokens.append(int(tok[s]))
+                    self.last_tok[s] = int(tok[s])
+                    self.pos[s] += 1
+        self.steps += 1
+        return self._retire()
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
+        finished = []
+        for _ in range(max_steps):
+            finished.extend(self.step())
+            if not self.queue and all(r is None for r in self.active):
+                break
+        return finished

@@ -1,0 +1,98 @@
+"""Mesh context + activation sharding constraints.
+
+Model code calls ``constrain(x, "dp", None, "model")`` at key activation
+points; when no mesh is active (CPU smoke tests) it is a no-op. Entries:
+``"dp"`` resolves to the data-parallel axes (("pod","data") on the multi-pod
+mesh), ``"model"`` to tensor parallelism. Any entry whose dim is not
+divisible by the axis size is dropped (replicated) — this is what lets the
+same model code lower on 1-device CPU, 256- and 512-chip meshes.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+
+
+def set_current_mesh(mesh: Optional[Mesh]) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+@contextmanager
+def use_mesh(mesh: Mesh):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        yield mesh
+    finally:
+        _MESH = prev
+
+
+def _axsize(mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def resolve_entry(mesh: Mesh, entry, dim: int):
+    if entry is None:
+        return None
+    if entry == "dp":
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        if not axes:
+            return None
+        if dim % _axsize(mesh, axes) == 0:
+            return axes if len(axes) > 1 else axes[0]
+        # try data alone
+        if "data" in axes and dim % mesh.shape["data"] == 0:
+            return "data"
+        return None
+    if entry not in mesh.axis_names:
+        return None
+    return entry if dim % _axsize(mesh, entry) == 0 else None
+
+
+def constrain(x: jax.Array, *entries):
+    if _MESH is None or x is None:
+        return x
+    mesh = _MESH
+    assert len(entries) == x.ndim, (entries, x.shape)
+    spec = P(*(resolve_entry(mesh, e, d) for e, d in zip(entries, x.shape)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# --- per-layer param-slice specs (grad reduce-scatter, §Perf hillclimb C) --
+# with_sharding_constraint is its own transpose: constraining the per-layer
+# parameter slice inside the scan makes its cotangent (the layer's weight
+# gradient) carry the same sharding, so the partitioner reduce-scatters the
+# per-layer dW instead of all-reducing it in full.
+_SEGMENT_SPECS = None
+
+
+def set_segment_param_specs(specs) -> None:
+    global _SEGMENT_SPECS
+    _SEGMENT_SPECS = specs
+
+
+def segment_param_specs():
+    return _SEGMENT_SPECS
+
+
+def constrain_spec(x, spec):
+    if _MESH is None or spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))

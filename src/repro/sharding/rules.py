@@ -1,0 +1,240 @@
+"""Parameter / activation / cache sharding rules.
+
+Mesh axes: ``(data, model)`` single-pod, ``(pod, data, model)`` multi-pod.
+``pod`` and ``data`` together form the data-parallel (and ZeRO/FSDP) domain;
+``model`` carries tensor parallelism and expert parallelism.
+
+ZeRO stages map onto pjit as (see DESIGN.md §2):
+  * stage 1/2 — parameters replicated across the DP domain (TP still applies);
+    optimizer state sharded over DP. XLA derives reduce-scatter/all-gather
+    from the spec mismatch (the 1-vs-2 distinction is a *schedule* property
+    modelled in the allocator-trace layer, not a pjit spec).
+  * stage 3 — parameters also sharded over DP (FSDP): per-layer all-gathers.
+
+Every rule checks divisibility (pjit requires in/out dims divide the axis)
+and falls back to the next-best dim or replication — e.g. granite's 24 heads
+/ 40 experts on a 16-way model axis shard the fused head dim / d_expert dim
+instead.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def dp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+@dataclass(frozen=True)
+class ShardingStrategy:
+    """The paper's §2.2 memory-management strategy knobs, pjit edition."""
+    zero_stage: int = 3          # 1 | 2 | 3
+    tensor_parallel: bool = True
+    expert_parallel: bool = True
+    offload_optimizer: bool = False   # host offload (trace-level on CPU)
+    remat: Optional[str] = None       # override cfg.remat if set
+
+
+def _div(mesh, dim: int, axes) -> bool:
+    return dim % _axsize(mesh, axes) == 0 and _axsize(mesh, axes) > 1
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh,
+                 strat: ShardingStrategy, params_shape) -> dict:
+    """PartitionSpec pytree matching ``params_shape`` (a ShapeDtypeStruct
+    pytree from jax.eval_shape of model.init)."""
+    dp = dp_axes(mesh)
+    mp = "model" if (strat.tensor_parallel and "model" in mesh.axis_names) else None
+    fsdp = dp if strat.zero_stage >= 3 else None
+
+    def fs(dim: int):
+        return fsdp if (fsdp and dim % _axsize(mesh, fsdp) == 0) else None
+
+    def tp(dim: int):
+        return mp if (mp and dim % _axsize(mesh, mp) == 0) else None
+
+    def spec_for(path: Tuple[str, ...], leaf) -> P:
+        shape = leaf.shape
+        stacked = any(k.startswith("segment") or k == "encoder" for k in path)
+        lead = (None,) if stacked else ()
+        if stacked:
+            shape = shape[1:]
+        name = path[-1]
+        parent = path[-2] if len(path) >= 2 else ""
+
+        def mk(*entries):
+            return P(*(lead + entries))
+
+        if name == "embed":
+            return mk(tp(shape[0]), fs(shape[1]))
+        if name == "lm_head":
+            return mk(fs(shape[0]), tp(shape[1]))
+        if name in ("final_norm", "encoder_norm", "norm1", "norm2", "norm_x",
+                    "q_norm", "kv_norm", "norm_h", "norm_e"):
+            return mk(*([None] * len(shape)))
+        if name == "scale":
+            return mk(*([None] * len(shape)))
+        # attention -----------------------------------------------------
+        if name in ("wq", "wk", "wv"):
+            return mk(fs(shape[0]), tp(shape[1]))
+        if name == "wo":
+            return mk(tp(shape[0]), fs(shape[1]))
+        if name in ("bq", "bk", "bv"):
+            return mk(tp(shape[0]))
+        # MLA -----------------------------------------------------------
+        if name in ("q_down", "kv_down"):
+            return mk(fs(shape[0]), None)
+        if name in ("q_up", "kv_up"):
+            return mk(fs(shape[0]), tp(shape[1]))
+        # MLP -----------------------------------------------------------
+        if name in ("w_in", "w_gate") and len(shape) == 2:
+            return mk(fs(shape[0]), tp(shape[1]))
+        if name == "w_out" and len(shape) == 2:
+            return mk(tp(shape[0]), fs(shape[1]))
+        # MoE experts [E, D, F] / [E, F, D] -------------------------------
+        if name in ("w_in", "w_gate") and len(shape) == 3:
+            ep = mp if (strat.expert_parallel and mp and _div(mesh, shape[0], mp)) else None
+            if ep:
+                return mk(ep, fs(shape[1]), None)
+            return mk(None, fs(shape[1]), tp(shape[2]))
+        if name == "w_out" and len(shape) == 3:
+            ep = mp if (strat.expert_parallel and mp and _div(mesh, shape[0], mp)) else None
+            if ep:
+                return mk(ep, None, fs(shape[2]))
+            return mk(None, tp(shape[1]), fs(shape[2]))
+        if name == "router":
+            return mk(fs(shape[0]), None)
+        # Mamba ----------------------------------------------------------
+        if name == "in_proj":
+            return mk(fs(shape[0]), tp(shape[1]))
+        if name == "out_proj":
+            return mk(tp(shape[0]), fs(shape[1]))
+        if name in ("conv_w", "conv_b"):
+            return mk(*([None] * (len(shape) - 1)), tp(shape[-1]))
+        if name in ("dt_bias", "A_log", "D", "norm"):
+            return mk(*([None] * len(shape)))
+        # heads / misc -----------------------------------------------------
+        if parent == "value_head" or name in ("w", "b"):
+            return mk(*([None] * len(shape)))
+        if name == "proj":  # mtp projection [2D, D]
+            return mk(fs(shape[0]), tp(shape[1]))
+        return mk(*([None] * len(shape)))
+
+    flat = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+    paths = [tuple(str(getattr(k, "key", k)) for k in kp) for kp, _ in flat]
+    leaves = [spec_for(p, l) for p, (_, l) in zip(paths, flat)]
+    treedef = jax.tree_util.tree_structure(params_shape)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def zero_opt_pspecs(param_specs, params_shape, mesh: Mesh,
+                    strat: ShardingStrategy):
+    """ZeRO-1/2: optimizer state sharded over the DP domain even when the
+    parameters themselves are replicated there. For each leaf, shard the
+    largest dim that (a) is unsharded in the param spec and (b) divides the
+    DP size. ZeRO-3 states just mirror the (already DP-sharded) param spec."""
+    dp = dp_axes(mesh)
+    n = _axsize(mesh, dp)
+
+    def respec(spec: P, leaf) -> P:
+        if strat.zero_stage >= 3 or n == 1:
+            return spec
+        entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        best, best_dim = None, 0
+        for i, (e, d) in enumerate(zip(entries, leaf.shape)):
+            if e is None and d % n == 0 and d > best_dim:
+                best, best_dim = i, d
+        if best is not None:
+            entries[best] = dp if len(dp) > 1 else dp[0]
+        return P(*entries)
+
+    return jax.tree.map(respec, param_specs, params_shape,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Activations / batches / caches
+# ---------------------------------------------------------------------------
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> dict:
+    """Specs for the step-function input batch (see launch.steps for the
+    matching ShapeDtypeStructs)."""
+    dp = dp_axes(mesh)
+    B = shape.global_batch
+    bspec = dp if B % _axsize(mesh, dp) == 0 else None
+    if isinstance(bspec, tuple) and len(bspec) == 1:
+        bspec = bspec[0]
+    tok2 = P(bspec, None)
+    specs = {"tokens": tok2}
+    if shape.kind == "train":
+        specs.update({"loss_mask": tok2, "advantages": tok2,
+                      "old_logp": tok2, "ref_logp": tok2, "returns": tok2})
+    if cfg.input_mode == "embeddings":
+        specs["prefix_embeds"] = P(bspec, None, None)
+    if cfg.input_mode == "encdec":
+        specs["frame_embeds"] = P(bspec, None, None)
+    return specs
+
+
+def cache_pspecs(model, cfg: ModelConfig, mesh: Mesh, batch: int,
+                 strat: ShardingStrategy, cache_shapes) -> list:
+    """Decode-cache specs. Batch shards over DP when divisible; for the
+    long-context batch=1 case the sequence (capacity) dim of attention
+    caches shards over DP instead (sequence-parallel KV)."""
+    dp = dp_axes(mesh)
+    ndp = _axsize(mesh, dp)
+    dpa = dp if len(dp) > 1 else dp[0]
+    mp = "model" if (strat.tensor_parallel and "model" in mesh.axis_names) else None
+    batch_ok = batch % ndp == 0 and ndp > 1
+
+    def spec_for(path, leaf) -> P:
+        shape = leaf.shape  # leading dim = n_groups (stacked)
+        name = path[-1]
+        b = dpa if batch_ok else None
+        def dim_ax(i, ax):
+            return ax if (ax and shape[i] % _axsize(mesh, ax if isinstance(ax, tuple) else (ax,)) == 0) else None
+        if name in ("k", "v"):          # [G, B, cap, K, hd]
+            seq = None if batch_ok else dim_ax(2, dpa)
+            kh = dim_ax(3, mp)
+            hd = dim_ax(4, mp) if kh is None else None   # kv<TP: shard head_dim
+            return P(None, b, seq, kh, hd)
+        if name in ("c_kv", "k_rope"):  # [G, B, cap, r] — shard the latent dim
+            seq = None if batch_ok else dim_ax(2, dpa)
+            return P(None, b, seq, dim_ax(3, mp))
+        if name == "pos":               # [G, B, cap]
+            seq = None if batch_ok else dim_ax(2, dpa)
+            return P(None, b, seq)
+        if name == "conv_state":        # [G, B, W-1, C]
+            return P(None, b, None, dim_ax(3, mp))
+        if name == "ssm_state":         # [G, B, H, P, N]
+            return P(None, b, dim_ax(2, mp), None, None)
+        return P(*([None] * len(shape)))
+
+    flat = jax.tree_util.tree_flatten_with_path(cache_shapes)[0]
+    paths = [tuple(str(getattr(k, "key", k)) for k in kp) for kp, _ in flat]
+    leaves = [spec_for(p, l) for p, (_, l) in zip(paths, flat)]
+    treedef = jax.tree_util.tree_structure(cache_shapes)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def to_named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

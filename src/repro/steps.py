@@ -1,0 +1,269 @@
+"""Step functions — the units the launcher jits / lowers, and the phases of
+the RLHF pipeline (DESIGN.md §4):
+
+  * ``train_step``    — PPO actor update (clipped ratio vs old_logp, KL vs
+                        ref_logp) + optional MTP CE + MoE aux loss.
+  * ``critic_step``   — clipped value-function regression.
+  * ``lm_step``       — plain CE (SFT / reward-model pretext, examples).
+  * ``prefill_step``  — rollout prompt processing, builds decode caches.
+  * ``decode_step``   — one rollout token (full or sliding-window).
+
+``input_specs`` produces ShapeDtypeStruct stand-ins for every (arch x input
+shape) pair — the dry-run lowers against these, no allocation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import Model
+from repro.optim import clip_by_global_norm, make_optimizer
+from repro.sharding import ctx
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+def _full_seq_logp(logits, targets):
+    """Per-position log-prob of ``targets`` [B, T] under logits [B, T, V].
+    Full-length (no slicing before the reduction) so the seq dim keeps its
+    sharding; never materializes fp32 [B,T,V] — the fp32 exp fuses into the
+    reduce. This keeps the training-phase memory roofline honest."""
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    mx = jax.lax.stop_gradient(logits.max(-1))
+    lse = mx.astype(jnp.float32) + jnp.log(jnp.sum(
+        jnp.exp(logits.astype(jnp.float32) - mx[..., None].astype(jnp.float32)),
+        axis=-1))
+    return tgt.astype(jnp.float32) - lse                   # [B, T]
+
+
+def _action_logp(logits, tokens, prefix: int):
+    """logits [B, P+S, V]; tokens [B, S]. Returns per-action log-probs
+    aligned so out[:, t] scores tokens[:, t] (t >= 1); out[:, 0] = 0."""
+    B, S = tokens.shape
+    T = logits.shape[1]
+    # full-length target map: position j scores tokens[:, j - prefix + 1]
+    tgt_full = jnp.zeros((B, T), tokens.dtype)
+    tgt_full = jax.lax.dynamic_update_slice(
+        tgt_full, tokens[:, 1:], (0, prefix))
+    logp_full = _full_seq_logp(logits, tgt_full)           # [B, T]
+    act = jax.lax.dynamic_slice(logp_full, (0, prefix), (B, S - 1))
+    return jnp.pad(act, ((0, 0), (1, 0)))                  # [B, S]
+
+
+def ppo_actor_loss(logits, batch, *, prefix: int = 0, clip_eps: float = 0.2,
+                   kl_coef: float = 0.1, entropy_coef: float = 0.0):
+    tokens = batch["tokens"]
+    mask = batch["loss_mask"].astype(jnp.float32)
+    mask = mask.at[:, 0].set(0.0)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    logp = _action_logp(logits, tokens, prefix)
+    ratio = jnp.exp(logp - batch["old_logp"])
+    adv = batch["advantages"]
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1 - clip_eps, 1 + clip_eps) * adv
+    ppo = -jnp.sum(jnp.minimum(unclipped, clipped) * mask) / denom
+    # k3 KL estimator vs the frozen reference policy
+    log_r = batch["ref_logp"] - logp
+    kl = jnp.sum((jnp.exp(log_r) - 1.0 - log_r) * mask) / denom
+    loss = ppo + kl_coef * kl
+    metrics = {"ppo_loss": ppo, "kl": kl,
+               "clip_frac": jnp.sum((jnp.abs(ratio - 1) > clip_eps) * mask) / denom}
+    return loss, metrics
+
+
+def critic_loss(values, batch, *, clip_eps: float = 0.2):
+    mask = batch["loss_mask"].astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    returns = batch["returns"]
+    old_v = batch.get("old_values", returns)
+    v_clip = old_v + jnp.clip(values - old_v, -clip_eps, clip_eps)
+    l = jnp.maximum(jnp.square(values - returns), jnp.square(v_clip - returns))
+    loss = 0.5 * jnp.sum(l * mask) / denom
+    return loss, {"vf_loss": loss}
+
+
+def mtp_loss(logits, tokens, mask):
+    """MTP CE: logits[:, i] scores tokens[:, i+2] (full-length logits,
+    last two positions are padding)."""
+    S = tokens.shape[1]
+    tgt_full = jnp.pad(tokens[:, 2:], ((0, 0), (0, 2)))
+    nll = -_full_seq_logp(logits, tgt_full)[:, :S - 2]
+    m = mask[:, 2:].astype(jnp.float32)
+    return jnp.sum(nll * m) / jnp.maximum(m.sum(), 1.0)
+
+
+def lm_loss(logits, tokens, mask, *, prefix: int = 0):
+    nll = -_action_logp(logits, tokens, prefix)[:, 1:]
+    m = mask[:, 1:].astype(jnp.float32)
+    return jnp.sum(nll * m) / jnp.maximum(m.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+def _prefix_len(cfg: ModelConfig) -> int:
+    return cfg.num_prefix_embeddings if cfg.input_mode == "embeddings" else 0
+
+
+def make_train_step(model: Model, cfg: ModelConfig, *, lr: float = 3e-5,
+                    kind: str = "ppo", kl_coef: float = 0.1,
+                    max_grad_norm: float = 1.0):
+    """kind: ppo | critic | lm."""
+    optimizer = make_optimizer(cfg.optimizer)
+    prefix = _prefix_len(cfg)
+
+    def loss_fn(params, batch):
+        if kind == "critic":
+            values = model.forward_value(params, batch)
+            S = batch["tokens"].shape[1]
+            values = values[:, prefix:prefix + S]
+            return critic_loss(values, batch)
+        logits, aux, h = model.forward(params, batch)
+        if kind == "lm":
+            loss = lm_loss(logits, batch["tokens"], batch["loss_mask"],
+                           prefix=prefix)
+            metrics = {"lm_loss": loss}
+        else:
+            loss, metrics = ppo_actor_loss(logits, batch, prefix=prefix,
+                                           kl_coef=kl_coef)
+        if cfg.mtp_depth and kind != "critic":
+            mtp_lg = model.mtp_logits(params, h, batch["tokens"])
+            mtp = mtp_loss(mtp_lg, batch["tokens"], batch["loss_mask"])
+            loss = loss + 0.1 * mtp
+            metrics["mtp_loss"] = mtp
+        return loss + aux, metrics
+
+    N = max(1, cfg.microbatches)
+    # grad-accumulation dtype: bf16 for the memory-lean >=100B configs
+    acc_dtype = jnp.float32 if cfg.optimizer == "adamw" else jnp.bfloat16
+
+    def train_step(state, batch):
+        if N == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state["params"], batch)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((N, x.shape[0] // N) + x.shape[1:]), batch)
+
+            def body(carry, mb):
+                gacc, lacc, macc = carry
+                (l, met), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state["params"], mb)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dtype), gacc, g)
+                macc = jax.tree.map(lambda a, b: a + b, macc, met)
+                return (gacc, lacc + l, macc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), state["params"])
+            m0 = jax.eval_shape(lambda p, mb: loss_fn(p, mb)[1],
+                                state["params"],
+                                jax.tree.map(lambda x: x[0], mbs))
+            m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m0)
+            (grads, loss, metrics), _ = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32), m0), mbs)
+            grads = jax.tree.map(lambda g: g / N, grads)
+            loss = loss / N
+            metrics = jax.tree.map(lambda m: m / N, metrics)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        new_params, new_opt = optimizer.update(grads, state["opt"],
+                                               state["params"], lr)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return {"params": new_params, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    train_step.optimizer = optimizer
+    return train_step
+
+
+def init_train_state(model: Model, cfg: ModelConfig, key, optimizer):
+    params = model.init(key)
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_prefill_step(model: Model, cfg: ModelConfig, *, capacity: int,
+                      window: int = 0):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, capacity, window=window)
+    return prefill_step
+
+
+def make_decode_step(model: Model, cfg: ModelConfig, *, window: int = 0):
+    def decode_step(params, caches, token, position):
+        return model.decode_step(params, caches, token, position,
+                                 window=window)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct stand-ins for the dry-run (no allocation)
+# ---------------------------------------------------------------------------
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def decode_window(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Sub-quadratic path: long_500k uses a sliding window for attention
+    layers (SSM layers are O(1) anyway). 0 = full attention."""
+    if shape.kind == "long_decode":
+        return cfg.long_context_window
+    return cfg.sliding_window
+
+
+def cache_capacity(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    w = decode_window(cfg, shape)
+    return min(shape.seq_len, w) if w else shape.seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                dtype: str = "bfloat16") -> Dict[str, Any]:
+    """Batch ShapeDtypeStructs for (arch, shape). For decode kinds this is
+    the (token, position) pair; caches are built separately (they are
+    threaded state, not per-step host input)."""
+    B, S = shape.global_batch, shape.seq_len
+    P = _prefix_len(cfg)
+    S_tok = S - P if cfg.input_mode == "embeddings" else S
+    f32 = jnp.float32
+    out: Dict[str, Any] = {}
+    if shape.kind in ("train", "prefill"):
+        out["tokens"] = sds((B, S_tok), jnp.int32)
+        if cfg.input_mode == "embeddings":
+            out["prefix_embeds"] = sds((B, P, cfg.d_model), dtype)
+        if cfg.input_mode == "encdec":
+            out["frame_embeds"] = sds((B, cfg.num_prefix_embeddings,
+                                       cfg.d_model), dtype)
+        if shape.kind == "train":
+            for k in ("loss_mask", "advantages", "old_logp", "ref_logp",
+                      "returns"):
+                out[k] = sds((B, S_tok), f32)
+    else:  # decode kinds
+        out["token"] = sds((B,), jnp.int32)
+        out["position"] = sds((B,), jnp.int32)
+    return out
+
+
+def cache_specs(model: Model, cfg: ModelConfig, shape: ShapeConfig,
+                dtype: str = "bfloat16"):
+    """ShapeDtypeStructs of the decode caches for (arch, shape)."""
+    cap = cache_capacity(cfg, shape)
+    B = shape.global_batch
+    segs = jax.eval_shape(
+        lambda: model.init_cache(B, cap, jnp.dtype(dtype)))
+    caches = {"segments": segs, "cross_kv": None}
+    if cfg.input_mode == "encdec":
+        Se = cfg.num_prefix_embeddings
+        kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim()
+        out = []
+        for seg in model.segments:
+            out.append(tuple(
+                (sds((seg.n_groups, B, Se, kvh, hd), dtype),
+                 sds((seg.n_groups, B, Se, kvh, hd), dtype))
+                for _ in range(len(seg.kinds))))
+        caches["cross_kv"] = out
+    return caches

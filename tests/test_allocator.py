@@ -1,0 +1,120 @@
+"""Property-based tests for the caching-allocator simulator."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocator import (KB, MB, CachingAllocator, _round_size,
+                                  _segment_size)
+
+
+def test_round_size():
+    assert _round_size(1) == 512
+    assert _round_size(512) == 512
+    assert _round_size(513) == 1024
+    assert _round_size(0) == 512
+
+
+def test_segment_size_classes():
+    assert _segment_size(512) == 2 * MB              # small pool
+    assert _segment_size(MB) == 2 * MB
+    assert _segment_size(2 * MB) == 20 * MB          # medium -> 20MB buffer
+    assert _segment_size(30 * MB) == 30 * MB         # large: exact 2MB mult
+
+
+def test_malloc_free_roundtrip():
+    a = CachingAllocator()
+    h = a.malloc(10 * MB)
+    assert a.allocated >= 10 * MB
+    assert a.reserved >= a.allocated
+    a.free(h)
+    assert a.allocated == 0
+    assert a.reserved > 0                            # cached, not released
+    released = a.empty_cache()
+    assert released > 0
+    assert a.reserved == 0
+
+
+def test_reuse_prevents_growth():
+    a = CachingAllocator()
+    h = a.malloc(8 * MB)
+    a.free(h)
+    r0 = a.reserved
+    for _ in range(10):
+        h = a.malloc(8 * MB)
+        a.free(h)
+    assert a.reserved == r0
+
+
+def test_ascending_sizes_grow_reserved():
+    """The non-reusable ascending pattern (dynamic KV cache growth)."""
+    a = CachingAllocator()
+    prev = None
+    for t in range(1, 30):
+        h = a.malloc(21 * MB + t * MB)               # each bigger than cached
+        if prev is not None:
+            a.free(prev)
+        prev = h
+    assert a.reserved > a.allocated * 2              # junk accumulates
+    a.free(prev)
+    a.empty_cache()
+    assert a.reserved == 0
+
+
+def test_capacity_forced_flush():
+    a = CachingAllocator(capacity=100 * MB)
+    hs = [a.malloc(20 * MB) for _ in range(3)]
+    for h in hs:
+        a.free(h)
+    # next big request exceeds capacity together with cached segments ->
+    # forced flush instead of OOM
+    h = a.malloc(80 * MB)
+    assert a.stats.n_forced_flush == 1
+    with pytest.raises(MemoryError):
+        a.malloc(90 * MB)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.booleans(),
+                          st.integers(min_value=1, max_value=64 * MB)),
+                min_size=1, max_size=120))
+def test_invariants_random_traffic(ops):
+    """reserved >= allocated always; empty_cache with no live blocks zeroes
+    reserved; stats are consistent."""
+    a = CachingAllocator()
+    live = []
+    for is_alloc, size in ops:
+        if is_alloc or not live:
+            live.append(a.malloc(size))
+        else:
+            a.free(live.pop())
+        assert a.reserved >= a.allocated >= 0
+        assert a.stats.peak_reserved >= a.reserved
+        assert a.stats.peak_allocated >= a.allocated
+    for h in live:
+        a.free(h)
+    assert a.allocated == 0
+    a.empty_cache()
+    assert a.reserved == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=8 * MB),
+                min_size=2, max_size=40),
+       st.randoms())
+def test_coalescing_returns_full_segments(sizes, rnd):
+    """After freeing everything, every segment must be one free block
+    (perfect coalescing) so empty_cache releases all reserved bytes."""
+    a = CachingAllocator()
+    hs = [a.malloc(s) for s in sizes]
+    rnd.shuffle(hs)
+    for h in hs:
+        a.free(h)
+    for seg in a.segments:
+        n_blocks = 0
+        b = seg.head
+        while b is not None:
+            n_blocks += 1
+            assert b.free
+            b = b.next
+        assert n_blocks == 1
+    a.empty_cache()
+    assert a.reserved == 0

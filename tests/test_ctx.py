@@ -1,0 +1,55 @@
+"""Sharding context: divisibility-aware entry resolution and no-op
+behavior without a mesh."""
+import jax.numpy as jnp
+import pytest
+
+from repro.sharding import ctx
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+def test_constrain_noop_without_mesh():
+    ctx.set_current_mesh(None)
+    x = jnp.ones((4, 6))
+    assert ctx.constrain(x, "dp", "model") is x
+
+
+@pytest.mark.parametrize("entry,dim,expect", [
+    ("dp", 32, ("pod", "data")),        # divisible by pod*data=32
+    ("dp", 16, "data"),                 # only data divides
+    ("dp", 7, None),                    # nothing divides
+    ("model", 32, "model"),
+    ("model", 7, None),
+    (None, 5, None),
+])
+def test_resolve_entry_multipod(entry, dim, expect):
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    assert ctx.resolve_entry(mesh, entry, dim) == expect
+
+
+def test_use_mesh_context_manager():
+    mesh = FakeMesh({"data": 2, "model": 2})
+    assert ctx.current_mesh() is None
+    with ctx.use_mesh(mesh):
+        assert ctx.current_mesh() is mesh
+    assert ctx.current_mesh() is None
+
+
+def test_rollout_sampling_determinism_and_topk():
+    import jax
+    from repro.rlhf.rollout import sample_token
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (4, 64))
+    t1, lp1 = sample_token(key, logits, temperature=1.0, top_k=4)
+    t2, lp2 = sample_token(key, logits, temperature=1.0, top_k=4)
+    assert (t1 == t2).all()
+    # top-k=1 equals argmax
+    t3, _ = sample_token(key, logits, temperature=1.0, top_k=1)
+    assert (t3 == logits.argmax(-1)).all()
+    # greedy
+    t4, _ = sample_token(key, logits, temperature=0.0)
+    assert (t4 == logits.argmax(-1)).all()

@@ -1,0 +1,60 @@
+"""HLO-text analyzer: trip-count multiplication, dot flops, collective
+byte accounting — against a hand-written HLO module."""
+from repro.launch.hlo_analysis import analyze, parse_module
+
+HLO = """
+HloModule test
+
+%body.1 (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %t = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %d = f32[8,16]{1,0} dot(%t, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%d), replica_groups={}, to_apply=%sum.2
+  ROOT %r = (s32[], f32[8,16]) tuple(%t, %ar)
+}
+
+%cond.3 (p2: (s32[], f32[8,16])) -> pred[] {
+  %p2 = (s32[], f32[8,16]) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+%sum.2 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main.9 (x: f32[8,16]) -> f32[8,16] {
+  %x = f32[8,16]{1,0} parameter(0)
+  %init = (s32[], f32[8,16]) tuple(%x, %x)
+  %w2 = (s32[], f32[8,16]) while(%init), condition=%cond.3, body=%body.1, backend_config={"known_trip_count":{"n":"5"}}
+  %ag = f32[32,16]{1,0} all-gather(%x), dimensions={0}
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%w2), index=1
+}
+"""
+
+
+def test_parse_computations():
+    comps, symbols, entry = parse_module(HLO)
+    assert entry == "main.9"
+    assert "body.1" in comps and "cond.3" in comps
+    whiles = [o for o in comps["main.9"].ops if o.opcode == "while"]
+    assert len(whiles) == 1
+    assert whiles[0].trip == 5
+    assert set(whiles[0].calls) == {"cond.3", "body.1"}
+
+
+def test_trip_count_multiplies_flops_and_collectives():
+    s = analyze(HLO)
+    # dot: 2 * 8*16 * 16 = 4096 flops, x5 trips
+    assert s.flops == 5 * 2 * 8 * 16 * 16
+    # all-reduce f32[8,16] = 512B x2 (ring) x5; all-gather 32*16*4 = 2048B x1
+    assert s.coll_bytes["all-reduce"] == 5 * 512 * 2
+    assert s.coll_bytes["all-gather"] == 2048
+
+
+def test_symbols_resolve_operand_shapes():
+    comps, symbols, _ = parse_module(HLO)
+    assert symbols["d"] == [("f32", "8,16")]
+    assert symbols["ag"] == [("f32", "32,16")]

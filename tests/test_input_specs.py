@@ -1,0 +1,64 @@
+"""input_specs / batch_pspecs / cache_specs consistency for every
+(arch x shape) pair — pure-Python spec checks, no compilation."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config
+from repro.models import Model
+from repro.sharding import ShardingStrategy, batch_pspecs
+from repro.steps import cache_capacity, cache_specs, decode_window, \
+    input_specs
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_specs_cover_inputs(arch, shape_name):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    batch = input_specs(cfg, shape)
+    if shape.kind in ("train", "prefill"):
+        specs = batch_pspecs(cfg, shape, MESH)
+        for k, sds in batch.items():
+            assert k in specs, (arch, shape_name, k)
+            spec = specs[k]
+            assert len(spec) <= len(sds.shape)
+        # token count covers the sequence (minus VLM prefix)
+        P_ = cfg.num_prefix_embeddings if cfg.input_mode == "embeddings" else 0
+        assert batch["tokens"].shape == (shape.global_batch,
+                                         shape.seq_len - P_)
+    else:
+        assert batch["token"].shape == (shape.global_batch,)
+        assert batch["position"].shape == (shape.global_batch,)
+
+
+@pytest.mark.parametrize("arch", ["llama3_2_3b", "deepseek_v3_671b",
+                                  "mamba2_370m", "jamba_v0_1_52b",
+                                  "seamless_m4t_large_v2"])
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_specs_shapes(arch, shape_name):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = Model(cfg)
+    caches = cache_specs(model, cfg, shape)
+    cap = cache_capacity(cfg, shape)
+    w = decode_window(cfg, shape)
+    if shape.kind == "long_decode" and cfg.num_heads:
+        assert cap == min(shape.seq_len, cfg.long_context_window)
+    for seg, segspec in zip(model.segments, caches["segments"]):
+        for i, kind in enumerate(seg.kinds):
+            leaf = jax.tree.leaves(segspec[f"slot{i}"])[0]
+            assert leaf.shape[0] == seg.n_groups
+            assert leaf.shape[1] == shape.global_batch
+    if cfg.input_mode == "encdec":
+        assert caches["cross_kv"] is not None

@@ -1,0 +1,133 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as R
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.ssd_scan import ssd_scan
+from repro.models.flash import flash_sdpa
+
+
+def _tol(dt):
+    return 2e-2 if dt == jnp.bfloat16 else 5e-5
+
+
+@pytest.mark.parametrize("B,Sq,Sk,H,K,D,causal,window,bq,bk,dt", [
+    (2, 128, 128, 4, 2, 64, True, 0, 64, 64, jnp.float32),
+    (1, 256, 256, 8, 8, 128, True, 64, 128, 128, jnp.bfloat16),
+    (2, 100, 100, 6, 2, 32, True, 0, 64, 64, jnp.float32),
+    (1, 64, 192, 4, 1, 64, False, 0, 32, 64, jnp.float32),
+    (1, 96, 96, 2, 2, 128, True, 32, 32, 32, jnp.bfloat16),
+])
+def test_flash_attention_kernel(B, Sq, Sk, H, K, D, causal, window, bq, bk, dt):
+    ks = jax.random.split(jax.random.PRNGKey(B + Sq), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), dt)
+    k = jax.random.normal(ks[1], (B, Sk, K, D), dt)
+    v = jax.random.normal(ks[2], (B, Sk, K, D), dt)
+    out = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                              block_q=bq, block_k=bk)
+    ref = R.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=_tol(dt))
+
+
+@pytest.mark.parametrize("B,Sq,Sk,H,K,D,causal,window", [
+    (2, 64, 64, 8, 2, 32, True, 0),
+    (2, 128, 128, 4, 4, 16, True, 24),
+    (1, 37, 53, 6, 3, 8, False, 0),
+])
+def test_flash_xla_twin_grad(B, Sq, Sk, H, K, D, causal, window):
+    """The XLA flash path (used inside the models) must match the oracle in
+    both forward and gradients."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D))
+    k = jax.random.normal(ks[1], (B, Sk, K, D))
+    v = jax.random.normal(ks[2], (B, Sk, K, D))
+    f_ref = lambda q, k, v: (R.attention_ref(
+        q, k, v, causal=causal, window=window) ** 2).sum()
+    f_fl = lambda q, k, v: (flash_sdpa(q, k, v, causal, window, 16) ** 2).sum()
+    np.testing.assert_allclose(f_fl(q, k, v), f_ref(q, k, v), rtol=1e-5)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    gf = jax.grad(f_fl, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gr, gf):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+@pytest.mark.parametrize("B,H,K,D,C,window,bc,dt", [
+    (2, 8, 2, 64, 128, 0, 64, jnp.float32),
+    (1, 4, 4, 32, 96, 24, 32, jnp.float32),
+    (2, 6, 1, 128, 256, 0, 512, jnp.bfloat16),
+])
+def test_decode_attention_kernel(B, H, K, D, C, window, bc, dt):
+    ks = jax.random.split(jax.random.PRNGKey(H + C), 4)
+    q = jax.random.normal(ks[0], (B, H, D), dt)
+    kc = jax.random.normal(ks[1], (B, C, K, D), dt)
+    vc = jax.random.normal(ks[2], (B, C, K, D), dt)
+    position = jnp.array([C + 5] * B) if window else jnp.array([C - 2] * B)
+    slots = jnp.arange(C)[None, :].repeat(B, 0)
+    base = position[:, None] - (position[:, None] % C)
+    pos = jnp.where(slots <= (position[:, None] % C), base + slots,
+                    base - C + slots)
+    pos = jnp.where(pos < 0, -1, pos).astype(jnp.int32)
+    out = decode_attention(q, kc, vc, pos, position, window=window,
+                           block_c=bc)
+    ref = R.decode_attention_ref(q, kc, vc, pos, position, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=_tol(dt))
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk,dt", [
+    (2, 128, 4, 32, 16, 32, jnp.float32),
+    (1, 256, 8, 64, 128, 128, jnp.float32),
+    (2, 64, 2, 16, 8, 16, jnp.float32),
+    (1, 128, 4, 64, 64, 64, jnp.bfloat16),
+])
+def test_ssd_scan_kernel(B, S, H, P, N, chunk, dt):
+    ks = jax.random.split(jax.random.PRNGKey(S), 4)
+    x = (jax.random.normal(ks[0], (B, S, H, P)) * 0.5).astype(dt)
+    a = -jnp.abs(jax.random.normal(ks[1], (B, S, H))) * 0.3
+    b = (jax.random.normal(ks[2], (B, S, N)) * 0.5).astype(dt)
+    c = (jax.random.normal(ks[3], (B, S, N)) * 0.5).astype(dt)
+    y, fin = ssd_scan(x, a.astype(dt), b, c, chunk=chunk)
+    yr, finr = R.ssd_ref(x.astype(jnp.float32), a, b.astype(jnp.float32),
+                         c.astype(jnp.float32))
+    atol = 5e-2 if dt == jnp.bfloat16 else 1e-3
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=atol)
+    np.testing.assert_allclose(np.asarray(fin, np.float32),
+                               np.asarray(finr, np.float32), atol=atol)
+
+
+def test_ssd_model_chunked_matches_sequential():
+    """The model's XLA chunked SSD (matmul form) vs the sequential oracle."""
+    from repro.models.mamba import ssd_chunked
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    B, S, H, P, N = 2, 96, 4, 32, 16
+    x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    a = -jnp.abs(jax.random.normal(ks[1], (B, S, H))) * 0.3
+    b = jax.random.normal(ks[2], (B, S, N)) * 0.5
+    c = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    y, fin = ssd_chunked(x, a, b, c, 32)
+    yr, finr = R.ssd_ref(x, a, b, c)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(finr), atol=1e-4)
+
+
+@pytest.mark.parametrize("shape,dt", [
+    ((4, 64, 256), jnp.bfloat16),
+    ((3, 100), jnp.float32),
+    ((2, 7, 384), jnp.bfloat16),
+    ((1, 1, 128), jnp.float32),
+])
+def test_rmsnorm_kernel(shape, dt):
+    ks = jax.random.split(jax.random.PRNGKey(shape[-1]), 2)
+    x = jax.random.normal(ks[0], shape, dt)
+    s = jax.random.normal(ks[1], shape[-1:])
+    out = rmsnorm(x, s)
+    ref = R.rmsnorm_ref(x, s)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=_tol(dt))

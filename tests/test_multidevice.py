@@ -1,0 +1,106 @@
+"""Multi-device tests run in subprocesses (they need
+--xla_force_host_platform_device_count BEFORE jax initializes, which the
+main pytest process must not set)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, devices: int = 8, timeout: int = 900):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(_ROOT, "src"),
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+def test_moe_shard_map_matches_fallback():
+    _run("""
+        import jax, jax.numpy as jnp, dataclasses
+        from repro.configs import get_config
+        from repro.models import moe as MOE
+        from repro.models import moe_shard_map as MSM
+        from repro.sharding import ctx
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        for arch in ("granite_moe_3b_a800m", "deepseek_v3_671b"):
+            cfg = dataclasses.replace(get_config(arch).smoke(),
+                                      param_dtype="float32")
+            params = MOE.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+            x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, cfg.d_model)) * 0.5
+            ctx.set_current_mesh(None)
+            y_ref, aux_ref = MOE.moe_fwd(params, x, cfg=cfg, capacity_factor=8.0)
+            g_ref = jax.grad(lambda p, x: MOE.moe_fwd(p, x, cfg=cfg,
+                             capacity_factor=8.0)[0].sum())(params, x)
+            ctx.set_current_mesh(mesh)
+            assert MSM.usable(cfg, 4, 32)
+            y, aux = jax.jit(lambda p, x: MOE.moe_fwd(p, x, cfg=cfg,
+                             capacity_factor=8.0))(params, x)
+            g = jax.jit(jax.grad(lambda p, x: MOE.moe_fwd(p, x, cfg=cfg,
+                        capacity_factor=8.0)[0].sum()))(params, x)
+            ctx.set_current_mesh(None)
+            assert float(jnp.abs(y - y_ref).max()) < 1e-5, arch
+            assert abs(float(aux - aux_ref)) < 1e-6, arch
+            for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(g_ref)):
+                assert float(jnp.abs(a - b).max()) < 1e-5, arch
+            print(arch, "OK")
+    """)
+
+
+def test_sharded_train_step_matches_single_device():
+    """The same train step on a 4-device mesh (with all constraints active)
+    must produce the same loss as the meshless single-device run."""
+    _run("""
+        import jax, jax.numpy as jnp, dataclasses
+        from repro.configs import get_config
+        from repro.models import Model
+        from repro.sharding import ctx
+        from repro.steps import make_train_step, init_train_state
+        cfg = dataclasses.replace(get_config("llama3_2_3b").smoke(),
+                                  param_dtype="float32")
+        m = Model(cfg)
+        ts = make_train_step(m, cfg, kind="ppo")
+        state = init_train_state(m, cfg, jax.random.PRNGKey(0), ts.optimizer)
+        B, S = 4, 32
+        k = jax.random.PRNGKey(1)
+        batch = {"tokens": jax.random.randint(k, (B, S), 0, cfg.vocab_size),
+                 "loss_mask": jnp.ones((B, S)),
+                 "advantages": jax.random.normal(k, (B, S)),
+                 "old_logp": -jnp.ones((B, S)) * 3,
+                 "ref_logp": -jnp.ones((B, S)) * 3,
+                 "returns": jnp.zeros((B, S))}
+        ctx.set_current_mesh(None)
+        _, m1 = jax.jit(ts)(state, batch)
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        ctx.set_current_mesh(mesh)
+        _, m2 = jax.jit(ts)(state, batch)
+        ctx.set_current_mesh(None)
+        d = abs(float(m1["loss"]) - float(m2["loss"]))
+        assert d < 1e-4, (float(m1["loss"]), float(m2["loss"]))
+        print("loss match", float(m1["loss"]), float(m2["loss"]))
+    """)
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("llama3_2_3b", "train_4k"),
+    ("mamba2_370m", "decode_32k"),
+    ("granite_moe_3b_a800m", "prefill_32k"),
+    ("jamba_v0_1_52b", "long_500k"),
+])
+def test_dryrun_single_combo(arch, shape):
+    """One (arch x shape) dry-run compile on the 512-host-device mesh."""
+    _run(f"""
+        from repro.launch.dryrun import run_one
+        rec = run_one("{arch}", "{shape}", verbose=False)
+        assert rec["ok"]
+        print(rec["arch"], rec["shape"], rec["bytes_per_device"]["temps"])
+    """, devices=512, timeout=1200)

@@ -1,0 +1,108 @@
+"""The paper's claims (R1-R3), asserted against the trace-driven allocator
+simulation at the paper's own workload scale (OPT-1.3b actor/ref +
+OPT-350m critic/reward, DP=4, LoRA-128, naive HF-style generation)."""
+import pytest
+
+from repro.configs import get_config
+from repro.core import (PAPER_STRATEGIES, build_rlhf_phases,
+                        lora_trainable_fraction, run_iteration)
+
+GEN_LENS = [180, 256, 199, 243]
+
+
+@pytest.fixture(scope="module")
+def study():
+    actor = get_config("opt_1_3b")
+    critic = get_config("opt_350m")
+    tf = lora_trainable_fraction(actor.param_count(), actor, 128)
+    plans = {}
+    persist = {}
+    for ckpt in (False, True):
+        ps, pe = [], None
+        for gl in GEN_LENS:
+            ph, pe = build_rlhf_phases(actor, critic, gen_len=gl,
+                                       naive_generation=True, grad_ckpt=ckpt)
+            ps.append(ph)
+        plans[ckpt], persist[ckpt] = ps, pe
+    strat = {s.name: s for s in PAPER_STRATEGIES}
+
+    def run(strategy_name, policy, **kw):
+        s = strat[strategy_name]
+        return run_iteration(plans[s.grad_ckpt], persist[s.grad_ckpt], s,
+                             policy, ndp=4, trainable_fraction=tf, **kw)
+    return run
+
+
+def test_r1_fragmentation_overhead_exists(study):
+    """R1: peak reserved carries a significant fragmentation overhead."""
+    r = study("None", "none")
+    overhead = r.frag_at_peak / (r.peak_reserved - r.frag_at_peak)
+    assert overhead > 0.15, overhead        # paper: 46% for all-enabled
+
+
+def test_r1_fragmentation_accumulates_from_inference(study):
+    """R1: most fragmentation comes from the inference phases — cleaning
+    only after inference recovers almost all of it."""
+    base = study("None", "none")
+    after_inf = study("None", "after_inference")
+    assert after_inf.frag_at_peak < 0.3 * base.frag_at_peak
+
+
+def test_r3_empty_cache_reduces_consumption(study):
+    """R3: empty_cache after inference cuts peak consumption by >=15%
+    (paper: 25% average) at <=8% time overhead (paper: 2%)."""
+    base = study("None", "none")
+    fixed = study("None", "after_inference")
+    reduction = 1 - fixed.peak_reserved / base.peak_reserved
+    assert reduction >= 0.15, reduction
+    overhead = fixed.time_s / base.time_s - 1
+    assert overhead <= 0.08, overhead
+
+
+def test_r3_placement_ablation(study):
+    """R3: after_inference ~ after_all; both strictly better than none."""
+    none = study("None", "none").peak_reserved
+    ai = study("None", "after_inference").peak_reserved
+    aa = study("None", "after_all").peak_reserved
+    assert ai < none and aa < none
+    assert abs(ai - aa) / aa < 0.10
+
+
+def test_r2_zero3_raises_fragmentation(study):
+    """R2: ZeRO-3's per-layer gather churn raises fragmentation vs ZeRO-1."""
+    z1 = study("ZeRO-1", "none")
+    z3 = study("ZeRO-3", "none")
+    assert z3.frag_at_peak >= z1.frag_at_peak * 0.9
+    # ...but ZeRO-3 still reduces *allocated* (weights sharded)
+    assert z3.peak_allocated < z1.peak_allocated
+
+
+def test_r2_offload_and_ckpt_reduce_consumption(study):
+    none = study("None", "none")
+    off = study("ZeRO-3 + CPU Offloading", "none")
+    ck = study("Gradient Checkpointing", "none")
+    assert off.peak_reserved < none.peak_reserved
+    assert ck.peak_allocated < none.peak_allocated
+
+
+def test_framework_static_cache_removes_decode_churn():
+    """Beyond-paper: our fixed-capacity donated KV cache (vs the HF-style
+    growing cache the paper studied) removes the decode-phase reserved
+    growth entirely."""
+    actor = get_config("opt_1_3b")
+    critic = get_config("opt_350m")
+    tf = lora_trainable_fraction(actor.param_count(), actor, 128)
+    strat = PAPER_STRATEGIES[0]
+
+    def decode_growth(naive):
+        ph, persist = build_rlhf_phases(actor, critic, gen_len=256,
+                                        naive_generation=naive)
+        r = run_iteration([ph], persist, strat, "none", ndp=4,
+                          trainable_fraction=tf, capacity=None)
+        recs = {p.name: p for p in r.phase_records}
+        return (recs["rollout_decode"].reserved_end
+                - recs["rollout_prefill"].reserved_end)
+
+    naive = decode_growth(True)
+    ours = decode_growth(False)
+    assert ours < 0.5 * naive, (ours, naive)

@@ -1,0 +1,110 @@
+"""PPO math: GAE vs a hand-rolled loop, whitening properties, KL-shaped
+rewards, and clipped-loss behavior."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.rlhf.ppo import gae, kl_shaped_rewards, whiten
+from repro.steps import critic_loss, ppo_actor_loss
+
+
+def _gae_numpy(rewards, values, mask, gamma, lam):
+    B, S = rewards.shape
+    adv = np.zeros((B, S))
+    for b in range(B):
+        a = 0.0
+        vn = 0.0
+        for t in reversed(range(S)):
+            delta = rewards[b, t] + gamma * vn * mask[b, t] - values[b, t]
+            a = delta + gamma * lam * a * mask[b, t]
+            adv[b, t] = a
+            vn = values[b, t]
+    return adv * mask
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4), st.integers(2, 12), st.floats(0.9, 1.0),
+       st.floats(0.8, 1.0), st.randoms())
+def test_gae_matches_reference_loop(B, S, gamma, lam, rnd):
+    rng = np.random.RandomState(rnd.randint(0, 2**31))
+    rewards = rng.randn(B, S).astype(np.float32)
+    values = rng.randn(B, S).astype(np.float32)
+    mask = (rng.rand(B, S) > 0.2).astype(np.float32)
+    adv, ret = gae(jnp.asarray(rewards), jnp.asarray(values),
+                   jnp.asarray(mask), gamma=gamma, lam=lam)
+    ref = _gae_numpy(rewards, values, mask, gamma, lam)
+    np.testing.assert_allclose(np.asarray(adv), ref, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(ret), ref + values * 0 + np.asarray(adv) + values - np.asarray(adv), atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4), st.integers(4, 32), st.randoms())
+def test_whiten_zero_mean_unit_var(B, S, rnd):
+    rng = np.random.RandomState(rnd.randint(0, 2**31))
+    x = jnp.asarray(rng.randn(B, S).astype(np.float32) * 5 + 3)
+    mask = jnp.asarray((rng.rand(B, S) > 0.3).astype(np.float32))
+    if float(mask.sum()) < 2:
+        return
+    w = whiten(x, mask)
+    n = float(mask.sum())
+    mean = float((w * mask).sum() / n)
+    var = float((jnp.square(w) * mask).sum() / n)
+    assert abs(mean) < 1e-3
+    assert abs(var - 1.0) < 1e-2
+
+
+def test_kl_rewards_terminal_placement():
+    logp = jnp.zeros((2, 5))
+    ref = jnp.zeros((2, 5))
+    mask = jnp.asarray([[1, 1, 1, 0, 0], [1, 1, 1, 1, 1]], jnp.float32)
+    r = kl_shaped_rewards(logp, ref, jnp.asarray([2.0, -1.0]), mask)
+    np.testing.assert_allclose(np.asarray(r[0]), [0, 0, 2.0, 0, 0])
+    np.testing.assert_allclose(np.asarray(r[1]), [0, 0, 0, 0, -1.0])
+
+
+def test_ppo_loss_clipping_is_pessimistic():
+    """Clipped objective must never be better (lower loss) than unclipped
+    when the ratio moves in the advantage's favour beyond the clip."""
+    B, S, V = 1, 6, 16
+    logits = jnp.zeros((B, S, V))
+    tokens = jnp.zeros((B, S), jnp.int32)
+    base = {
+        "tokens": tokens,
+        "loss_mask": jnp.ones((B, S), jnp.float32),
+        "advantages": jnp.ones((B, S), jnp.float32),
+        "ref_logp": jnp.full((B, S), -np.log(V), jnp.float32),
+    }
+    logp_now = -np.log(V)
+    # old logp much lower -> ratio = e^2 >> 1+eps -> clipped at 1.2
+    loss_clip, _ = ppo_actor_loss(
+        logits, dict(base, old_logp=jnp.full((B, S), logp_now - 2.0)),
+        kl_coef=0.0)
+    unclipped_obj = -np.exp(2.0)          # what no-clipping would give
+    assert float(loss_clip) >= unclipped_obj + 1.0   # pessimistic vs ratio
+    np.testing.assert_allclose(float(loss_clip), -1.2, atol=1e-5)
+    # ratio == 1: loss = -mean(adv) over valid (non-first) positions
+    loss_eq, _ = ppo_actor_loss(
+        logits, dict(base, old_logp=jnp.full((B, S), logp_now)), kl_coef=0.0)
+    np.testing.assert_allclose(float(loss_eq), -1.0, atol=1e-5)
+    # clipped region has zero gradient wrt logits
+    g = jax.grad(lambda lg: ppo_actor_loss(
+        lg, dict(base, old_logp=jnp.full((B, S), logp_now - 2.0)),
+        kl_coef=0.0)[0])(logits)
+    assert float(jnp.abs(g).max()) < 1e-7
+
+
+def test_critic_loss_value_clipping():
+    B, S = 1, 4
+    batch = {
+        "tokens": jnp.zeros((B, S), jnp.int32),
+        "loss_mask": jnp.ones((B, S), jnp.float32),
+        "returns": jnp.zeros((B, S), jnp.float32),
+        "old_values": jnp.zeros((B, S), jnp.float32),
+    }
+    # prediction moved far from old values -> clipped term dominates
+    v_far = jnp.full((B, S), 10.0)
+    loss_far, _ = critic_loss(v_far, batch)
+    v_near = jnp.full((B, S), 0.1)
+    loss_near, _ = critic_loss(v_near, batch)
+    assert float(loss_far) > float(loss_near)

@@ -1,0 +1,90 @@
+"""Continuous-batching scheduler + GRPO trainer."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.rlhf.grpo import GRPOConfig, GRPOTrainer
+from repro.rlhf.reward import make_target_token_reward
+from repro.serving import ContinuousBatcher
+
+
+def _tiny_cfg():
+    return dataclasses.replace(
+        get_config("llama3_2_3b").smoke(), num_layers=2, d_model=128,
+        d_ff=256, vocab_size=64, num_heads=4, num_kv_heads=2, head_dim=32)
+
+
+def test_continuous_batcher_drains_all_requests():
+    cfg = _tiny_cfg()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cb = ContinuousBatcher(model, cfg, params, slots=3, capacity=64)
+    rng = np.random.RandomState(0)
+    reqs = [cb.submit(rng.randint(0, 64, size=8), max_new_tokens=5 + i)
+            for i in range(7)]
+    done = cb.run_until_drained()
+    assert len(done) == 7
+    assert all(len(r.out_tokens) == r.max_new_tokens for r in done)
+    assert all(r.done for r in reqs)
+    # with 3 slots and 7 requests, batching must overlap: far fewer steps
+    # than sum of lengths
+    assert cb.steps < sum(5 + i for i in range(7))
+
+
+def test_continuous_batcher_matches_isolated_decode():
+    """A request served alongside others must produce the same tokens as
+    the same request served alone (slot isolation)."""
+    cfg = _tiny_cfg()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = np.arange(8) % cfg.vocab_size
+
+    def greedy_run(slots, extra):
+        cb = ContinuousBatcher(model, cfg, params, slots=slots,
+                               capacity=64, temperature=0.0, seed=7)
+        r = cb.submit(prompt, 10)
+        rng = np.random.RandomState(1)
+        for _ in range(extra):
+            cb.submit(rng.randint(0, 64, size=8), 10)
+        cb.run_until_drained()
+        return r.out_tokens
+
+    alone = greedy_run(1, 0)
+    crowded = greedy_run(3, 2)
+    assert alone == crowded
+
+
+def test_continuous_batcher_eos_frees_slot():
+    cfg = _tiny_cfg()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cb = ContinuousBatcher(model, cfg, params, slots=2, capacity=64,
+                           temperature=1.0, eos_id=3, seed=3)
+    for i in range(4):
+        cb.submit((np.arange(8) + i) % cfg.vocab_size, 30)
+    done = cb.run_until_drained()
+    assert len(done) == 4
+    for r in done:
+        if 3 in r.out_tokens:
+            assert r.out_tokens[-1] == 3 or len(r.out_tokens) == 30
+
+
+def test_grpo_improves_verifiable_reward():
+    cfg = _tiny_cfg()
+    rl = GRPOConfig(prompt_len=8, gen_len=12, group_size=8, lr=3e-3,
+                    kl_coef=0.0)
+    tr = GRPOTrainer(cfg, rl, jax.random.PRNGKey(0),
+                     make_target_token_reward(7))
+    key = jax.random.PRNGKey(1)
+    rewards = []
+    for step in range(18):
+        k1, k2, key = jax.random.split(key, 3)
+        prompts = jax.random.randint(k1, (4, 8), 0, cfg.vocab_size)
+        m = tr.train_step(prompts, k2)
+        rewards.append(m["mean_reward"])
+    assert sum(rewards[-5:]) / 5 > sum(rewards[:5]) / 5 + 0.05, rewards
