@@ -7,6 +7,7 @@ CSV rows (and the detailed tables beneath).
   table2     — A100-80GB grid: OPT-1.3b / OPT-6.7b / Llama-2-7b, +-ZeRO-3
   placement  — empty_cache placement ablation (paper §3.3)
   generation — naive (HF-style growing cache) vs framework static cache
+  paged      — dense [B, capacity] vs paged KV cache on ragged requests
   kernels    — wall-time microbenches of the XLA flash twin vs dense sdpa
   roofline   — summary of roofline_baseline.json if present
 
@@ -218,6 +219,54 @@ def bench_kernels():
     _csv("kernels", (time.time() - t0) * 1e6)
 
 
+def bench_paged():
+    """Beyond-paper: dense [B, capacity] vs paged KV cache under ragged
+    request lengths — reserved KV bytes and us/token of the serving loop."""
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.serving import ContinuousBatcher
+    t0 = time.time()
+    cfg = dataclasses.replace(
+        get_config("llama3_2_3b").smoke(), num_layers=2, d_model=128,
+        d_ff=256, vocab_size=64, num_heads=4, num_kv_heads=2, head_dim=32)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    slots, capacity = 4, 128
+    # ragged workload: short completions against a worst-case capacity
+    gens = rng.randint(8, 48, size=10)
+    print("\n== paged vs dense KV cache (ragged serving workload) ==")
+    rows = {}
+    for backend in ("dense", "paged"):
+        cb = ContinuousBatcher(model, cfg, params, slots=slots,
+                               capacity=capacity, temperature=0.0, seed=0,
+                               cache_backend=backend, page_size=16)
+        for g in gens:
+            cb.submit(rng.randint(0, 64, size=8), int(g))
+        t1 = time.time()
+        done = cb.run_until_drained()
+        dt = time.time() - t1
+        toks = sum(len(r.out_tokens) for r in done)
+        if backend == "paged":
+            reserved = cb.pm.stats.peak_pages_in_use * cb.pm.page_bytes
+        else:
+            reserved = cb.kv_reserved_bytes()
+        rows[backend] = (reserved, dt / toks * 1e6, toks)
+        print(f"{backend:6s} reserved_kv {reserved/2**20:7.2f} MiB  "
+              f"{dt/toks*1e6:8.1f} us/tok  ({toks} tokens)")
+    dense_r, paged_r = rows["dense"][0], rows["paged"][0]
+    assert paged_r < dense_r, "paged must reserve less than dense"
+    print(f"-> paged reserves {100*(1-paged_r/dense_r):.0f}% less KV than "
+          f"the dense [B, capacity] layout")
+    _csv("paged", (time.time() - t0) * 1e6,
+         f"dense_bytes={dense_r};paged_bytes={paged_r}")
+
+
 def bench_grpo():
     """Beyond-paper: GRPO (2 models) vs PPO (4 models) peak memory."""
     from repro.configs import get_config
@@ -308,6 +357,7 @@ BENCHES = {
     "table2": bench_table2,
     "placement": bench_placement,
     "generation": bench_generation,
+    "paged": bench_paged,
     "kernels": bench_kernels,
     "grpo": bench_grpo,
     "zero_tpu": bench_zero_tpu,

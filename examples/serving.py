@@ -3,7 +3,14 @@ KV cache, streaming live-memory per request — demonstrating that serving
 memory is flat (the framework-level fix for the paper's App-B generate()
 pathology).
 
+With ``--backend paged`` the same traffic runs through the paged KV cache
+(`repro.paged`): a continuous batcher admits ragged-length requests
+against a global page pool and the example prints reserved-KV pages as
+the pool breathes — the vLLM-style layout where reserved memory tracks
+live tokens instead of worst-case capacity.
+
     PYTHONPATH=src python examples/serving.py [--arch mamba2_370m]
+    PYTHONPATH=src python examples/serving.py --backend paged
 """
 import argparse
 import sys
@@ -22,13 +29,50 @@ from repro.models import Model
 from repro.rlhf import Rollout, live_device_bytes
 
 
+def paged_demo(args):
+    from repro.serving import ContinuousBatcher
+    cfg = get_config(args.arch).smoke()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    capacity = 24 + args.gen
+    cb = ContinuousBatcher(model, cfg, params, slots=args.batch,
+                           capacity=capacity, temperature=0.8, top_k=40,
+                           cache_backend="paged", page_size=16)
+    rng = np.random.RandomState(0)
+    n_req = args.batch * args.requests
+    for i in range(n_req):
+        # ragged: every request decodes a different number of tokens
+        cb.submit(rng.randint(0, cfg.vocab_size, size=24),
+                  int(rng.randint(args.gen // 4, args.gen)))
+    print(f"serving {cfg.name} [paged] | pool {cb.pm.num_pages} pages "
+          f"x {cb.pm.page_size} tokens")
+    done, t0 = 0, time.time()
+    while done < n_req:
+        done += len(cb.step())
+        if cb.steps % 8 == 0 or done == n_req:
+            st = cb.pm.stats
+            print(f"step {cb.steps:4d}: done {done:3d}/{n_req}  "
+                  f"pages {st.pages_in_use:3d}/{st.num_pages}  "
+                  f"reserved {cb.pm.reserved_bytes()/2**20:6.2f} MiB  "
+                  f"frag {cb.pm.fragmentation_slots():3d} slots")
+    dense_bytes = cb.B * capacity * (cb.pm.bytes_per_token or 1)
+    print(f"drained in {time.time()-t0:.1f}s | peak "
+          f"{st.peak_pages_in_use * cb.pm.page_bytes / 2**20:.2f} MiB paged "
+          f"vs {dense_bytes/2**20:.2f} MiB dense [B, capacity]")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3_2_3b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--gen", type=int, default=48)
     ap.add_argument("--requests", type=int, default=5)
+    ap.add_argument("--backend", default="dense",
+                    choices=("dense", "paged"))
     args = ap.parse_args()
+    if args.backend == "paged":
+        paged_demo(args)
+        return
 
     cfg = get_config(args.arch).smoke()
     model = Model(cfg)

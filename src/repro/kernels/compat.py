@@ -1,0 +1,11 @@
+"""Version shims over the Pallas TPU API surface.
+
+``pltpu.TPUCompilerParams`` was renamed ``CompilerParams`` upstream;
+resolve whichever this jax ships so the kernels lower on both.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

@@ -41,6 +41,14 @@ try:
 except ImportError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map as _shard_map
 
+import inspect as _inspect
+
+# the "don't verify replication" kwarg was renamed check_rep -> check_vma
+_SHARD_MAP_NO_CHECK = (
+    {"check_vma": False}
+    if "check_vma" in _inspect.signature(_shard_map).parameters
+    else {"check_rep": False})
+
 
 def _dp_axes(mesh):
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
@@ -168,6 +176,6 @@ def moe_fwd_shard_map(params, x, cfg: ModelConfig, *,
                   P("model", None, None), P("model", None, None),
                   P("model", None, None)),
         out_specs=(P(dpspec, "model", None), P()),
-        check_vma=False)
+        **_SHARD_MAP_NO_CHECK)
     y, aux = fn(x, params["router"], w_in, w_gate, w_out)
     return y, aux * e.router_aux_coef

@@ -381,6 +381,89 @@ class Model:
         logits = self.unembed(params, h_out[:, -1:])[:, 0]
         return logits, {"segments": filled, "cross_kv": cross_kv}
 
+    # ------------------------------------------------------- paged kv caches
+    def supports_paged(self) -> bool:
+        """The paged backend covers token-input, attention-only nets (the
+        serving/RLHF configs). MLA/Mamba states are not paged (yet)."""
+        return (self.cfg.input_mode == "tokens"
+                and all(k == ATTN for seg in self.segments for k in seg.kinds))
+
+    def init_paged_pools(self, num_pages: int, page_size: int, dtype) -> list:
+        """Per-segment stacked paged KV pools ([n_groups, P, ps, kvh, hd]
+        per attention slot). The block table is shared across layers; each
+        layer owns its physical pool."""
+        from repro import paged as PG
+        assert self.supports_paged(), \
+            f"paged cache needs attention-only token models, got {self.cfg.name}"
+        pools = []
+        for seg in self.segments:
+            slot_pools = {}
+            for i in range(len(seg.kinds)):
+                c = PG.init_pool(self.cfg, num_pages, page_size, dtype)
+                slot_pools[f"slot{i}"] = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (seg.n_groups,) + x.shape), c)
+            pools.append(slot_pools)
+        return pools
+
+    def paged_prefill(self, params, batch, pools, block_tables, lengths):
+        """Prefill into paged pools: dense single-pass prompt compute, then
+        the per-layer K/V scattered to the sequences' pages (gather/scatter
+        prefill). batch["tokens"] [B, S]; block_tables [B, nb] int32;
+        lengths [B] valid-token counts. Returns (last-position logits
+        [B, V], pools)."""
+        from repro import paged as PG
+        S = batch["tokens"].shape[1]
+        logits, caches = self.prefill(params, batch, S)
+        new_pools = []
+        for si, seg in enumerate(self.segments):
+            slot_pools = {}
+            for i in range(len(seg.kinds)):
+                filled = caches["segments"][si][f"slot{i}"]   # k/v [G,B,S,..]
+                scatter = jax.vmap(PG.scatter_prefill,
+                                   in_axes=(0, 0, 0, None, None))
+                slot_pools[f"slot{i}"] = scatter(
+                    pools[si][f"slot{i}"], filled["k"], filled["v"],
+                    block_tables, lengths)
+            new_pools.append(slot_pools)
+        return logits, new_pools
+
+    def paged_decode_step(self, params, pools, token, position, block_tables,
+                          *, use_kernel: bool = False):
+        """One-token decode over paged pools. token/position [B] (position
+        is the logical index being written); block_tables [B, nb].
+        Returns (logits [B, V], pools)."""
+        from repro.paged.attention import paged_attention_decode
+        cfg = self.cfg
+        h = self.embed(params, token[:, None])
+        new_pools = []
+        for si, seg in enumerate(self.segments):
+            def group_dec(hh, xs, seg=seg):
+                gp, pool = xs
+                new_pool = {}
+                for i in range(len(seg.kinds)):
+                    slot = gp[f"slot{i}"]
+                    x = L.rms_norm(hh, slot["norm1"], cfg.norm_eps)
+                    y, np_ = paged_attention_decode(
+                        slot["mixer"], x, position, pool[f"slot{i}"],
+                        block_tables, cfg, use_kernel=use_kernel)
+                    hh = hh + y
+                    new_pool[f"slot{i}"] = np_
+                    if self._seg_has_ffn(seg, i):
+                        x2 = L.rms_norm(hh, slot["norm2"], cfg.norm_eps)
+                        is_moe = seg.moe_flags[i] and cfg.moe is not None
+                        if is_moe:
+                            y2, _ = MOE.moe_fwd(slot["ffn"], x2, cfg)
+                        else:
+                            y2 = L.mlp_fwd(slot["ffn"], x2, cfg.mlp_gated)
+                        hh = hh + y2
+                return hh, new_pool
+
+            xs = (params[f"segment{si}"], pools[si])
+            h, seg_pool = jax.lax.scan(group_dec, h, xs)
+            new_pools.append(seg_pool)
+        logits = self.unembed(params, h)[:, 0]
+        return logits, new_pools
+
     def decode_step(self, params, caches, token, position, *, window: int = 0):
         """token [B] int32, position [B] int32 -> (logits [B,V], caches)."""
         cfg = self.cfg

@@ -1,0 +1,19 @@
+# Paged KV-cache subsystem: vLLM-style block-paged attention for serving
+# and RLHF rollout. Page bookkeeping (page_manager.py) is host-side and
+# emits allocator-simulator events; device pools + scatter/gather live in
+# paged_cache.py; the Pallas paged decode kernel and its pure-JAX oracle
+# in attention.py.
+from repro.paged.attention import (paged_attention_decode,
+                                   paged_attention_reference,
+                                   paged_decode_attention)
+from repro.paged.page_manager import (PageManager, PageManagerStats,
+                                      PagePoolExhausted)
+from repro.paged.paged_cache import (append_decode, copy_pages, gather_kv,
+                                     init_pool, pool_token_bytes,
+                                     scatter_prefill)
+
+__all__ = ["PageManager", "PageManagerStats", "PagePoolExhausted",
+           "init_pool", "pool_token_bytes", "scatter_prefill",
+           "append_decode", "gather_kv", "copy_pages",
+           "paged_attention_reference", "paged_decode_attention",
+           "paged_attention_decode"]

@@ -1,0 +1,235 @@
+"""Free-list page allocator for the paged KV cache (vLLM-style).
+
+A global pool of ``num_pages`` fixed-size pages; each sequence owns an
+ordered *block table* of page ids covering its logical token range
+``[0, seq_len)``. Pages are ref-counted so a forked sequence (GRPO groups,
+shared system prompts) shares its parent's prompt pages copy-on-write:
+full shared pages stay shared forever (they are append-only), and only a
+*partial* last page is copied when a writer appends into it.
+
+Accounting speaks the same event vocabulary as ``repro.core.trace`` /
+``repro.core.allocator`` — ``(op, vid, nbytes, tag)`` tuples with op in
+{"alloc", "free"} — so a paged serving run can be replayed through the
+paper's :class:`~repro.core.allocator.CachingAllocator` and compared
+against the dense ``[B, capacity]`` layout on reserved bytes and
+fragmentation. Internal fragmentation of the paged layout is bounded by
+construction: at most one partially-filled page per live sequence.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+Event = Tuple[str, int, int, str]   # (op, vid, nbytes, tag) — trace.Event
+
+PAGE_TAG = "kv_page"
+
+
+class PagePoolExhausted(Exception):
+    """Raised when an allocation cannot be served; callers preempt."""
+
+
+@dataclass
+class PageManagerStats:
+    num_pages: int
+    page_size: int
+    pages_in_use: int = 0
+    peak_pages_in_use: int = 0
+    n_page_alloc: int = 0
+    n_page_free: int = 0
+    n_cow_copies: int = 0
+    n_forks: int = 0
+
+
+@dataclass
+class _Seq:
+    pages: List[int] = field(default_factory=list)
+    length: int = 0            # logical tokens written
+
+
+class PageManager:
+    """Block allocator over a fixed page pool with per-sequence tables.
+
+    ``bytes_per_token`` (KV bytes for one token across all layers) sizes
+    the alloc/free events; with the default 0 the events are still emitted
+    with ``nbytes = page_size`` so replay remains meaningful in "slot"
+    units.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, *,
+                 bytes_per_token: int = 0):
+        assert num_pages > 0 and page_size > 0
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.bytes_per_token = bytes_per_token
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))  # LIFO
+        self._refcount: List[int] = [0] * num_pages
+        self._seqs: Dict[int, _Seq] = {}
+        self._vids = itertools.count(1)
+        self._page_vid: List[int] = [0] * num_pages   # vid of live page
+        self.events: List[Event] = []
+        self.stats = PageManagerStats(num_pages, page_size)
+
+    # -- low-level page ops --------------------------------------------------
+    @property
+    def page_bytes(self) -> int:
+        return (self.bytes_per_token or 1) * self.page_size
+
+    @property
+    def num_free_pages(self) -> int:
+        return len(self._free)
+
+    def _grab_page(self) -> int:
+        if not self._free:
+            raise PagePoolExhausted(
+                f"page pool exhausted ({self.num_pages} pages of "
+                f"{self.page_size} tokens)")
+        p = self._free.pop()
+        assert self._refcount[p] == 0
+        self._refcount[p] = 1
+        vid = next(self._vids)
+        self._page_vid[p] = vid
+        self.events.append(("alloc", vid, self.page_bytes, PAGE_TAG))
+        self.stats.n_page_alloc += 1
+        self.stats.pages_in_use = self.num_pages - len(self._free)
+        self.stats.peak_pages_in_use = max(self.stats.peak_pages_in_use,
+                                           self.stats.pages_in_use)
+        return p
+
+    def _drop_ref(self, p: int):
+        assert self._refcount[p] > 0, f"double free of page {p}"
+        self._refcount[p] -= 1
+        if self._refcount[p] == 0:
+            self.events.append(("free", self._page_vid[p], self.page_bytes,
+                                PAGE_TAG))
+            self.stats.n_page_free += 1
+            self._free.append(p)
+            self.stats.pages_in_use = self.num_pages - len(self._free)
+
+    # -- sequence API --------------------------------------------------------
+    def pages_needed(self, num_tokens: int) -> int:
+        return -(-num_tokens // self.page_size)
+
+    def can_allocate(self, num_tokens: int) -> bool:
+        return self.pages_needed(num_tokens) <= len(self._free)
+
+    def allocate(self, seq_id: int, num_tokens: int) -> List[int]:
+        """Claim pages covering ``num_tokens`` logical tokens for a new
+        sequence. Atomic: on exhaustion nothing is allocated."""
+        assert seq_id not in self._seqs, f"seq {seq_id} already allocated"
+        need = self.pages_needed(num_tokens)
+        if need > len(self._free):
+            raise PagePoolExhausted(
+                f"need {need} pages, {len(self._free)} free")
+        seq = _Seq([self._grab_page() for _ in range(need)], num_tokens)
+        self._seqs[seq_id] = seq
+        return list(seq.pages)
+
+    def fork(self, parent_id: int, child_id: int) -> List[int]:
+        """Child shares every parent page (copy-on-write prompt prefix)."""
+        assert child_id not in self._seqs
+        parent = self._seqs[parent_id]
+        for p in parent.pages:
+            self._refcount[p] += 1
+        self._seqs[child_id] = _Seq(list(parent.pages), parent.length)
+        self.stats.n_forks += 1
+        return list(parent.pages)
+
+    def append_token(self, seq_id: int) -> List[Tuple[int, int]]:
+        """Extend a sequence by one logical token. Returns a list of
+        ``(src_page, dst_page)`` device copies the caller must perform:
+        a CoW copy when the written page was shared, else nothing (a fresh
+        page needs no copy). Atomic on exhaustion."""
+        seq = self._seqs[seq_id]
+        copies: List[Tuple[int, int]] = []
+        if seq.length % self.page_size == 0:
+            seq.pages.append(self._grab_page())
+        else:
+            last = seq.pages[-1]
+            if self._refcount[last] > 1:
+                fresh = self._grab_page()          # may raise; state intact
+                copies.append((last, fresh))
+                self._drop_ref(last)
+                seq.pages[-1] = fresh
+                self.stats.n_cow_copies += 1
+        seq.length += 1
+        return copies
+
+    def free_seq(self, seq_id: int):
+        seq = self._seqs.pop(seq_id)
+        for p in seq.pages:
+            self._drop_ref(p)
+
+    def seq_len(self, seq_id: int) -> int:
+        return self._seqs[seq_id].length
+
+    def block_table(self, seq_id: int) -> List[int]:
+        return list(self._seqs[seq_id].pages)
+
+    def block_table_array(self, seq_ids: Sequence[Optional[int]],
+                          max_blocks: int):
+        """Padded ``[len(seq_ids), max_blocks]`` int32 table; -1 = no page.
+        ``None`` entries (idle slots) yield all -1 rows."""
+        import numpy as np
+        bt = np.full((len(seq_ids), max_blocks), -1, np.int32)
+        for i, sid in enumerate(seq_ids):
+            if sid is None or sid not in self._seqs:
+                continue
+            pages = self._seqs[sid].pages
+            assert len(pages) <= max_blocks, (len(pages), max_blocks)
+            bt[i, :len(pages)] = pages
+        return bt
+
+    # -- accounting ----------------------------------------------------------
+    def used_token_slots(self) -> int:
+        """Token slots actually holding KV (shared pages counted once)."""
+        counted = set()
+        total = 0
+        for seq in self._seqs.values():
+            for i, p in enumerate(seq.pages):
+                if p in counted:
+                    continue
+                counted.add(p)
+                full = (i + 1) * self.page_size <= seq.length
+                total += self.page_size if full else \
+                    seq.length - i * self.page_size
+        return total
+
+    def reserved_token_slots(self) -> int:
+        return self.stats.pages_in_use * self.page_size
+
+    def fragmentation_slots(self) -> int:
+        """Internal fragmentation: reserved minus used token slots. Bounded
+        by ``page_size - 1`` per live sequence."""
+        return self.reserved_token_slots() - self.used_token_slots()
+
+    def reserved_bytes(self) -> int:
+        return self.stats.pages_in_use * self.page_bytes
+
+    def check_invariants(self):
+        """Pool conservation + refcount sanity (used by property tests)."""
+        assert len(self._free) + self.stats.pages_in_use == self.num_pages
+        assert all(r >= 0 for r in self._refcount)
+        held: Dict[int, int] = {}
+        for seq in self._seqs.values():
+            for p in seq.pages:
+                held[p] = held.get(p, 0) + 1
+        free = set(self._free)
+        for p, r in enumerate(self._refcount):
+            assert held.get(p, 0) == r, (p, held.get(p, 0), r)
+            assert (r == 0) == (p in free)
+
+    def replay_into(self, allocator=None):
+        """Replay the page event stream through the paper's caching-
+        allocator simulator; returns the allocator for stats inspection."""
+        if allocator is None:
+            from repro.core.allocator import CachingAllocator
+            allocator = CachingAllocator()
+        handles: Dict[int, int] = {}
+        for op, vid, nbytes, _tag in self.events:
+            if op == "alloc":
+                handles[vid] = allocator.malloc(nbytes)
+            else:
+                allocator.free(handles.pop(vid))
+        return allocator

@@ -1,0 +1,114 @@
+"""JAX-side paged KV store: the device arrays behind the page manager.
+
+One pool per attention layer, laid out ``[num_pages, page_size, kv_heads,
+head_dim]`` (k and v). Sequences address the pool through block tables
+``[B, max_blocks]`` of page ids (-1 = unallocated); the logical token at
+index ``i`` of sequence ``b`` lives at ``pool[bt[b, i // ps], i % ps]``,
+so positions stay dense (0..len) and masking needs no per-slot position
+array — validity is ``i <= current_position`` and ``bt >= 0``.
+
+Three access patterns:
+  * :func:`scatter_prefill` — write a prompt's ``[B, S]`` K/V into pages
+    (the gather/scatter half of prefill; compute stays dense);
+  * :func:`append_decode` — scatter one decode-step token per sequence;
+  * :func:`gather_kv` — materialise ``[B, max_blocks*ps]`` K/V for the
+    pure-JAX reference attention path (the Pallas kernel in
+    ``repro.paged.attention`` indexes pages in place instead).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def init_pool(cfg: ModelConfig, num_pages: int, page_size: int,
+              dtype) -> Dict[str, jax.Array]:
+    """One attention layer's paged pool (k/v only — positions are dense)."""
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim()
+    return {
+        "k": jnp.zeros((num_pages, page_size, kvh, hd), dtype),
+        "v": jnp.zeros((num_pages, page_size, kvh, hd), dtype),
+    }
+
+
+def pool_token_bytes(cfg: ModelConfig, dtype) -> int:
+    """KV bytes for one token in one layer (sizing for PageManager events)."""
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim()
+    return 2 * kvh * hd * jnp.dtype(dtype).itemsize
+
+
+def _flat_targets(block_tables: jax.Array, page_size: int, S: int):
+    """Page/slot coordinates of logical tokens 0..S-1 per sequence.
+    block_tables [B, nb] -> (page [B,S], slot [B,S]); page is clamped to 0
+    for unallocated entries (callers mask those writes)."""
+    idx = jnp.arange(S, dtype=jnp.int32)
+    blk = jnp.minimum(idx // page_size, block_tables.shape[1] - 1)   # [S]
+    page = jnp.take_along_axis(
+        block_tables, jnp.broadcast_to(blk[None], (block_tables.shape[0], S)),
+        axis=1)                                          # [B, S]
+    return page, jnp.broadcast_to(idx % page_size, page.shape)
+
+
+def scatter_prefill(pool: Dict[str, jax.Array], k_new: jax.Array,
+                    v_new: jax.Array, block_tables: jax.Array,
+                    lengths: jax.Array) -> Dict[str, jax.Array]:
+    """Scatter prompt K/V into the pool. k_new/v_new [B, S, kvh, hd];
+    block_tables [B, nb]; lengths [B] (tokens valid per row)."""
+    num_pages, ps = pool["k"].shape[:2]
+    B, S = k_new.shape[:2]
+    page, slot = _flat_targets(block_tables, ps, S)
+    valid = (jnp.arange(S)[None, :] < lengths[:, None]) & (page >= 0)
+    # invalid rows scatter out of bounds and are dropped (mode="drop") —
+    # writing anything in-bounds could clobber another sequence's page
+    page = jnp.where(valid, page, num_pages).reshape(-1)
+    slot = slot.reshape(-1)
+    flat_k = k_new.reshape(B * S, *k_new.shape[2:])
+    flat_v = v_new.reshape(B * S, *v_new.shape[2:])
+    return {
+        "k": pool["k"].at[page, slot].set(flat_k, mode="drop"),
+        "v": pool["v"].at[page, slot].set(flat_v, mode="drop"),
+    }
+
+
+def append_decode(pool: Dict[str, jax.Array], k_t: jax.Array, v_t: jax.Array,
+                  block_tables: jax.Array,
+                  position: jax.Array) -> Dict[str, jax.Array]:
+    """Write one token per sequence at logical index ``position``.
+    k_t/v_t [B, kvh, hd]; position [B] int32. Rows whose block table has no
+    page at that index (idle slots, position -1) write back in place."""
+    num_pages, ps = pool["k"].shape[:2]
+    pos = jnp.maximum(position, 0).astype(jnp.int32)
+    blk = jnp.minimum(pos // ps, block_tables.shape[1] - 1)
+    page = jnp.take_along_axis(block_tables, blk[:, None], axis=1)[:, 0]
+    slot = pos % ps
+    valid = (page >= 0) & (position >= 0)
+    page = jnp.where(valid, page, num_pages)     # OOB rows are dropped
+    return {
+        "k": pool["k"].at[page, slot].set(k_t, mode="drop"),
+        "v": pool["v"].at[page, slot].set(v_t, mode="drop"),
+    }
+
+
+def gather_kv(pool: Dict[str, jax.Array], block_tables: jax.Array):
+    """Materialise per-sequence K/V [B, nb*ps, kvh, hd] (reference path).
+    Unallocated blocks gather page 0 — callers mask by position."""
+    pages = jnp.maximum(block_tables, 0)                 # [B, nb]
+    k = pool["k"][pages]                                 # [B, nb, ps, kvh, hd]
+    v = pool["v"][pages]
+    B, nb, ps = k.shape[:3]
+    return (k.reshape(B, nb * ps, *k.shape[3:]),
+            v.reshape(B, nb * ps, *v.shape[3:]))
+
+
+def copy_pages(pool: Dict[str, jax.Array], src, dst) -> Dict[str, jax.Array]:
+    """Copy-on-write page copies. src/dst: int sequences of page ids."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    return {
+        "k": pool["k"].at[dst].set(pool["k"][src]),
+        "v": pool["v"].at[dst].set(pool["v"][src]),
+    }

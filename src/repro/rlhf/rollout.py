@@ -45,12 +45,38 @@ class Rollout:
     def __init__(self, model: Model, cfg: ModelConfig, *, capacity: int,
                  temperature: float = 1.0, top_k: int = 0,
                  eos_id: Optional[int] = None, window: int = 0,
-                 donate: bool = True):
+                 donate: bool = True, backend: str = "dense",
+                 page_size: int = 16):
+        assert backend in ("dense", "paged"), backend
         self.model, self.cfg = model, cfg
         self.capacity = capacity
         self.temperature, self.top_k = temperature, top_k
         self.eos_id = eos_id
         self.window = window
+        self.backend = backend
+        self.page_size = page_size
+        self.page_manager = None        # populated per generate() when paged
+
+        if backend == "paged":
+            assert model.supports_paged(), \
+                "paged rollout needs an attention-only token model"
+            assert window == 0, "paged rollout is full-attention"
+
+            def prefill_paged(params, batch, pools, bt, lens):
+                return model.paged_prefill(params, batch, pools, bt, lens)
+
+            def decode_paged(params, pools, token, position, bt, key, done):
+                logits, pools = model.paged_decode_step(params, pools, token,
+                                                        position, bt)
+                tok, logp = sample_token(key, logits,
+                                         temperature=temperature, top_k=top_k)
+                tok = jnp.where(done, 0, tok).astype(jnp.int32)
+                logp = jnp.where(done, 0.0, logp)
+                return tok, logp, pools
+
+            self._prefill = jax.jit(prefill_paged, donate_argnums=(2,))
+            self._decode = jax.jit(decode_paged, donate_argnums=(1,))
+            return
 
         def prefill(params, batch):
             return model.prefill(params, batch, capacity, window=window)
@@ -71,6 +97,8 @@ class Rollout:
         """batch: prompt inputs (see Model input modes). Python loop over
         steps — the realistic serving pattern, and the phase the paper's
         §3.1 traces."""
+        if self.backend == "paged":
+            return self._generate_paged(params, batch, max_new_tokens, key)
         tokens = batch["tokens"]
         B, P = tokens.shape
         prefix = (self.cfg.num_prefix_embeddings
@@ -91,6 +119,13 @@ class Rollout:
                 done = done | (out_toks[-1] == self.eos_id)
             out_toks.append(tok)
             out_logp.append(lp)
+        return self._finalize(tokens, out_toks, out_logp, caches)
+
+    def _finalize(self, tokens, out_toks, out_logp, caches) -> RolloutResult:
+        """Shared generation epilogue: stack outputs, mask everything after
+        (and including the pad after) EOS, free the caches deterministically
+        (phase-boundary hygiene)."""
+        B, P = tokens.shape
         gen = jnp.stack(out_toks, axis=1)                  # [B, N]
         gen_logp = jnp.stack(out_logp, axis=1)
         full = jnp.concatenate([tokens, gen], axis=1)
@@ -98,13 +133,59 @@ class Rollout:
         mask = jnp.concatenate(
             [jnp.zeros((B, P)), jnp.ones((B, gen.shape[1]))], axis=1)
         if self.eos_id is not None:
-            # mask out everything after (and including the pad after) EOS
             eos = jnp.cumsum((full == self.eos_id) &
                              (mask > 0), axis=1)
             keep = (eos - ((full == self.eos_id) & (mask > 0))) == 0
             mask = mask * keep
             logp = logp * keep
-        # free the caches deterministically (phase-boundary hygiene)
         jax.tree.map(lambda x: x.delete() if hasattr(x, "delete") else None,
                      caches)
         return RolloutResult(tokens=full, logp=logp, mask=mask, prompt_len=P)
+
+    def _generate_paged(self, params, batch, max_new_tokens: int, key):
+        """Paged generation phase: identical sampling stream to the dense
+        path (same logits, same keys), but KV lives in a page pool that
+        grows by one page per sequence only when a page boundary is
+        crossed. ``self.page_manager`` afterwards holds the alloc/free
+        event stream for the memory simulator."""
+        from repro.paged import PageManager, pool_token_bytes
+
+        tokens = batch["tokens"]
+        B, P = tokens.shape
+        ps = self.page_size
+        nb = -(-(P + max_new_tokens) // ps)
+        dtype = jax.tree.leaves(params)[0].dtype
+        pm = PageManager(
+            B * nb, ps,
+            bytes_per_token=pool_token_bytes(self.cfg, dtype)
+            * self.cfg.num_layers)
+        for b in range(B):
+            pm.allocate(b, P)
+        pools = self.model.init_paged_pools(B * nb, ps, dtype)
+        seq_ids = list(range(B))
+        bt = jnp.asarray(pm.block_table_array(seq_ids, nb))
+        logits, pools = self._prefill(params, batch, pools, bt,
+                                      jnp.full((B,), P, jnp.int32))
+        tok, logp0 = sample_token(jax.random.fold_in(key, 0), logits,
+                                  temperature=self.temperature,
+                                  top_k=self.top_k)
+        tok = tok.astype(jnp.int32)
+        done = jnp.zeros((B,), bool)
+        out_toks = [tok]
+        out_logp = [logp0]
+        for t in range(1, max_new_tokens):
+            for b in range(B):
+                pm.append_token(b)          # page for index P + t - 1
+            bt = jnp.asarray(pm.block_table_array(seq_ids, nb))
+            pos = jnp.full((B,), P + t - 1, jnp.int32)
+            k = jax.random.fold_in(key, t)
+            tok, lp, pools = self._decode(params, pools, tok, pos, bt, k,
+                                          done)
+            if self.eos_id is not None:
+                done = done | (out_toks[-1] == self.eos_id)
+            out_toks.append(tok)
+            out_logp.append(lp)
+        for b in range(B):
+            pm.free_seq(b)
+        self.page_manager = pm
+        return self._finalize(tokens, out_toks, out_logp, pools)

@@ -1,19 +1,27 @@
-"""Continuous-batching serving scheduler over the fixed-capacity donated
-KV cache.
+"""Continuous-batching serving scheduler with selectable KV-cache backends.
 
-A fixed pool of B slots; requests join free slots between decode steps
-(their prompts prefilled into the shared rolling cache at the slot's
-absolute positions), finished sequences (EOS or max tokens) free their
-slots immediately. One jitted decode step serves all active slots; idle
-slots decode into a scratch row that is masked out. This is the memory
-shape the paper's inference phases *should* have had: a single statically
-allocated cache, zero allocator churn at request boundaries.
+Two cache layouts behind one admit/decode/retire loop:
+
+  * ``dense`` — the seed's fixed pool of B slots over a donated
+    ``[B, capacity]`` rolling cache. Zero allocator churn, but every slot
+    reserves ``capacity`` tokens of KV no matter how short its request.
+  * ``paged`` — a vLLM-style global page pool (``repro.paged``): slots
+    hold block tables instead of cache rows, pages are claimed as
+    sequences grow and freed the step they retire, and admission is gated
+    on free pages rather than free slots alone. When the pool runs dry
+    mid-decode the youngest request is preempted (pages freed, request
+    re-queued with its generated prefix for recompute) — the memory shape
+    the paper's §3 inference-phase traces call for: reserved KV tracks
+    *live tokens*, not worst-case capacity.
+
+One jitted decode step serves all active slots either way; idle slots
+decode into garbage that is masked out.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,62 +39,156 @@ class Request:
     max_new_tokens: int
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    n_preempted: int = 0
 
 
 class ContinuousBatcher:
     def __init__(self, model: Model, cfg: ModelConfig, params, *,
                  slots: int = 4, capacity: int = 128,
                  temperature: float = 1.0, top_k: int = 0,
-                 eos_id: Optional[int] = None, seed: int = 0):
+                 eos_id: Optional[int] = None, seed: int = 0,
+                 cache_backend: str = "dense", page_size: int = 16,
+                 num_pages: Optional[int] = None):
+        assert cache_backend in ("dense", "paged"), cache_backend
         self.model, self.cfg, self.params = model, cfg, params
         self.B, self.capacity = slots, capacity
         self.temperature, self.top_k, self.eos_id = temperature, top_k, eos_id
+        self.backend = cache_backend
         self.queue: Deque[Request] = deque()
         self.active: List[Optional[Request]] = [None] * slots
         self.pos = np.zeros(slots, np.int64)        # next absolute position
         self.last_tok = np.zeros(slots, np.int64)
-        cache_dtype = jax.tree.leaves(params)[0].dtype
-        self.caches = model.init_cache(slots, capacity, cache_dtype)
-        self.caches = {"segments": self.caches, "cross_kv": None}
         self.key = jax.random.PRNGKey(seed)
         self.steps = 0
+        self._next_rid = 0
+        cache_dtype = jax.tree.leaves(params)[0].dtype
 
-        def decode(params, caches, tok, pos, key, live):
-            logits, caches = model.decode_step(params, caches, tok, pos)
-            t, _ = sample_token(key, logits, temperature=temperature,
-                                top_k=top_k)
-            t = jnp.where(live, t, 0).astype(jnp.int32)
-            return t, caches
+        if cache_backend == "dense":
+            self.caches = model.init_cache(slots, capacity, cache_dtype)
+            self.caches = {"segments": self.caches, "cross_kv": None}
 
-        self._decode = jax.jit(decode, donate_argnums=(1,))
-        # per-slot prefill: batch of 1 written into slot s of the cache
-        self._prefill = jax.jit(
-            lambda params, batch: model.prefill(params, batch, capacity))
+            def decode(params, caches, tok, pos, key, live):
+                logits, caches = model.decode_step(params, caches, tok, pos)
+                t, _ = sample_token(key, logits, temperature=temperature,
+                                    top_k=top_k)
+                t = jnp.where(live, t, 0).astype(jnp.int32)
+                return t, caches
+
+            self._decode = jax.jit(decode, donate_argnums=(1,))
+            self._prefill = jax.jit(
+                lambda params, batch: model.prefill(params, batch, capacity))
+        else:
+            from repro.paged import PageManager, pool_token_bytes
+            self.page_size = page_size
+            self.max_blocks = -(-capacity // page_size)
+            if num_pages is None:
+                # default pool: what the dense layout would reserve
+                num_pages = slots * self.max_blocks
+            assert num_pages >= self.max_blocks, \
+                "pool smaller than one max-length sequence"
+            layer_token_bytes = pool_token_bytes(cfg, cache_dtype)
+            self.pm = PageManager(
+                num_pages, page_size,
+                bytes_per_token=layer_token_bytes * cfg.num_layers)
+            self.pools = model.init_paged_pools(num_pages, page_size,
+                                                cache_dtype)
+
+            def decode(params, pools, tok, pos, bt, key, live):
+                logits, pools = model.paged_decode_step(params, pools, tok,
+                                                        pos, bt)
+                t, _ = sample_token(key, logits, temperature=temperature,
+                                    top_k=top_k)
+                t = jnp.where(live, t, 0).astype(jnp.int32)
+                return t, pools
+
+            self._decode = jax.jit(decode, donate_argnums=(1,))
+            self._prefill = jax.jit(
+                lambda params, batch, pools, bt, lens: model.paged_prefill(
+                    params, batch, pools, bt, lens),
+                donate_argnums=(2,))
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int) -> Request:
-        req = Request(len(self.queue) + 1_000 * (self.steps + 1),
-                      np.asarray(prompt, np.int32), max_new_tokens)
+        prompt = np.asarray(prompt, np.int32)
+        if self.backend == "paged" and \
+                len(prompt) + max_new_tokens > self.capacity:
+            # reject up front — an unservable request must not reach _admit
+            raise ValueError(
+                f"request needs {len(prompt) + max_new_tokens} tokens, "
+                f"capacity is {self.capacity}")
+        req = Request(self._next_rid, prompt, max_new_tokens)
+        self._next_rid += 1
         self.queue.append(req)
         return req
+
+    # -- paged helpers -------------------------------------------------------
+    def _slot_block_tables(self) -> jnp.ndarray:
+        sids = [r.rid if r is not None else None for r in self.active]
+        return jnp.asarray(self.pm.block_table_array(sids, self.max_blocks))
+
+    def _apply_copies(self, copies):
+        """Perform CoW page copies on every layer pool."""
+        if not copies:
+            return
+        from repro.paged import copy_pages
+        src = [s for s, _ in copies]
+        dst = [d for _, d in copies]
+        self.pools = [
+            {k: jax.vmap(copy_pages, in_axes=(0, None, None))(pool, src, dst)
+             for k, pool in seg.items()}
+            for seg in self.pools]
+
+    def _preempt_youngest(self, *, protect: Optional[int] = None) -> bool:
+        """Free the youngest active request's pages and re-queue it;
+        re-admission recomputes its prompt *plus* generated-so-far prefill
+        (``prompt`` itself is never mutated, so repeated preemption cannot
+        duplicate tokens). Returns False if no victim is available."""
+        victims = [s for s, r in enumerate(self.active)
+                   if r is not None and s != protect]
+        if not victims:
+            return False
+        s = max(victims, key=lambda s: self.active[s].rid)
+        req = self.active[s]
+        self.pm.free_seq(req.rid)
+        req.n_preempted += 1
+        self.queue.appendleft(req)
+        self.active[s] = None
+        return True
 
     # -- internals -----------------------------------------------------------
     def _admit(self):
         for s in range(self.B):
             if self.active[s] is None and self.queue:
-                req = self.queue.popleft()
-                lg, caches1 = self._prefill(
-                    self.params, {"tokens": jnp.asarray(req.prompt)[None]})
-                # splice slot-s rows of the fresh cache into the pool
-                def splice(pool, new):
-                    return pool.at[:, s:s + 1].set(new)
-                self.caches["segments"] = jax.tree.map(
-                    lambda pool, new: pool.at[:, s:s + 1].set(new),
-                    self.caches["segments"], caches1["segments"])
+                req = self.queue[0]
+                # recompute prefill: original prompt plus anything generated
+                # before a preemption (empty for fresh requests)
+                full = np.concatenate(
+                    [req.prompt, np.asarray(req.out_tokens, np.int32)])
+                P = len(full)
+                if self.backend == "paged":
+                    # gate admission on pages for the prefill + first decode
+                    if not self.pm.can_allocate(P + 1):
+                        break
+                    self.queue.popleft()
+                    self.pm.allocate(req.rid, P)
+                    bt_row = jnp.asarray(self.pm.block_table_array(
+                        [req.rid], self.max_blocks))
+                    lg, self.pools = self._prefill(
+                        self.params, {"tokens": jnp.asarray(full)[None]},
+                        self.pools, bt_row,
+                        jnp.full((1,), P, jnp.int32))
+                else:
+                    self.queue.popleft()
+                    lg, caches1 = self._prefill(
+                        self.params, {"tokens": jnp.asarray(full)[None]})
+                    # write slot s of the pool from the batch-of-1 prefill
+                    self.caches["segments"] = jax.tree.map(
+                        lambda pool, new: pool.at[:, s:s + 1].set(new),
+                        self.caches["segments"], caches1["segments"])
                 self.key, k = jax.random.split(self.key)
                 tok, _ = sample_token(k, lg, temperature=self.temperature,
                                       top_k=self.top_k)
                 self.active[s] = req
-                self.pos[s] = len(req.prompt)
+                self.pos[s] = P
                 self.last_tok[s] = int(tok[0])
                 req.out_tokens.append(int(tok[0]))
 
@@ -101,20 +203,47 @@ class ContinuousBatcher:
             if hit_eos or len(req.out_tokens) >= req.max_new_tokens:
                 req.done = True
                 done.append(req)
-                self.active[s] = None   # slot freed; cache rows overwritten
+                if self.backend == "paged":
+                    self.pm.free_seq(req.rid)   # pages back to the pool
+                self.active[s] = None           # slot freed
         return done
+
+    def _grow_pages(self):
+        """Claim the page each live slot's next token will write; preempt
+        the youngest request when the pool is dry."""
+        from repro.paged import PagePoolExhausted
+        for s in range(self.B):
+            req = self.active[s]
+            if req is None:
+                continue
+            while True:
+                try:
+                    self._apply_copies(self.pm.append_token(req.rid))
+                    break
+                except PagePoolExhausted:
+                    if not self._preempt_youngest(protect=s):
+                        raise
 
     def step(self) -> List[Request]:
         """Admit, one decode step for all live slots, retire. Returns the
         requests completed this step."""
         self._admit()
+        if self.backend == "paged":
+            self._grow_pages()
         live = np.array([r is not None for r in self.active])
         if live.any():
             self.key, k = jax.random.split(self.key)
-            tok, self.caches = self._decode(
-                self.params, self.caches,
-                jnp.asarray(self.last_tok, jnp.int32),
-                jnp.asarray(self.pos, jnp.int32), k, jnp.asarray(live))
+            tok_in = jnp.asarray(self.last_tok, jnp.int32)
+            pos_in = jnp.asarray(self.pos, jnp.int32)
+            if self.backend == "paged":
+                pos_in = jnp.where(jnp.asarray(live), pos_in, -1)
+                tok, self.pools = self._decode(
+                    self.params, self.pools, tok_in, pos_in,
+                    self._slot_block_tables(), k, jnp.asarray(live))
+            else:
+                tok, self.caches = self._decode(
+                    self.params, self.caches, tok_in, pos_in, k,
+                    jnp.asarray(live))
             tok = np.asarray(tok)
             for s, req in enumerate(self.active):
                 if req is not None:
@@ -131,3 +260,14 @@ class ContinuousBatcher:
             if not self.queue and all(r is None for r in self.active):
                 break
         return finished
+
+    # -- introspection -------------------------------------------------------
+    def kv_reserved_bytes(self) -> int:
+        """Bytes of KV/state the backend currently reserves. Dense reserves
+        the whole [B, capacity] cache up front (measured from the actual
+        cache arrays, so Mamba/MLA states are counted correctly); paged
+        reserves live pages."""
+        if self.backend == "paged":
+            return self.pm.reserved_bytes()
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(self.caches["segments"]))

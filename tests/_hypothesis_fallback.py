@@ -1,0 +1,89 @@
+"""Minimal, deterministic stand-in for ``hypothesis`` (loaded by conftest
+only when the real package is not installed — `pip install -e .[test]`
+gets the real one).
+
+Covers exactly the surface the test suite uses: ``given``/``settings`` and
+``strategies.{integers, booleans, tuples, lists, randoms}``. Examples are
+drawn from seeded ``random.Random`` streams, so runs are reproducible; the
+stub does no shrinking — a failing example is reported as-is by pytest.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+DEFAULT_MAX_EXAMPLES = 25
+_SEED = 0xC0FFEE
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+def integers(min_value=0, max_value=1 << 16):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def booleans():
+    return _Strategy(lambda r: r.random() < 0.5)
+
+
+def floats(min_value=0.0, max_value=1.0, **_ignored):
+    return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def tuples(*ss):
+    return _Strategy(lambda r: tuple(s.draw(r) for s in ss))
+
+
+def lists(elements, min_size=0, max_size=16):
+    def draw(r):
+        n = r.randint(min_size, max_size)
+        return [elements.draw(r) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def sampled_from(seq):
+    return _Strategy(lambda r: r.choice(list(seq)))
+
+
+def randoms():
+    return _Strategy(lambda r: random.Random(r.randint(0, 1 << 30)))
+
+
+def given(*strategies_args):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                rnd = random.Random(_SEED + i)
+                drawn = [s.draw(rnd) for s in strategies_args]
+                fn(*args, *drawn, **kwargs)
+        # mirror the real attribute shape; pytest plugins peek at
+        # fn.hypothesis.inner_test, and the strategy-filled params must be
+        # hidden from pytest's fixture resolution
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature([])
+        return wrapper
+    return deco
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+for _name in ("integers", "booleans", "floats", "tuples", "lists",
+              "sampled_from", "randoms"):
+    setattr(strategies, _name, globals()[_name])

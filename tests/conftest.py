@@ -1,0 +1,25 @@
+"""Test bootstrap: make `import repro` and `import hypothesis` work in a
+bare container. The src/ tree is added to sys.path when the package is not
+installed, and a deterministic hypothesis stand-in (_hypothesis_fallback)
+is registered when the real library is absent."""
+import importlib.util
+import pathlib
+import sys
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+try:
+    import repro  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.insert(0, str(_ROOT / "src"))
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        pathlib.Path(__file__).with_name("_hypothesis_fallback.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = mod.strategies

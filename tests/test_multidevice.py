@@ -29,8 +29,8 @@ def test_moe_shard_map_matches_fallback():
         from repro.models import moe as MOE
         from repro.models import moe_shard_map as MSM
         from repro.sharding import ctx
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         for arch in ("granite_moe_3b_a800m", "deepseek_v3_671b"):
             cfg = dataclasses.replace(get_config(arch).smoke(),
                                       param_dtype="float32")
@@ -79,8 +79,8 @@ def test_sharded_train_step_matches_single_device():
                  "returns": jnp.zeros((B, S))}
         ctx.set_current_mesh(None)
         _, m1 = jax.jit(ts)(state, batch)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         ctx.set_current_mesh(mesh)
         _, m2 = jax.jit(ts)(state, batch)
         ctx.set_current_mesh(None)
