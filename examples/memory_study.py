@@ -26,7 +26,7 @@ def main():
     strat = {s.name: s for s in PAPER_STRATEGIES}[args.strategy]
 
     actor, critic = get_config("opt_1_3b"), get_config("opt_350m")
-    tf = lora_trainable_fraction(actor.param_count(), actor, 128)
+    tf = lora_trainable_fraction(actor, 128)
     print(f"building phase traces (grad_ckpt={strat.grad_ckpt}) ...")
     plans, persist = [], None
     for gl in args.gen_lens:

@@ -1,11 +1,15 @@
-"""End-to-end RLHF driver: PPO over the four-model setup (actor, critic,
-reference, reward) with a verifiable programmatic reward, phase-boundary
-memory management (the paper's technique), and checkpointing.
+"""End-to-end RLHF driver, default on the shared-base "hydra" engine: ONE
+frozen trunk + per-role LoRA adapters/value heads (actor, critic, reward)
+with the reference logp read straight off the base — versus the four-model
+pipeline (``--engine separate``) it replaces. Verifiable programmatic
+reward, phase-boundary memory management (the paper's technique), and
+checkpointing.
 
-Default scale is CPU-friendly (~6M-param actor, 120 PPO iterations — reward
+Default scale is CPU-friendly (~6M-param trunk, 120 PPO iterations — reward
 climbs from the 1/64 random baseline to >0.5). Scale up with the flags.
 
     PYTHONPATH=src python examples/rlhf_e2e.py [--steps 120] [--d-model 128]
+    PYTHONPATH=src python examples/rlhf_e2e.py --engine separate   # A/B
 """
 import argparse
 import dataclasses
@@ -19,7 +23,7 @@ sys.path.insert(0, "src")
 
 from repro.checkpoint import save
 from repro.configs import get_config
-from repro.rlhf import RLHFConfig, RLHFTrainer
+from repro.rlhf import RLHFConfig, RLHFTrainer, live_device_bytes
 from repro.rlhf.reward import make_target_token_reward
 
 
@@ -29,8 +33,17 @@ def main():
     ap.add_argument("--d-model", type=int, default=128)
     ap.add_argument("--layers", type=int, default=2)
     ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--engine", default="hydra",
+                    choices=("hydra", "separate"))
+    ap.add_argument("--lora-rank", type=int, default=16,
+                    help="hydra adapter rank (the paper grid uses 128)")
     ap.add_argument("--memory-policy", default="after_inference",
-                    choices=("none", "after_inference", "after_all"))
+                    choices=("none", "after_inference", "after_training",
+                             "after_all"))
+    ap.add_argument("--lr", type=float, default=0.0,
+                    help="0 = engine default (adapters train at ~10x the "
+                         "full-finetune rate: LoRA's B=0 init scales the "
+                         "effective step down)")
     ap.add_argument("--ckpt-dir", default="")
     args = ap.parse_args()
 
@@ -38,11 +51,22 @@ def main():
         get_config("llama3_2_3b").smoke(), num_layers=args.layers,
         d_model=args.d_model, d_ff=2 * args.d_model, vocab_size=64,
         num_heads=4, num_kv_heads=2, head_dim=args.d_model // 4)
-    rl = RLHFConfig(prompt_len=8, gen_len=16, lr=3e-3, critic_lr=3e-3,
-                    kl_coef=0.0, top_k=0,
+    lr = args.lr or (3e-2 if args.engine == "hydra" else 3e-3)
+    rl = RLHFConfig(prompt_len=8, gen_len=16, lr=lr, critic_lr=lr,
+                    kl_coef=0.0, top_k=0, engine=args.engine,
+                    lora_rank=args.lora_rank,
                     memory_policy=args.memory_policy)
     trainer = RLHFTrainer(cfg, cfg, rl, jax.random.PRNGKey(0),
                           reward_fn=make_target_token_reward(7))
+    if args.engine == "hydra":
+        eng = trainer.engine
+        print(f"hydra engine: trunk {eng.base_param_count():,} params "
+              f"(frozen), actor adapter "
+              f"{eng.adapter_param_count('actor'):,} "
+              f"({100 * eng.trainable_fraction('actor'):.1f}% trainable), "
+              f"rank {args.lora_rank}")
+    print(f"live after init: {live_device_bytes()/2**20:.2f} MiB "
+          f"({args.engine})")
 
     key = jax.random.PRNGKey(1)
     t0 = time.time()
@@ -59,13 +83,15 @@ def main():
     # per-phase live-memory report (the paper's profiler, on the real run)
     recs = trainer.memory.records[-7:]
     print("\nlast-iteration phase memory (policy="
-          f"{args.memory_policy}):")
+          f"{args.memory_policy}, engine={args.engine}):")
     for r in recs:
         print(f"  {r['phase']:16s} {r['kind']:10s} "
               f"{r['live_bytes']/2**20:8.2f} MiB live")
     if args.ckpt_dir:
-        print("saved:", save(args.ckpt_dir, args.steps,
-                             trainer.actor_state["params"]))
+        params = (trainer.actor_state["params"] if args.engine == "separate"
+                  else {"base": trainer.base_params,
+                        "actor_adapter": trainer.actor_state["params"]})
+        print("saved:", save(args.ckpt_dir, args.steps, params))
 
 
 if __name__ == "__main__":

@@ -20,11 +20,17 @@ events vanish. Gradient checkpointing is not a multiplier — it swaps in the
 remat="full" trace of the same model (the liveness change emerges from the
 jaxpr, see core.trace).
 
-LoRA scales grad/opt by the trainable fraction.
+LoRA scales grad/opt by the trainable fraction. The fraction is computed
+EXACTLY, by building the real adapter tree of ``models.lora`` under
+``jax.eval_shape`` (no allocation) and counting leaves — the analytic
+per-projection formula it replaces drifted whenever the adapter-site rules
+changed. ``MemoryStrategy.lora_rank`` threads the rank axis through the
+strategy grid (the paper's grid fixes it at 128).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from functools import lru_cache
 from typing import Dict
 
 
@@ -34,6 +40,7 @@ class MemoryStrategy:
     zero_stage: int = 0          # 0 = none
     cpu_offload: bool = False
     grad_ckpt: bool = False
+    lora_rank: int = 128         # LoRA rank of the trainable-fraction axis
 
     def scale(self, tag: str, *, ndp: int, trainable_fraction: float = 1.0,
               param_persistent: bool = True) -> float:
@@ -67,18 +74,24 @@ PAPER_STRATEGIES = (
 )
 
 
-def lora_trainable_fraction(n_params: int, cfg, rank: int = 128) -> float:
-    """Approximate LoRA-r trainable fraction for a transformer config: every
-    2D projection W[d_in, d_out] adds r*(d_in+d_out) trainable params."""
+@lru_cache(maxsize=64)
+def _exact_fraction(cfg, rank: int) -> float:
+    import jax
+
+    from repro.models import Model
+    from repro.models.lora import trainable_fraction
+
+    model = Model(cfg)
+    base = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    adapter = jax.eval_shape(
+        lambda: model.init_adapter(jax.random.PRNGKey(0), base, rank))
+    return min(1.0, trainable_fraction(base, adapter))
+
+
+def lora_trainable_fraction(cfg, rank: int = 128) -> float:
+    """EXACT LoRA-r trainable fraction for a model config: the real adapter
+    tree is built under ``jax.eval_shape`` (zero allocation) and its leaves
+    counted against the base tree's. ``rank <= 0`` means full fine-tuning."""
     if rank <= 0:
         return 1.0
-    d, ff, L = cfg.d_model, max(cfg.d_ff, 1), cfg.num_layers
-    hd = cfg.resolved_head_dim()
-    per_layer = 0
-    per_layer += rank * (d + cfg.num_heads * hd)          # wq
-    per_layer += 2 * rank * (d + cfg.num_kv_heads * hd)   # wk, wv
-    per_layer += rank * (cfg.num_heads * hd + d)          # wo
-    n_mlp = 3 if cfg.mlp_gated else 2
-    per_layer += n_mlp * rank * (d + ff)
-    lora = per_layer * L
-    return min(1.0, lora / max(n_params, 1))
+    return _exact_fraction(cfg, rank)

@@ -91,7 +91,8 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--memory-policy", default="after_inference",
-                    choices=("none", "after_inference", "after_all"))
+                    choices=("none", "after_inference", "after_training",
+                             "after_all"))
     args = ap.parse_args()
     cfg = get_config(args.arch)
     if args.smoke:

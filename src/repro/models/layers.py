@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MLAConfig, ModelConfig
+from repro.models.lora import lora_delta
 
 
 def _init(key, shape, scale=0.02, dtype=jnp.float32):
@@ -131,14 +132,15 @@ def init_attention(key, cfg: ModelConfig, dtype, cross: bool = False) -> dict:
     return p
 
 
-def _project_qkv(params, x, cfg: ModelConfig, kv_x=None):
+def _project_qkv(params, x, cfg: ModelConfig, kv_x=None, adapter=None):
     B, S, _ = x.shape
     h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim()
     kv_x = x if kv_x is None else kv_x
     Skv = kv_x.shape[1]
-    q = x @ params["wq"]
-    k = kv_x @ params["wk"]
-    v = kv_x @ params["wv"]
+    ad = adapter or {}
+    q = x @ params["wq"] + lora_delta(x, ad.get("wq"))
+    k = kv_x @ params["wk"] + lora_delta(kv_x, ad.get("wk"))
+    v = kv_x @ params["wv"] + lora_delta(kv_x, ad.get("wv"))
     if cfg.qkv_bias:
         q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
     return (q.reshape(B, S, h, hd), k.reshape(B, Skv, kvh, hd),
@@ -163,16 +165,17 @@ def _fill_cache(init_cache, entries, positions):
 
 def attention_fwd(params, x, positions, cfg: ModelConfig, *,
                   window: int = 0, use_kernel: bool = False,
-                  init_cache: Optional[dict] = None):
+                  init_cache: Optional[dict] = None, adapter=None):
     """Full-sequence (train / prefill) self-attention. With ``init_cache``
     also returns the filled rolling KV cache (single-pass prefill)."""
-    q, k, v = _project_qkv(params, x, cfg)
+    q, k, v = _project_qkv(params, x, cfg, adapter=adapter)
     sin, cos = rope_tables(positions, cfg.resolved_head_dim(), cfg.rope_theta)
     q = apply_rope(q, sin, cos)
     k = apply_rope(k, sin, cos)
     out = attn_core(q, k, v, causal=True, window=window,
                     use_kernel=use_kernel)
-    out = out.reshape(x.shape[0], x.shape[1], -1) @ params["wo"]
+    out = out.reshape(x.shape[0], x.shape[1], -1)
+    out = out @ params["wo"] + lora_delta(out, (adapter or {}).get("wo"))
     if init_cache is None:
         return out
     return out, _fill_cache(init_cache, {"k": k, "v": v}, positions)
@@ -213,13 +216,14 @@ def init_kv_cache(cfg: ModelConfig, batch: int, capacity: int, dtype) -> dict:
 
 
 def attention_decode(params, x, position, cache, cfg: ModelConfig, *,
-                     window: int = 0, use_kernel: bool = False):
+                     window: int = 0, use_kernel: bool = False,
+                     adapter=None):
     """One-token decode. x [B,1,D], position [B] absolute. Rolling buffer:
     slot = position % capacity (capacity == window for the long-context
     path). Returns (out [B,1,D], new_cache)."""
     B = x.shape[0]
     cap = cache["k"].shape[1]
-    q, k, v = _project_qkv(params, x, cfg)
+    q, k, v = _project_qkv(params, x, cfg, adapter=adapter)
     sin, cos = rope_tables(position[:, None], cfg.resolved_head_dim(),
                            cfg.rope_theta)
     q = apply_rope(q, sin, cos)
@@ -242,7 +246,8 @@ def attention_decode(params, x, position, cache, cfg: ModelConfig, *,
             valid &= new_pos > (position[:, None] - window)
         mask = valid[:, None, None, :]  # [B,1,1,cap]
         out = sdpa(q, new_k, new_v, mask)
-    out = out.reshape(B, 1, -1) @ params["wo"]
+    out = out.reshape(B, 1, -1)
+    out = out @ params["wo"] + lora_delta(out, (adapter or {}).get("wo"))
     return out, {"k": new_k, "v": new_v, "pos": new_pos}
 
 
@@ -399,10 +404,12 @@ def init_mlp(key, d: int, d_ff: int, gated: bool, num_layers: int, dtype) -> dic
     return p
 
 
-def mlp_fwd(params, x, gated: bool) -> jax.Array:
-    h = x @ params["w_in"]
+def mlp_fwd(params, x, gated: bool, adapter=None) -> jax.Array:
+    ad = adapter or {}
+    h = x @ params["w_in"] + lora_delta(x, ad.get("w_in"))
     if gated:
-        h = jax.nn.silu(x @ params["w_gate"]) * h
+        h = jax.nn.silu(x @ params["w_gate"]
+                        + lora_delta(x, ad.get("w_gate"))) * h
     else:
         h = jax.nn.gelu(h)
-    return h @ params["w_out"]
+    return h @ params["w_out"] + lora_delta(h, ad.get("w_out"))

@@ -1,0 +1,172 @@
+"""LoRA adapter trees over the base parameter pytree (Hydra-RLHF style).
+
+The shared-base "hydra" RLHF engine keeps ONE frozen trunk and gives every
+role (actor / critic / reward) a small adapter: low-rank A/B factors on the
+2-D projection weights, plus a value head for the scalar-output roles. This
+module owns the adapter pytree itself:
+
+  * :func:`init_adapter`      — build an adapter mirroring a base tree
+    (A ~ N(0, 0.02), B = 0, so the initial delta is exactly zero);
+  * :func:`lora_delta`        — the *unmerged* application ``(x @ A) @ B``
+    used at matmul sites during training forwards (never materializes the
+    [d_in, d_out] product);
+  * :func:`merge_adapter` / :func:`unmerge_adapter` — fold ``A @ B`` into
+    the base weights for rollout-speed generation and back out again;
+  * :func:`merged_leaves`     — the arrays a merge freshly created (the
+    ones that are safe to ``.delete()`` at a phase boundary — non-adapted
+    leaves of a merged tree alias the frozen base and must survive);
+  * :func:`adapter_param_count` / :func:`trainable_fraction` — exact
+    trainable-parameter accounting from the real trees (replaces the old
+    analytic estimate in ``core.strategies``).
+
+Adapted sites: attention projections (``wq/wk/wv/wo`` — only when all four
+are present, so MLA mixers and cross-attention blocks are left alone) and
+dense-MLP projections (``w_in/w_gate/w_out`` — only in dicts without a
+``router``, so MoE expert banks are left alone). Segment-stacked leaves
+``[G, d_in, d_out]`` get stacked factors ``[G, d_in, r]`` / ``[G, r, d_out]``
+that slice correctly under ``jax.lax.scan``. Adapter leaves are stored in
+float32 (they are the master/trainable copy); deltas are cast to the
+activation dtype at apply time.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+ATTN_SITES = ("wq", "wk", "wv", "wo")
+MLP_SITES = ("w_in", "w_gate", "w_out")
+
+
+def _is_site(node: dict) -> bool:
+    """An adapter site leaf-pair {"a": A, "b": B}."""
+    return isinstance(node, dict) and set(node) == {"a", "b"}
+
+
+def _adaptable_names(parent: Dict[str, Any], path_names) -> List[str]:
+    """Which keys of ``parent`` get LoRA factors."""
+    if "cross" in path_names:
+        return []
+    if all(k in parent for k in ATTN_SITES):
+        return [k for k in ATTN_SITES]
+    if "router" not in parent and any(k in parent for k in MLP_SITES):
+        return [k for k in MLP_SITES if k in parent]
+    return []
+
+
+def init_adapter(key, base_params, rank: int, *,
+                 with_value: bool = False, d_model: int = 0,
+                 scale: float = 0.02) -> Dict[str, Any]:
+    """Adapter tree for ``base_params``: {"lora": {...}, ["value_head"]}.
+
+    ``rank=0`` yields an empty lora tree (the adapter is only a value head,
+    or nothing at all) — the forward then reduces to the plain base pass.
+    ``base_params`` may be ShapeDtypeStructs (eval_shape-safe counting).
+    """
+    counter = [0]
+
+    def rec(node, path_names):
+        if not isinstance(node, dict):
+            return None
+        out: Dict[str, Any] = {}
+        names = _adaptable_names(node, path_names) if rank > 0 else []
+        for name in names:
+            w = node[name]
+            if len(w.shape) < 2:
+                continue
+            *lead, d_in, d_out = w.shape
+            counter[0] += 1
+            ka, _ = jax.random.split(jax.random.fold_in(key, counter[0]))
+            out[name] = {
+                "a": scale * jax.random.normal(
+                    ka, (*lead, d_in, rank), jnp.float32),
+                "b": jnp.zeros((*lead, rank, d_out), jnp.float32),
+            }
+        for k, v in node.items():
+            if k in out or not isinstance(v, dict):
+                continue
+            sub = rec(v, path_names + (k,))
+            if sub:
+                out[k] = sub
+        return out
+
+    adapter: Dict[str, Any] = {"lora": rec(base_params, ()) or {}}
+    if with_value:
+        assert d_model > 0, "with_value adapters need d_model"
+        kv = jax.random.fold_in(key, 0)
+        adapter["value_head"] = {
+            "w": 0.02 * jax.random.normal(kv, (d_model, 1), jnp.float32),
+            "b": jnp.zeros((1,), jnp.float32),
+        }
+    return adapter
+
+
+def lora_delta(x: jax.Array, ab: Optional[dict]) -> jax.Array:
+    """Unmerged low-rank delta ``(x @ A) @ B`` in the activation dtype.
+    ``ab`` may be None / absent — returns 0 so call sites stay branch-free."""
+    if not ab:
+        return jnp.zeros((), x.dtype)
+    return (x @ ab["a"].astype(x.dtype)) @ ab["b"].astype(x.dtype)
+
+
+def _merge(base, lora, sign: float):
+    if _is_site(lora):
+        return (base + sign * (lora["a"] @ lora["b"]).astype(base.dtype)
+                ).astype(base.dtype)
+    if isinstance(base, dict):
+        return {k: _merge(v, lora[k], sign) if k in lora else v
+                for k, v in base.items()}
+    return base
+
+
+def merge_adapter(base_params, lora_tree) -> Any:
+    """base + A@B at every adapted site. Non-adapted leaves are returned
+    *by reference* (they alias the frozen base — do not delete them)."""
+    return _merge(base_params, lora_tree or {}, +1.0)
+
+
+def unmerge_adapter(merged_params, lora_tree) -> Any:
+    """Inverse of :func:`merge_adapter` (up to fp round-off)."""
+    return _merge(merged_params, lora_tree or {}, -1.0)
+
+
+def merged_leaves(merged_params, lora_tree) -> List[jax.Array]:
+    """The arrays :func:`merge_adapter` freshly allocated — i.e. the leaves
+    at adapted sites. Safe to ``.delete()`` at a phase boundary."""
+    out: List[jax.Array] = []
+
+    def rec(node, lora):
+        if _is_site(lora):
+            out.append(node)
+            return
+        if isinstance(node, dict):
+            for k, sub in lora.items():
+                if k in node:
+                    rec(node[k], sub)
+
+    rec(merged_params, lora_tree or {})
+    return out
+
+
+def delete_merged(merged_params, lora_tree) -> None:
+    """Phase-boundary hygiene: ``.delete()`` exactly the arrays
+    :func:`merge_adapter` freshly allocated, leaving the aliased frozen
+    base untouched. No-op on leaves without buffers (tracers, structs)."""
+    for leaf in merged_leaves(merged_params, lora_tree):
+        if hasattr(leaf, "delete") and not leaf.is_deleted():
+            leaf.delete()
+
+
+def adapter_param_count(adapter) -> int:
+    """Total trainable parameters in an adapter (lora factors + value head)."""
+    import numpy as np
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(adapter)))
+
+
+def trainable_fraction(base_params, adapter) -> float:
+    """Exact trainable fraction: adapter params / base params. This is what
+    LoRA scales the grad and optimizer-state footprint by."""
+    import numpy as np
+    n_base = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(base_params))
+    return adapter_param_count(adapter) / max(n_base, 1)

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ATTN, MAMBA, MLA, ModelConfig
 from repro.models import layers as L
+from repro.models import lora as LORA
 from repro.models import mamba as M
 from repro.models import moe as MOE
 from repro.sharding import ctx
@@ -139,6 +140,23 @@ class Model:
             }
         return params
 
+    # -------------------------------------------------------- lora adapters
+    def init_adapter(self, key, params, rank: int, *,
+                     with_value: bool = False) -> dict:
+        """Per-role LoRA adapter over ``params`` (see models/lora.py)."""
+        return LORA.init_adapter(key, params, rank, with_value=with_value,
+                                 d_model=self.cfg.d_model)
+
+    def merge_adapter(self, params, adapter) -> dict:
+        """Fold A·B into the base weights (rollout-speed generation). The
+        returned tree aliases the base at non-adapted leaves — delete only
+        ``lora.merged_leaves(merged, adapter["lora"])`` afterwards."""
+        return LORA.merge_adapter(params, (adapter or {}).get("lora"))
+
+    def unmerge_adapter(self, params, adapter) -> dict:
+        """Subtract A·B back out of a merged tree (fp round-off applies)."""
+        return LORA.unmerge_adapter(params, (adapter or {}).get("lora"))
+
     # ------------------------------------------------------------ embeddings
     def embed(self, params, tokens):
         return jnp.take(params["embed"], tokens, axis=0)
@@ -157,11 +175,13 @@ class Model:
 
     # -------------------------------------------------------------- full seq
     def _slot_fwd(self, slot, h, positions, kind, has_ffn, is_moe, *,
-                  window, cross_kv=None, init_cache=None):
+                  window, cross_kv=None, init_cache=None, adapter=None):
         """One layer. If ``init_cache`` is given (prefill), also fills and
-        returns the slot's decode cache in the same pass."""
+        returns the slot's decode cache in the same pass. ``adapter`` is the
+        slot's LoRA subtree (unmerged A·B applied at the matmul sites)."""
         cfg = self.cfg
         cache = {}
+        ad = adapter or {}
         # (§Perf hillclimb C, refuted: per-slot Megatron-SP constraints were
         # tried here — GSPMD already picks its schedule and the extra
         # constraints cost +5..23% memory-term on jamba/llama; reverted.
@@ -169,7 +189,8 @@ class Model:
         x = L.rms_norm(h, slot["norm1"], cfg.norm_eps)
         if kind == ATTN:
             y = L.attention_fwd(slot["mixer"], x, positions, cfg,
-                                window=window, init_cache=init_cache)
+                                window=window, init_cache=init_cache,
+                                adapter=ad.get("mixer"))
             if init_cache is not None:
                 y, cache = y
             h = h + y
@@ -194,7 +215,8 @@ class Model:
             if is_moe:
                 y, aux = MOE.moe_fwd(slot["ffn"], x2, cfg)
             else:
-                y = L.mlp_fwd(slot["ffn"], x2, cfg.mlp_gated)
+                y = L.mlp_fwd(slot["ffn"], x2, cfg.mlp_gated,
+                              adapter=ad.get("ffn"))
             h = h + y
         return h, aux, cache
 
@@ -202,9 +224,12 @@ class Model:
         return (seg.moe_flags[i] and self.cfg.moe is not None) or self.cfg.d_ff > 0
 
     def _stack_fwd(self, params, h, positions, *, window=0, cross_kv=None,
-                   init_caches=None):
-        """Run all segments. Returns (h, aux, filled_caches_per_segment)."""
+                   init_caches=None, adapter=None):
+        """Run all segments. Returns (h, aux, filled_caches_per_segment).
+        ``adapter`` is a LoRA tree mirroring the segment structure; its
+        stacked factors ride the scan alongside the stacked weights."""
         cfg = self.cfg
+        lora = (adapter or {}).get("lora")
         aux_total = jnp.zeros((), jnp.float32)
         all_caches = []
         for si, seg in enumerate(self.segments):
@@ -214,7 +239,7 @@ class Model:
                 # residual stream shards over ("dp", "model") — 16x smaller
                 # checkpoint footprint; XLA all-gathers into the mixers.
                 hh = ctx.constrain(hh, "dp", "model", None)
-                gp, ckv, ic = xs
+                gp, ckv, ic, ad = xs
                 seg_specs = ctx.segment_param_specs()
                 if seg_specs is not None:
                     gp = jax.tree.map(ctx.constrain_spec, gp, seg_specs[si])
@@ -226,7 +251,8 @@ class Model:
                         self._seg_has_ffn(seg, i), is_moe,
                         window=window,
                         cross_kv=None if ckv is None else ckv[i],
-                        init_cache=None if ic is None else ic[f"slot{i}"])
+                        init_cache=None if ic is None else ic[f"slot{i}"],
+                        adapter=None if ad is None else ad.get(f"slot{i}"))
                     caches[f"slot{i}"] = c
                     aux = aux + a
                 return (hh, aux), caches
@@ -240,7 +266,8 @@ class Model:
                     policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
             xs = (params[f"segment{si}"],
                   cross_kv[si] if cross_kv is not None else None,
-                  init_caches[si] if init_caches is not None else None)
+                  init_caches[si] if init_caches is not None else None,
+                  lora.get(f"segment{si}") if lora else None)
             (h, aux_total), caches = jax.lax.scan(
                 body, (h, aux_total), xs)
             all_caches.append(caches)
@@ -307,20 +334,24 @@ class Model:
         positions = jnp.broadcast_to(jnp.arange(S), h.shape[:2])
         return h, positions, cross_kv
 
-    def forward(self, params, batch, *, window: int = 0):
-        """Full-sequence forward -> (logits [B,S,V], aux_loss, h_final)."""
+    def forward(self, params, batch, *, window: int = 0, adapter=None):
+        """Full-sequence forward -> (logits [B,S,V], aux_loss, h_final).
+        ``adapter`` (optional LoRA tree) is applied unmerged."""
         h, positions, cross_kv = self._prepare_inputs(params, batch)
         # cross_kv from _cross_kvs is already per-segment stacked; pass as xs
         h, aux, _ = self._stack_fwd(params, h, positions, window=window,
-                                    cross_kv=cross_kv)
+                                    cross_kv=cross_kv, adapter=adapter)
         return self.unembed(params, h), aux, h
 
-    def forward_value(self, params, batch):
-        """[B,S] per-token scalar values (critic / reward)."""
+    def forward_value(self, params, batch, adapter=None):
+        """[B,S] per-token scalar values (critic / reward). With an
+        ``adapter`` carrying a value head, the head comes from the adapter —
+        the hydra engine's critic/reward share a headless base trunk."""
         h, positions, cross_kv = self._prepare_inputs(params, batch)
-        h, _, _ = self._stack_fwd(params, h, positions, cross_kv=cross_kv)
+        h, _, _ = self._stack_fwd(params, h, positions, cross_kv=cross_kv,
+                                  adapter=adapter)
         h = L.rms_norm(h, params["final_norm"], self.cfg.norm_eps)
-        vh = params["value_head"]
+        vh = (adapter or {}).get("value_head") or params["value_head"]
         return (h.astype(jnp.float32) @ vh["w"] + vh["b"])[..., 0]
 
     def mtp_logits(self, params, h, tokens):
@@ -365,7 +396,8 @@ class Model:
             caches.append(slot_caches)
         return caches
 
-    def prefill(self, params, batch, capacity: int, *, window: int = 0):
+    def prefill(self, params, batch, capacity: int, *, window: int = 0,
+                adapter=None):
         """Process a prompt, returning (last-position logits [B,V], caches).
 
         caches = {"segments": [...], "cross_kv": [...]|None}. Attention /
@@ -377,7 +409,7 @@ class Model:
         init_caches = self.init_cache(B, capacity, h.dtype)
         h_out, aux, filled = self._stack_fwd(
             params, h, positions, window=window, cross_kv=cross_kv,
-            init_caches=init_caches)
+            init_caches=init_caches, adapter=adapter)
         logits = self.unembed(params, h_out[:, -1:])[:, 0]
         return logits, {"segments": filled, "cross_kv": cross_kv}
 
@@ -405,7 +437,8 @@ class Model:
             pools.append(slot_pools)
         return pools
 
-    def paged_prefill(self, params, batch, pools, block_tables, lengths):
+    def paged_prefill(self, params, batch, pools, block_tables, lengths, *,
+                      adapter=None):
         """Prefill into paged pools: dense single-pass prompt compute, then
         the per-layer K/V scattered to the sequences' pages (gather/scatter
         prefill). batch["tokens"] [B, S]; block_tables [B, nb] int32;
@@ -413,7 +446,7 @@ class Model:
         [B, V], pools)."""
         from repro import paged as PG
         S = batch["tokens"].shape[1]
-        logits, caches = self.prefill(params, batch, S)
+        logits, caches = self.prefill(params, batch, S, adapter=adapter)
         new_pools = []
         for si, seg in enumerate(self.segments):
             slot_pools = {}
@@ -428,24 +461,27 @@ class Model:
         return logits, new_pools
 
     def paged_decode_step(self, params, pools, token, position, block_tables,
-                          *, use_kernel: bool = False):
+                          *, use_kernel: bool = False, adapter=None):
         """One-token decode over paged pools. token/position [B] (position
         is the logical index being written); block_tables [B, nb].
         Returns (logits [B, V], pools)."""
         from repro.paged.attention import paged_attention_decode
         cfg = self.cfg
+        lora = (adapter or {}).get("lora")
         h = self.embed(params, token[:, None])
         new_pools = []
         for si, seg in enumerate(self.segments):
             def group_dec(hh, xs, seg=seg):
-                gp, pool = xs
+                gp, pool, ad = xs
                 new_pool = {}
                 for i in range(len(seg.kinds)):
                     slot = gp[f"slot{i}"]
+                    sad = (ad or {}).get(f"slot{i}") or {}
                     x = L.rms_norm(hh, slot["norm1"], cfg.norm_eps)
                     y, np_ = paged_attention_decode(
                         slot["mixer"], x, position, pool[f"slot{i}"],
-                        block_tables, cfg, use_kernel=use_kernel)
+                        block_tables, cfg, use_kernel=use_kernel,
+                        adapter=sad.get("mixer"))
                     hh = hh + y
                     new_pool[f"slot{i}"] = np_
                     if self._seg_has_ffn(seg, i):
@@ -454,33 +490,39 @@ class Model:
                         if is_moe:
                             y2, _ = MOE.moe_fwd(slot["ffn"], x2, cfg)
                         else:
-                            y2 = L.mlp_fwd(slot["ffn"], x2, cfg.mlp_gated)
+                            y2 = L.mlp_fwd(slot["ffn"], x2, cfg.mlp_gated,
+                                           adapter=sad.get("ffn"))
                         hh = hh + y2
                 return hh, new_pool
 
-            xs = (params[f"segment{si}"], pools[si])
+            xs = (params[f"segment{si}"], pools[si],
+                  lora.get(f"segment{si}") if lora else None)
             h, seg_pool = jax.lax.scan(group_dec, h, xs)
             new_pools.append(seg_pool)
         logits = self.unembed(params, h)[:, 0]
         return logits, new_pools
 
-    def decode_step(self, params, caches, token, position, *, window: int = 0):
+    def decode_step(self, params, caches, token, position, *, window: int = 0,
+                    adapter=None):
         """token [B] int32, position [B] int32 -> (logits [B,V], caches)."""
         cfg = self.cfg
+        lora = (adapter or {}).get("lora")
         h = self.embed(params, token[:, None])
         cross_kv = caches.get("cross_kv")
         new_segments = []
         for si, seg in enumerate(self.segments):
             def group_dec(hh, xs, seg=seg):
-                gp, cache, ckv = xs
+                gp, cache, ckv, ad = xs
                 new_cache = {}
                 for i, kind in enumerate(seg.kinds):
                     slot = gp[f"slot{i}"]
+                    sad = (ad or {}).get(f"slot{i}") or {}
                     x = L.rms_norm(hh, slot["norm1"], cfg.norm_eps)
                     if kind == ATTN:
                         y, nc = L.attention_decode(slot["mixer"], x, position,
                                                    cache[f"slot{i}"], cfg,
-                                                   window=window)
+                                                   window=window,
+                                                   adapter=sad.get("mixer"))
                     elif kind == MLA:
                         y, nc = L.mla_decode(slot["mixer"], x, position,
                                              cache[f"slot{i}"], cfg,
@@ -500,12 +542,14 @@ class Model:
                         if is_moe:
                             y2, _ = MOE.moe_fwd(slot["ffn"], x2, cfg)
                         else:
-                            y2 = L.mlp_fwd(slot["ffn"], x2, cfg.mlp_gated)
+                            y2 = L.mlp_fwd(slot["ffn"], x2, cfg.mlp_gated,
+                                           adapter=sad.get("ffn"))
                         hh = hh + y2
                 return hh, new_cache
 
             xs = (params[f"segment{si}"], caches["segments"][si],
-                  cross_kv[si] if cross_kv is not None else None)
+                  cross_kv[si] if cross_kv is not None else None,
+                  lora.get(f"segment{si}") if lora else None)
             h, seg_cache = jax.lax.scan(group_dec, h, xs)
             new_segments.append(seg_cache)
         logits = self.unembed(params, h)[:, 0]

@@ -156,16 +156,18 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, position, *,
 # Layer-level decode (the paged twin of layers.attention_decode)
 # ---------------------------------------------------------------------------
 def paged_attention_decode(params, x, position, pool, block_tables, cfg, *,
-                           use_kernel: bool = False):
+                           use_kernel: bool = False, adapter=None):
     """One-token decode against a paged pool. x [B,1,D]; position [B]
     absolute (== logical index; paged sequences are densely 0-indexed).
     Appends this step's K/V to the pool, attends over the block table.
+    ``adapter``: optional LoRA site dict (unmerged A·B on the projections).
     Returns (out [B,1,D], new_pool)."""
     from repro.models import layers as L
+    from repro.models.lora import lora_delta
     from repro.paged.paged_cache import append_decode
 
     B = x.shape[0]
-    q, k, v = L._project_qkv(params, x, cfg)
+    q, k, v = L._project_qkv(params, x, cfg, adapter=adapter)
     sin, cos = L.rope_tables(position[:, None], cfg.resolved_head_dim(),
                              cfg.rope_theta)
     q = L.apply_rope(q, sin, cos)
@@ -178,5 +180,6 @@ def paged_attention_decode(params, x, position, pool, block_tables, cfg, *,
             interpret=_jax.default_backend() != "tpu")
     else:
         out = paged_attention_reference(q[:, 0], pool, block_tables, position)
-    out = out.reshape(B, 1, -1) @ params["wo"]
+    out = out.reshape(B, 1, -1)
+    out = out @ params["wo"] + lora_delta(out, (adapter or {}).get("wo"))
     return out, pool

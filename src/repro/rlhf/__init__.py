@@ -1,9 +1,11 @@
+from repro.rlhf.engine import ModelEngine
 from repro.rlhf.experience import ExperienceBuffer
 from repro.rlhf.ppo import gae, kl_shaped_rewards, whiten
 from repro.rlhf.rollout import Rollout, RolloutResult, sample_token
-from repro.rlhf.trainer import (PhaseMemoryManager, RLHFConfig, RLHFTrainer,
-                                live_device_bytes)
+from repro.rlhf.trainer import (MEMORY_POLICIES, PhaseMemoryManager,
+                                RLHFConfig, RLHFTrainer, live_device_bytes)
 
-__all__ = ["ExperienceBuffer", "gae", "kl_shaped_rewards", "whiten",
-           "Rollout", "RolloutResult", "sample_token", "PhaseMemoryManager",
-           "RLHFConfig", "RLHFTrainer", "live_device_bytes"]
+__all__ = ["ModelEngine", "ExperienceBuffer", "gae", "kl_shaped_rewards",
+           "whiten", "Rollout", "RolloutResult", "sample_token",
+           "MEMORY_POLICIES", "PhaseMemoryManager", "RLHFConfig",
+           "RLHFTrainer", "live_device_bytes"]

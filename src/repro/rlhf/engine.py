@@ -1,0 +1,138 @@
+"""Shared-base "hydra" RLHF engine: one frozen trunk, per-role adapters.
+
+The paper's §2.1 accounting blames the four full model replicas (actor,
+critic, reference, reward) plus two full optimizer states for most of the
+persistent RLHF footprint. Hydra-RLHF (arXiv:2309.00754) and PERL
+(arXiv:2403.10704) show the replicas can share one frozen trunk with
+per-role LoRA adapters at near-zero quality cost. :class:`ModelEngine`
+realizes that here:
+
+  * **base**      — ONE frozen parameter tree (the SFT checkpoint);
+  * **actor**     — base ⊕ actor LoRA adapter (trained);
+  * **reference** — the plain base forward. The frozen ref *copy* of the
+    four-model pipeline disappears entirely: at init the actor adapter's
+    delta is zero, so ``ref ≡ actor-at-init`` exactly, the same invariant
+    the separate path builds with ``jnp.copy``;
+  * **critic**    — base ⊕ critic adapter + value head (trained);
+  * **reward**    — base ⊕ reward adapter + value head (frozen; seeded
+    from the critic adapter init, mirroring the separate path's seeding).
+
+Optimizer state and gradients exist only for adapter leaves (see
+``steps.make_lora_train_step``), so the persistent footprint drops from
+``~4 x params + 2 x opt(params)`` to
+``params + Σ_role adapters + 2 x opt(adapters)``.
+
+Rollout-speed generation uses ``merge_adapter`` (fold A·B into the trunk
+once per iteration) rather than paying the unmerged per-matmul delta on
+every decode step; the merged leaves are dropped at the phase boundary and
+re-merged from the frozen base next iteration, so merge error never
+accumulates.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ATTN, ModelConfig
+from repro.models import Model
+from repro.models import lora as LORA
+
+
+def _tree_bytes(tree) -> int:
+    return int(sum(np.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+                   for l in jax.tree.leaves(tree)))
+
+
+class ModelEngine:
+    """One frozen base tree + per-role AdapterSets (LoRA factors on every
+    adapted 2-D projection, plus value heads for critic/reward)."""
+
+    VALUE_ROLES = frozenset({"critic", "reward"})
+
+    def __init__(self, cfg: ModelConfig, key, *, rank: int = 128,
+                 roles=("actor", "critic", "reward")):
+        assert cfg.input_mode == "tokens", \
+            f"hydra engine needs token-input models, got {cfg.input_mode}"
+        assert all(k == ATTN for k in cfg.layer_kinds()), \
+            f"hydra engine covers attention-only trunks, got {cfg.name}"
+        assert cfg.moe is None, "hydra engine covers dense FFNs"
+        self.cfg = cfg
+        self.rank = rank
+        self.model = Model(cfg)                 # headless shared trunk
+        kb, *krs = jax.random.split(key, 1 + len(roles))
+        self.base_params = self.model.init(kb)  # frozen
+        self.adapters: Dict[str, Any] = {}
+        for role, kr in zip(roles, krs):
+            if role == "reward" and "critic" in self.adapters:
+                # seeded from the critic init (documented parity with the
+                # separate path's reward <- copy(critic init))
+                self.adapters[role] = jax.tree.map(
+                    jnp.copy, self.adapters["critic"])
+                continue
+            self.adapters[role] = self.model.init_adapter(
+                kr, self.base_params, rank,
+                with_value=role in self.VALUE_ROLES)
+
+    # ------------------------------------------------------ role forwards
+    # The trunk is an explicit argument (not read off ``self``) so jitted
+    # callers pass it as a real input — closing over it would bake the
+    # largest tree in the system into the executable as a constant.
+    def logits(self, base_params, adapter, batch):
+        """Role-switched forward: base ⊕ adapter -> [B,S,V] logits."""
+        return self.model.forward(base_params, batch, adapter=adapter)[0]
+
+    def ref_logits(self, base_params, batch):
+        """Reference forward IS the plain base pass — no ref copy exists."""
+        return self.model.forward(base_params, batch)[0]
+
+    def values(self, base_params, adapter, batch):
+        """Critic/reward forward: base ⊕ adapter + adapter's value head."""
+        return self.model.forward_value(base_params, batch, adapter=adapter)
+
+    # Rollout-speed generation folds A·B into the trunk and drops the
+    # merged leaves at the phase boundary — that lifecycle lives in
+    # ``Rollout.generate(..., adapter=...)`` via ``Model.merge_adapter`` and
+    # ``lora.delete_merged``.
+
+    # ---------------------------------------------------------- accounting
+    def base_param_count(self) -> int:
+        return int(sum(np.prod(l.shape)
+                       for l in jax.tree.leaves(self.base_params)))
+
+    def adapter_param_count(self, role: str) -> int:
+        return LORA.adapter_param_count(self.adapters[role])
+
+    def trainable_fraction(self, role: str = "actor") -> float:
+        return LORA.trainable_fraction(self.base_params, self.adapters[role])
+
+    def memory_accounting(self) -> Dict[str, Dict[str, int]]:
+        """Per-role {params, opt, grad} bytes for the hydra layout, plus the
+        separate-path equivalents on the same config. Optimizer-state bytes
+        are EXACT for ``cfg.optimizer`` (``eval_shape`` over the real
+        ``opt.init`` tree — adamw fp32/bf16 moments and adafactor's
+        factored second moment all come out right); grads are transient,
+        one copy of the trainables in the accumulation dtype of
+        ``steps._accumulated_grads``."""
+        from repro.optim import make_optimizer
+        opt = make_optimizer(self.cfg.optimizer)
+        opt_bytes = lambda tree: _tree_bytes(jax.eval_shape(opt.init, tree))
+        grad_item = 4 if self.cfg.optimizer == "adamw" else 2
+        base_b = _tree_bytes(self.base_params)
+        out: Dict[str, Dict[str, int]] = {
+            "base": {"params": base_b, "opt": 0, "grad": 0}}
+        for role, ad in self.adapters.items():
+            trained = role != "reward"
+            out[role] = {
+                "params": _tree_bytes(ad),
+                "opt": opt_bytes(ad) if trained else 0,
+                "grad": (grad_item * LORA.adapter_param_count(ad)
+                         if trained else 0)}
+        trained_full = {"params": base_b, "opt": opt_bytes(self.base_params),
+                        "grad": grad_item * self.base_param_count()}
+        sep = {"actor": dict(trained_full), "critic": dict(trained_full),
+               "ref": {"params": base_b, "opt": 0, "grad": 0},
+               "reward": {"params": base_b, "opt": 0, "grad": 0}}
+        return {"hydra": out, "separate": sep}

@@ -93,10 +93,25 @@ class Rollout:
         self._prefill = jax.jit(prefill)
         self._decode = jax.jit(decode, donate_argnums=(1,))
 
-    def generate(self, params, batch, max_new_tokens: int, key):
+    def generate(self, params, batch, max_new_tokens: int, key,
+                 adapter=None):
         """batch: prompt inputs (see Model input modes). Python loop over
         steps — the realistic serving pattern, and the phase the paper's
-        §3.1 traces."""
+        §3.1 traces.
+
+        With ``adapter`` (hydra engine), generation runs from *merged*
+        weights — A·B folded into the trunk once, so every decode step pays
+        zero adapter overhead — and the merged leaves are deleted at the
+        phase boundary (the base leaves they alias survive). The merge is
+        redone from the frozen base next call, so fp error never
+        accumulates."""
+        if adapter is not None:
+            from repro.models.lora import delete_merged
+            merged = self.model.merge_adapter(params, adapter)
+            try:
+                return self.generate(merged, batch, max_new_tokens, key)
+            finally:
+                delete_merged(merged, adapter.get("lora"))
         if self.backend == "paged":
             return self._generate_paged(params, batch, max_new_tokens, key)
         tokens = batch["tokens"]

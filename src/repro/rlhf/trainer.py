@@ -1,5 +1,14 @@
-"""The four-model PPO trainer, with the paper's phase-boundary memory
-management as a first-class feature.
+"""The RLHF PPO trainer, with the paper's phase-boundary memory management
+as a first-class feature — in two engine layouts:
+
+  * ``engine="separate"`` — the four-model seed path (actor, critic,
+    reference, reward as full parameter trees, two full optimizer states):
+    the configuration the paper profiles.
+  * ``engine="hydra"``    — the shared-base engine (``rlhf.engine``): ONE
+    frozen trunk, per-role LoRA adapters + value heads, adapter-only
+    optimizer states. Reference logp is the plain base forward (the ref
+    copy disappears); rollout generates from merged weights re-merged at
+    phase boundaries.
 
 ``PhaseMemoryManager`` is the JAX/TPU-native analogue of the paper's
 ``empty_cache()`` insertion (§3.3): at each phase boundary it deterministically
@@ -23,9 +32,13 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import Model
+from repro.rlhf.engine import ModelEngine
 from repro.rlhf.ppo import gae, kl_shaped_rewards, whiten
 from repro.rlhf.rollout import Rollout
-from repro.steps import (init_train_state, make_train_step, _prefix_len)
+from repro.steps import (init_lora_train_state, init_train_state,
+                         make_lora_train_step, make_train_step, _prefix_len)
+
+MEMORY_POLICIES = ("none", "after_inference", "after_training", "after_all")
 
 
 def live_device_bytes() -> int:
@@ -35,8 +48,15 @@ def live_device_bytes() -> int:
 @dataclass
 class PhaseMemoryManager:
     """Phase-boundary memory hygiene + per-phase live-memory profiling."""
-    policy: str = "after_inference"     # none | after_inference | after_all
+    # none | after_inference | after_training | after_all
+    policy: str = "after_inference"
     records: List[dict] = field(default_factory=list)
+
+    def __post_init__(self):
+        if self.policy not in MEMORY_POLICIES:
+            raise ValueError(
+                f"unknown memory policy {self.policy!r}; "
+                f"expected one of {MEMORY_POLICIES}")
 
     def boundary(self, phase: str, kind: str, *drop):
         for tree in drop:
@@ -67,22 +87,43 @@ class RLHFConfig:
     top_k: int = 50
     whiten_advantages: bool = True
     memory_policy: str = "after_inference"
+    engine: str = "separate"        # separate | hydra
+    lora_rank: int = 128            # hydra adapter rank (paper grid: 128)
 
 
 class RLHFTrainer:
     """PPO over (actor, critic, reference, reward). The reward model is any
     callable ``(tokens, mask) -> [B] float`` — a learned value-head model or
-    a programmatic reward for the examples."""
+    a programmatic reward for the examples.
+
+    With ``rl.engine == "hydra"`` the four roles share one frozen trunk
+    (``critic_cfg`` is ignored — the critic/reward heads ride the actor
+    trunk) and only adapter leaves train.
+    """
 
     def __init__(self, actor_cfg: ModelConfig, critic_cfg: ModelConfig,
                  rl: RLHFConfig, key, reward_fn: Optional[Callable] = None):
+        assert rl.engine in ("separate", "hydra"), rl.engine
         self.rl = rl
         self.actor_cfg, self.critic_cfg = actor_cfg, critic_cfg
+        self.reward_fn = reward_fn
+        self.memory = PhaseMemoryManager(policy=rl.memory_policy)
+        if rl.engine == "hydra":
+            self._init_hydra(actor_cfg, rl, key)
+        else:
+            self._init_separate(actor_cfg, critic_cfg, rl, key)
+        self.rollout = Rollout(self.actor, actor_cfg,
+                               capacity=rl.prompt_len + rl.gen_len,
+                               temperature=rl.temperature, top_k=rl.top_k)
+
+    # -------------------------------------------------------------- separate
+    def _init_separate(self, actor_cfg, critic_cfg, rl, key):
+        self.engine = None
         self.actor = Model(actor_cfg)
         self.critic = Model(critic_cfg, with_value=True)
         self.reward_model = Model(critic_cfg, with_value=True)
         self.ref = Model(actor_cfg)
-        ks = jax.random.split(key, 4)
+        ks = jax.random.split(key, 2)
 
         self.actor_step = make_train_step(self.actor, actor_cfg, kind="ppo",
                                           lr=rl.lr, kl_coef=rl.kl_coef)
@@ -92,15 +133,12 @@ class RLHFTrainer:
                                             self.actor_step.optimizer)
         self.critic_state = init_train_state(self.critic, critic_cfg, ks[1],
                                              self.critic_step.optimizer)
-        # reference = frozen copy of the (SFT) actor init; reward likewise
+        # reference = frozen copy of the (SFT) actor init; reward = frozen
+        # copy of the critic init (same value-head structure — the reward
+        # model is "a critic that stopped learning at preference time")
         self.ref_params = jax.tree.map(jnp.copy, self.actor_state["params"])
-        self.reward_params = self.reward_model.init(ks[2])
-        self.reward_fn = reward_fn
-
-        self.rollout = Rollout(self.actor, actor_cfg,
-                               capacity=rl.prompt_len + rl.gen_len,
-                               temperature=rl.temperature, top_k=rl.top_k)
-        self.memory = PhaseMemoryManager(policy=rl.memory_policy)
+        self.reward_params = jax.tree.map(jnp.copy,
+                                          self.critic_state["params"])
 
         self._jit_actor_step = jax.jit(self.actor_step, donate_argnums=(0,))
         self._jit_critic_step = jax.jit(self.critic_step, donate_argnums=(0,))
@@ -110,6 +148,90 @@ class RLHFTrainer:
         self._jit_reward = jax.jit(
             lambda p, b: self.reward_model.forward_value(p, b))
 
+        # engine-bound callables: make_experience / train_step are the same
+        # straight-line code for both engines over these seven.
+        self._gen = lambda prompts, key: self.rollout.generate(
+            self.actor_state["params"], {"tokens": prompts},
+            self.rl.gen_len, key)
+        self._old_logp = lambda b: self._jit_logp(
+            self.actor_state["params"], b)
+        self._ref_logp = lambda b: self._jit_logp(self.ref_params, b)
+        self._values = lambda b: self._jit_values(
+            self.critic_state["params"], b)
+        self._reward_scores = lambda b: self._jit_reward(
+            self.reward_params, b)
+
+        def _actor_update(exp):
+            self.actor_state, m = self._jit_actor_step(self.actor_state, exp)
+            return m
+
+        def _critic_update(cbatch):
+            self.critic_state, m = self._jit_critic_step(self.critic_state,
+                                                         cbatch)
+            return m
+
+        self._actor_update, self._critic_update = _actor_update, _critic_update
+
+    # ----------------------------------------------------------------- hydra
+    def _init_hydra(self, cfg: ModelConfig, rl: RLHFConfig, key):
+        self.engine = ModelEngine(cfg, key, rank=rl.lora_rank)
+        self.actor = self.engine.model          # shared headless trunk
+        self.critic = self.reward_model = self.ref = self.actor
+        self.base_params = self.engine.base_params
+
+        self.actor_step = make_lora_train_step(self.actor, cfg, kind="ppo",
+                                               lr=rl.lr, kl_coef=rl.kl_coef)
+        self.critic_step = make_lora_train_step(self.actor, cfg,
+                                                kind="critic",
+                                                lr=rl.critic_lr)
+        self.actor_state = init_lora_train_state(
+            self.engine.adapters["actor"], self.actor_step.optimizer)
+        self.critic_state = init_lora_train_state(
+            self.engine.adapters["critic"], self.critic_step.optimizer)
+        # frozen roles: reference IS the base (no copy at all); reward is
+        # the frozen reward adapter over the same base (seeded from the
+        # critic adapter init inside ModelEngine)
+        self.ref_params = self.base_params
+        self.reward_adapter = self.engine.adapters["reward"]
+
+        self._jit_actor_step = jax.jit(self.actor_step, donate_argnums=(0,))
+        self._jit_critic_step = jax.jit(self.critic_step, donate_argnums=(0,))
+        self._jit_logp = jax.jit(self._token_logp_adapter)
+        self._jit_ref_logp = jax.jit(self._token_logp_ref)
+        self._jit_values = jax.jit(self.engine.values)
+        self._jit_reward = self._jit_values
+
+        # engine-bound callables (hydra flavor: the frozen trunk threads
+        # through every call; rollout merges A·B into it once per phase)
+        self._gen = lambda prompts, key: self.rollout.generate(
+            self.base_params, {"tokens": prompts}, self.rl.gen_len, key,
+            adapter=self.actor_state["params"])
+        self._old_logp = lambda b: self._jit_logp(
+            self.base_params, self.actor_state["params"], b)
+        # reference logp IS the plain base forward — no ref replica
+        self._ref_logp = lambda b: self._jit_ref_logp(self.base_params, b)
+        self._values = lambda b: self._jit_values(
+            self.base_params, self.critic_state["params"], b)
+        self._reward_scores = lambda b: self._jit_reward(
+            self.base_params, self.reward_adapter, b)
+
+        # The donated step consumes the previous adapter arrays, so the
+        # engine's adapter view is re-pointed at the updated train state —
+        # engine.adapters always reads the live trained values.
+        def _actor_update(exp):
+            self.actor_state, m = self._jit_actor_step(
+                self.actor_state, self.base_params, exp)
+            self.engine.adapters["actor"] = self.actor_state["params"]
+            return m
+
+        def _critic_update(cbatch):
+            self.critic_state, m = self._jit_critic_step(
+                self.critic_state, self.base_params, cbatch)
+            self.engine.adapters["critic"] = self.critic_state["params"]
+            return m
+
+        self._actor_update, self._critic_update = _actor_update, _critic_update
+
     # ------------------------------------------------------------------
     def _token_logp(self, params, batch):
         from repro.steps import _action_logp
@@ -117,25 +239,35 @@ class RLHFTrainer:
         return _action_logp(logits, batch["tokens"],
                             _prefix_len(self.actor_cfg))
 
+    def _token_logp_adapter(self, params, adapter, batch):
+        from repro.steps import _action_logp
+        logits = self.engine.logits(params, adapter, batch)
+        return _action_logp(logits, batch["tokens"],
+                            _prefix_len(self.actor_cfg))
+
+    def _token_logp_ref(self, params, batch):
+        from repro.steps import _action_logp
+        return _action_logp(self.engine.ref_logits(params, batch),
+                            batch["tokens"], _prefix_len(self.actor_cfg))
+
     def make_experience(self, prompts: jax.Array, key) -> Dict[str, Any]:
-        """Phases 1-5: rollout + the four scoring inferences -> experience."""
+        """Phases 1-5: rollout + the four scoring inferences -> experience.
+        Straight-line over the engine-bound callables from ``_init_*``."""
         mm = self.memory
-        ro = self.rollout.generate(self.actor_state["params"],
-                                   {"tokens": prompts}, self.rl.gen_len, key)
+        ro = self._gen(prompts, key)
         mm.boundary("rollout", "inference")
 
         batch = {"tokens": ro.tokens}
-        old_logp = self._jit_logp(self.actor_state["params"], batch)
+        old_logp = self._old_logp(batch)
         mm.boundary("score_old_logp", "inference")
-        ref_logp = self._jit_logp(self.ref_params, batch)
+        ref_logp = self._ref_logp(batch)
         mm.boundary("score_ref", "inference")
-        values = self._jit_values(self.critic_state["params"], batch)
-        values = values * ro.mask
+        values = self._values(batch) * ro.mask
         mm.boundary("score_values", "inference")
         if self.reward_fn is not None:
             terminal = self.reward_fn(ro.tokens, ro.mask)
         else:
-            rm = self._jit_reward(self.reward_params, batch)
+            rm = self._reward_scores(batch)
             idx = jnp.maximum(ro.mask.sum(-1).astype(jnp.int32) - 1, 0)
             terminal = jnp.take_along_axis(rm, idx[:, None], 1)[:, 0]
         mm.boundary("score_reward", "inference")
@@ -161,13 +293,12 @@ class RLHFTrainer:
         old_values = exp.pop("old_values")
         metrics = {}
         for _ in range(self.rl.ppo_epochs):
-            self.actor_state, m = self._jit_actor_step(self.actor_state, exp)
+            m = self._actor_update(exp)
             metrics.update({k: float(v) for k, v in m.items()})
         self.memory.boundary("train_actor", "training")
         cbatch = dict(exp, old_values=old_values)
         for _ in range(self.rl.ppo_epochs):
-            self.critic_state, mc = self._jit_critic_step(self.critic_state,
-                                                          cbatch)
+            mc = self._critic_update(cbatch)
             metrics.update({k: float(v) for k, v in mc.items()})
         self.memory.boundary("train_critic", "training", exp, cbatch)
         metrics["mean_reward"] = mean_reward

@@ -110,6 +110,35 @@ def _prefix_len(cfg: ModelConfig) -> int:
     return cfg.num_prefix_embeddings if cfg.input_mode == "embeddings" else 0
 
 
+def _accumulated_grads(loss_fn, params, batch, N: int, acc_dtype):
+    """``value_and_grad(loss_fn)(params, batch)`` with N-way microbatch
+    gradient accumulation under ``lax.scan`` (N == 1 is the plain call).
+    ``loss_fn`` has signature ``(params, batch) -> (loss, metrics)``.
+    Returns ``((loss, metrics), grads)`` averaged over microbatches."""
+    if N == 1:
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+    mbs = jax.tree.map(
+        lambda x: x.reshape((N, x.shape[0] // N) + x.shape[1:]), batch)
+
+    def body(carry, mb):
+        gacc, lacc, macc = carry
+        (l, met), g = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, mb)
+        gacc = jax.tree.map(
+            lambda a, b: a + b.astype(acc_dtype), gacc, g)
+        macc = jax.tree.map(lambda a, b: a + b, macc, met)
+        return (gacc, lacc + l, macc), None
+
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype), params)
+    m0 = jax.eval_shape(lambda p, mb: loss_fn(p, mb)[1], params,
+                        jax.tree.map(lambda x: x[0], mbs))
+    m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m0)
+    (grads, loss, metrics), _ = jax.lax.scan(
+        body, (g0, jnp.zeros((), jnp.float32), m0), mbs)
+    return ((loss / N, jax.tree.map(lambda m: m / N, metrics)),
+            jax.tree.map(lambda g: g / N, grads))
+
+
 def make_train_step(model: Model, cfg: ModelConfig, *, lr: float = 3e-5,
                     kind: str = "ppo", kl_coef: float = 0.1,
                     max_grad_norm: float = 1.0):
@@ -143,33 +172,8 @@ def make_train_step(model: Model, cfg: ModelConfig, *, lr: float = 3e-5,
     acc_dtype = jnp.float32 if cfg.optimizer == "adamw" else jnp.bfloat16
 
     def train_step(state, batch):
-        if N == 1:
-            (loss, metrics), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(state["params"], batch)
-        else:
-            mbs = jax.tree.map(
-                lambda x: x.reshape((N, x.shape[0] // N) + x.shape[1:]), batch)
-
-            def body(carry, mb):
-                gacc, lacc, macc = carry
-                (l, met), g = jax.value_and_grad(
-                    loss_fn, has_aux=True)(state["params"], mb)
-                gacc = jax.tree.map(
-                    lambda a, b: a + b.astype(acc_dtype), gacc, g)
-                macc = jax.tree.map(lambda a, b: a + b, macc, met)
-                return (gacc, lacc + l, macc), None
-
-            g0 = jax.tree.map(
-                lambda p: jnp.zeros(p.shape, acc_dtype), state["params"])
-            m0 = jax.eval_shape(lambda p, mb: loss_fn(p, mb)[1],
-                                state["params"],
-                                jax.tree.map(lambda x: x[0], mbs))
-            m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m0)
-            (grads, loss, metrics), _ = jax.lax.scan(
-                body, (g0, jnp.zeros((), jnp.float32), m0), mbs)
-            grads = jax.tree.map(lambda g: g / N, grads)
-            loss = loss / N
-            metrics = jax.tree.map(lambda m: m / N, metrics)
+        (loss, metrics), grads = _accumulated_grads(
+            loss_fn, state["params"], batch, N, acc_dtype)
         grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
         new_params, new_opt = optimizer.update(grads, state["opt"],
                                                state["params"], lr)
@@ -184,6 +188,69 @@ def make_train_step(model: Model, cfg: ModelConfig, *, lr: float = 3e-5,
 def init_train_state(model: Model, cfg: ModelConfig, key, optimizer):
     params = model.init(key)
     return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_lora_train_step(model: Model, cfg: ModelConfig, *, lr: float = 3e-5,
+                         kind: str = "ppo", kl_coef: float = 0.1,
+                         max_grad_norm: float = 1.0):
+    """LoRA-aware twin of :func:`make_train_step` for the hydra engine.
+
+    The step signature is ``(state, base_params, batch)``: gradients and the
+    optimizer state cover ONLY the adapter leaves in ``state["params"]`` —
+    the frozen trunk rides along as a non-donated, non-differentiated input,
+    so its bytes are shared across every role's step. Microbatch gradient
+    accumulation and the MTP auxiliary loss match :func:`make_train_step`
+    (the MTP head stays frozen in the trunk; its loss still trains the
+    adapter through the hidden states). kind: ppo | critic | lm.
+    """
+    optimizer = make_optimizer(cfg.optimizer)
+    prefix = _prefix_len(cfg)
+
+    def loss_fn(adapter, base_params, batch):
+        if kind == "critic":
+            values = model.forward_value(base_params, batch, adapter=adapter)
+            S = batch["tokens"].shape[1]
+            values = values[:, prefix:prefix + S]
+            return critic_loss(values, batch)
+        logits, aux, h = model.forward(base_params, batch, adapter=adapter)
+        if kind == "lm":
+            loss = lm_loss(logits, batch["tokens"], batch["loss_mask"],
+                           prefix=prefix)
+            metrics = {"lm_loss": loss}
+        else:
+            loss, metrics = ppo_actor_loss(logits, batch, prefix=prefix,
+                                           kl_coef=kl_coef)
+        if cfg.mtp_depth and kind != "critic":
+            mtp_lg = model.mtp_logits(base_params, h, batch["tokens"])
+            mtp = mtp_loss(mtp_lg, batch["tokens"], batch["loss_mask"])
+            loss = loss + 0.1 * mtp
+            metrics["mtp_loss"] = mtp
+        return loss + aux, metrics
+
+    N = max(1, cfg.microbatches)
+    acc_dtype = jnp.float32 if cfg.optimizer == "adamw" else jnp.bfloat16
+
+    def train_step(state, base_params, batch):
+        (loss, metrics), grads = _accumulated_grads(
+            lambda ad, mb: loss_fn(ad, base_params, mb),
+            state["params"], batch, N, acc_dtype)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        new_params, new_opt = optimizer.update(grads, state["opt"],
+                                               state["params"], lr)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return {"params": new_params, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    train_step.optimizer = optimizer
+    return train_step
+
+
+def init_lora_train_state(adapter, optimizer):
+    """Train state whose params (and hence optimizer moments) are only the
+    adapter tree — the trainable_fraction-scaled footprint of the paper's
+    LoRA rows, realized."""
+    return {"params": adapter, "opt": optimizer.init(adapter),
             "step": jnp.zeros((), jnp.int32)}
 
 

@@ -1,0 +1,209 @@
+"""Hydra shared-base engine: adapter correctness (merged vs unmerged,
+rank-0 identity), frozen-base PPO training, phase-memory policies, and the
+exact trainable-fraction accounting."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.models import lora as LORA
+from repro.rlhf import (MEMORY_POLICIES, ModelEngine, PhaseMemoryManager,
+                        RLHFConfig, RLHFTrainer)
+from repro.rlhf.reward import make_target_token_reward
+
+
+def small_cfg(**kw):
+    base = dict(num_layers=2, d_model=64, d_ff=128, vocab_size=64,
+                num_heads=4, num_kv_heads=2, head_dim=16)
+    base.update(kw)
+    return dataclasses.replace(get_config("llama3_2_3b").smoke(), **base)
+
+
+def randomized_adapter(model, params, rank, key, with_value=False):
+    """Adapter with nonzero B (so the delta actually changes the forward)."""
+    ad = model.init_adapter(key, params, rank, with_value=with_value)
+    leaves, treedef = jax.tree.flatten(ad)
+    ks = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [
+        0.05 * jax.random.normal(k, l.shape, l.dtype)
+        for k, l in zip(ks, leaves)])
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = small_cfg()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    adapter = randomized_adapter(model, params, 4, jax.random.PRNGKey(1))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (2, 12),
+                                          0, cfg.vocab_size)}
+    return cfg, model, params, adapter, batch
+
+
+def test_merged_vs_unmerged_forward_equivalence(setup):
+    cfg, model, params, adapter, batch = setup
+    unmerged, _, _ = model.forward(params, batch, adapter=adapter)
+    merged = model.merge_adapter(params, adapter)
+    merged_lg, _, _ = model.forward(merged, batch)
+    np.testing.assert_allclose(np.asarray(unmerged), np.asarray(merged_lg),
+                               atol=2e-5)
+    # the adapter actually does something
+    base_lg, _, _ = model.forward(params, batch)
+    assert float(jnp.abs(unmerged - base_lg).max()) > 1e-3
+
+
+def test_unmerge_restores_base(setup):
+    cfg, model, params, adapter, batch = setup
+    merged = model.merge_adapter(params, adapter)
+    restored = model.unmerge_adapter(merged, adapter)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_merged_leaves_are_exactly_the_adapted_sites(setup):
+    cfg, model, params, adapter, batch = setup
+    merged = model.merge_adapter(params, adapter)
+    fresh = LORA.merged_leaves(merged, adapter["lora"])
+    n_sites = len(jax.tree.leaves(adapter["lora"])) // 2   # a+b per site
+    assert len(fresh) == n_sites
+    base_ids = {id(l) for l in jax.tree.leaves(params)}
+    assert all(id(l) not in base_ids for l in fresh)
+    # non-adapted leaves of the merged tree alias the base (no copy)
+    n_aliased = sum(id(l) in base_ids for l in jax.tree.leaves(merged))
+    assert n_aliased == len(jax.tree.leaves(params)) - n_sites
+
+
+def test_rank0_adapter_is_base_forward(setup):
+    cfg, model, params, _, batch = setup
+    ad0 = model.init_adapter(jax.random.PRNGKey(3), params, 0,
+                             with_value=True)
+    assert ad0["lora"] == {}
+    lg0, _, _ = model.forward(params, batch, adapter=ad0)
+    lg_base, _, _ = model.forward(params, batch)
+    assert bool(jnp.array_equal(lg0, lg_base))
+    # merge with an empty lora tree is the identity
+    assert model.merge_adapter(params, ad0) is not params  # new dict shell
+    for a, b in zip(jax.tree.leaves(params),
+                    jax.tree.leaves(model.merge_adapter(params, ad0))):
+        assert a is b
+
+
+def test_adapter_decode_matches_adapter_forward(setup):
+    """Greedy decode with the unmerged adapter == teacher-forced adapter
+    forward argmax (the decode_step adapter path)."""
+    cfg, model, params, adapter, batch = setup
+    P = batch["tokens"].shape[1]
+    logits_pf, caches = model.prefill(params, batch, P + 4, adapter=adapter)
+    toks = [jnp.argmax(logits_pf, -1).astype(jnp.int32)]
+    for t in range(3):
+        pos = jnp.full((2,), P + t, jnp.int32)
+        lg, caches = model.decode_step(params, caches, toks[-1], pos,
+                                       adapter=adapter)
+        toks.append(jnp.argmax(lg, -1).astype(jnp.int32))
+    full = jnp.concatenate([batch["tokens"], jnp.stack(toks[:-1], 1)], 1)
+    lg_full, _, _ = model.forward(params, {"tokens": full}, adapter=adapter)
+    greedy = jnp.argmax(lg_full[:, P - 1:], -1)
+    np.testing.assert_array_equal(np.asarray(jnp.stack(toks, 1)),
+                                  np.asarray(greedy))
+
+
+def test_paged_decode_adapter_matches_dense(setup):
+    cfg, model, params, adapter, batch = setup
+    assert model.supports_paged()
+    B, P = batch["tokens"].shape
+    ps, nb = 4, -(-(P + 1) // 4)
+    pools = model.init_paged_pools(B * nb, ps, jnp.float32)
+    bt = jnp.arange(B * nb, dtype=jnp.int32).reshape(B, nb)
+    _, pools = model.paged_prefill(params, batch, pools, bt,
+                                   jnp.full((B,), P, jnp.int32),
+                                   adapter=adapter)
+    tok = jnp.zeros((B,), jnp.int32)
+    pos = jnp.full((B,), P, jnp.int32)
+    lg_paged, _ = model.paged_decode_step(params, pools, tok, pos, bt,
+                                          adapter=adapter)
+    _, caches = model.prefill(params, batch, P + 1, adapter=adapter)
+    lg_dense, _ = model.decode_step(params, caches, tok, pos,
+                                    adapter=adapter)
+    np.testing.assert_allclose(np.asarray(lg_paged), np.asarray(lg_dense),
+                               atol=2e-5)
+
+
+def test_hydra_ppo_base_frozen_adapters_move():
+    """2-step PPO smoke on engine="hydra": the base tree is bit-identical
+    before/after — only the adapters (and their opt states) moved."""
+    cfg = small_cfg()
+    rl = RLHFConfig(prompt_len=8, gen_len=8, lr=3e-3, critic_lr=3e-3,
+                    kl_coef=0.0, top_k=0, engine="hydra", lora_rank=4)
+    tr = RLHFTrainer(cfg, cfg, rl, jax.random.PRNGKey(0),
+                     reward_fn=make_target_token_reward(7))
+    base_before = jax.tree.map(lambda x: np.asarray(x).copy(),
+                               tr.base_params)
+    actor_before = jax.tree.map(lambda x: np.asarray(x).copy(),
+                                tr.actor_state["params"])
+    key = jax.random.PRNGKey(1)
+    prompts = jax.random.randint(key, (4, 8), 0, cfg.vocab_size)
+    for s in range(2):
+        metrics = tr.train_step(prompts, jax.random.fold_in(key, s))
+    assert np.isfinite(metrics["loss"])
+    for a, b in zip(jax.tree.leaves(base_before),
+                    jax.tree.leaves(tr.base_params)):
+        assert np.array_equal(a, np.asarray(b)), "frozen base moved!"
+    moved = any(not np.array_equal(a, np.asarray(b))
+                for a, b in zip(jax.tree.leaves(actor_before),
+                                jax.tree.leaves(tr.actor_state["params"])))
+    assert moved, "actor adapter never trained"
+    # ref IS the base — no separate copy
+    assert tr.ref_params is tr.base_params
+    # the donated steps must not leave the engine's adapter view pointing
+    # at deleted buffers: it tracks the live trained values
+    for role in ("actor", "critic"):
+        for leaf in jax.tree.leaves(tr.engine.adapters[role]):
+            assert not leaf.is_deleted(), f"{role} adapter view was donated"
+    assert tr.engine.adapters["actor"] is tr.actor_state["params"]
+    assert tr.engine.adapters["critic"] is tr.critic_state["params"]
+
+
+def test_separate_reward_seeded_from_critic_init():
+    cfg = small_cfg()
+    rl = RLHFConfig(prompt_len=8, gen_len=8, engine="separate")
+    tr = RLHFTrainer(cfg, cfg, rl, jax.random.PRNGKey(0),
+                     reward_fn=make_target_token_reward(7))
+    for a, b in zip(jax.tree.leaves(tr.reward_params),
+                    jax.tree.leaves(tr.critic_state["params"])):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_engine_memory_accounting_and_fraction():
+    cfg = small_cfg(d_model=128, d_ff=256, head_dim=32)
+    eng = ModelEngine(cfg, jax.random.PRNGKey(0), rank=8)
+    from repro.core import lora_trainable_fraction
+    assert eng.trainable_fraction("actor") == pytest.approx(
+        lora_trainable_fraction(cfg, 8), rel=0.05)
+    acc = eng.memory_accounting()
+    hy = sum(r["params"] + r["opt"] for r in acc["hydra"].values())
+    sep = sum(r["params"] + r["opt"] for r in acc["separate"].values())
+    assert hy < 0.6 * sep
+    # reward adapter is seeded from the critic adapter init
+    for a, b in zip(jax.tree.leaves(eng.adapters["reward"]),
+                    jax.tree.leaves(eng.adapters["critic"])):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_memory_manager_validates_policy():
+    with pytest.raises(ValueError):
+        PhaseMemoryManager(policy="after_lunch")
+
+
+@pytest.mark.parametrize("policy", MEMORY_POLICIES)
+def test_memory_manager_all_policies_record(policy):
+    mm = PhaseMemoryManager(policy=policy)
+    dead = jnp.ones((16,))
+    mm.boundary("rollout", "inference", {"x": dead})
+    assert dead.is_deleted()
+    mm.boundary("train_actor", "training")
+    assert [r["phase"] for r in mm.records] == ["rollout", "train_actor"]
+    assert all(r["live_bytes"] >= 0 for r in mm.records)

@@ -14,7 +14,7 @@ GEN_LENS = [180, 256, 199, 243]
 def study():
     actor = get_config("opt_1_3b")
     critic = get_config("opt_350m")
-    tf = lora_trainable_fraction(actor.param_count(), actor, 128)
+    tf = lora_trainable_fraction(actor, 128)
     plans = {}
     persist = {}
     for ckpt in (False, True):
@@ -91,7 +91,7 @@ def test_framework_static_cache_removes_decode_churn():
     growth entirely."""
     actor = get_config("opt_1_3b")
     critic = get_config("opt_350m")
-    tf = lora_trainable_fraction(actor.param_count(), actor, 128)
+    tf = lora_trainable_fraction(actor, 128)
     strat = PAPER_STRATEGIES[0]
 
     def decode_growth(naive):
