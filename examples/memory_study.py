@@ -1,16 +1,20 @@
 """The paper's memory study through the public core API: build the RLHF
 phase traces for the OPT workload, replay them through the caching-allocator
-simulator under a chosen strategy, and compare empty_cache policies.
+simulator under a chosen strategy, and compare empty_cache policies — with
+an optional runtime-offload axis (``--offload``, ``--engine hydra``) that
+parks off-phase role state to host at phase boundaries.
 
     PYTHONPATH=src python examples/memory_study.py [--strategy ZeRO-3]
+    PYTHONPATH=src python examples/memory_study.py --engine hydra --offload all
 """
 import argparse
+import dataclasses
 import sys
 
 sys.path.insert(0, "src")
 
 from repro.configs import get_config
-from repro.core import (PAPER_STRATEGIES, build_rlhf_phases,
+from repro.core import (OFFLOAD_LEVELS, PAPER_STRATEGIES, build_rlhf_phases,
                         lora_trainable_fraction, run_iteration)
 
 GB = 1 << 30
@@ -22,20 +26,30 @@ def main():
                     choices=[s.name for s in PAPER_STRATEGIES])
     ap.add_argument("--gen-lens", type=int, nargs="*",
                     default=[180, 256, 199, 243])
+    ap.add_argument("--engine", default="separate",
+                    choices=("separate", "hydra"))
+    ap.add_argument("--offload", default="none", choices=OFFLOAD_LEVELS,
+                    help="runtime host-offload level applied at phase "
+                         "boundaries (repro.offload)")
     args = ap.parse_args()
     strat = {s.name: s for s in PAPER_STRATEGIES}[args.strategy]
+    strat = dataclasses.replace(strat, offload=args.offload)
 
     actor, critic = get_config("opt_1_3b"), get_config("opt_350m")
-    tf = lora_trainable_fraction(actor, 128)
-    print(f"building phase traces (grad_ckpt={strat.grad_ckpt}) ...")
+    # hydra phase plans carry exact adapter-sized opt/grad buffers already
+    tf = 1.0 if args.engine == "hydra" else lora_trainable_fraction(actor, 128)
+    print(f"building phase traces (grad_ckpt={strat.grad_ckpt}, "
+          f"engine={args.engine}) ...")
     plans, persist = [], None
     for gl in args.gen_lens:
         ph, persist = build_rlhf_phases(actor, critic, gen_len=gl,
                                         naive_generation=True,
-                                        grad_ckpt=strat.grad_ckpt)
+                                        grad_ckpt=strat.grad_ckpt,
+                                        engine=args.engine)
         plans.append(ph)
 
-    print(f"\nstrategy: {strat.name}  (DP=4, LoRA-128, 24 GB device)")
+    print(f"\nstrategy: {strat.name}  (DP=4, LoRA-128, 24 GB device, "
+          f"offload={args.offload})")
     print(f"{'policy':16s} {'reserved':>9s} {'frag@peak':>10s} "
           f"{'allocated':>10s} {'time':>8s}")
     base = None
@@ -44,9 +58,11 @@ def main():
                           trainable_fraction=tf)
         if policy == "none":
             base = r
+        host = f" (host {r.peak_host_bytes/GB:.2f}G)" \
+            if r.peak_host_bytes else ""
         print(f"{policy:16s} {r.peak_reserved/GB:8.2f}G "
               f"{r.frag_at_peak/GB:9.2f}G {r.peak_allocated/GB:9.2f}G "
-              f"{r.time_s:7.2f}s")
+              f"{r.time_s:7.2f}s{host}")
     fixed = run_iteration(plans, persist, strat, "after_inference", ndp=4,
                           trainable_fraction=tf)
     print(f"\nempty_cache after inference: "

@@ -40,6 +40,11 @@ def main():
     ap.add_argument("--memory-policy", default="after_inference",
                     choices=("none", "after_inference", "after_training",
                              "after_all"))
+    ap.add_argument("--offload", default="none",
+                    choices=("none", "optimizer", "roles", "all"),
+                    help="runtime host-offload level (repro.offload): park "
+                         "off-phase role state to host between the PPO "
+                         "phases that touch it")
     ap.add_argument("--lr", type=float, default=0.0,
                     help="0 = engine default (adapters train at ~10x the "
                          "full-finetune rate: LoRA's B=0 init scales the "
@@ -55,7 +60,8 @@ def main():
     rl = RLHFConfig(prompt_len=8, gen_len=16, lr=lr, critic_lr=lr,
                     kl_coef=0.0, top_k=0, engine=args.engine,
                     lora_rank=args.lora_rank,
-                    memory_policy=args.memory_policy)
+                    memory_policy=args.memory_policy,
+                    offload=args.offload)
     trainer = RLHFTrainer(cfg, cfg, rl, jax.random.PRNGKey(0),
                           reward_fn=make_target_token_reward(7))
     if args.engine == "hydra":
@@ -80,13 +86,16 @@ def main():
                   f"kl {m['kl']:.4f} clip {m['clip_frac']:.3f} "
                   f"vf {m['vf_loss']:.4f} ({time.time()-t0:.0f}s)")
 
-    # per-phase live-memory report (the paper's profiler, on the real run)
-    recs = trainer.memory.records[-7:]
+    # per-phase live-memory report (the paper's profiler, on the real run;
+    # hydra iterations add a mid-rollout sample record -> 8 per iteration)
+    recs = trainer.memory.records[-(8 if args.engine == "hydra" else 7):]
     print("\nlast-iteration phase memory (policy="
-          f"{args.memory_policy}, engine={args.engine}):")
+          f"{args.memory_policy}, engine={args.engine}, "
+          f"offload={args.offload}):")
     for r in recs:
         print(f"  {r['phase']:16s} {r['kind']:10s} "
-              f"{r['live_bytes']/2**20:8.2f} MiB live")
+              f"{r['live_bytes']/2**20:8.2f} MiB live "
+              f"{r['host_bytes']/2**20:8.2f} MiB host")
     if args.ckpt_dir:
         params = (trainer.actor_state["params"] if args.engine == "separate"
                   else {"base": trainer.base_params,

@@ -1,6 +1,14 @@
 """Checkpointing: pytree <-> npz with path-keyed leaves. Sharding-aware:
 arrays are gathered to host on save and re-placed with the provided
-shardings on restore (per-leaf NamedSharding tree optional)."""
+shardings on restore (per-leaf NamedSharding tree optional).
+
+``restore(..., memory_kind=...)`` targets a memory kind instead of the
+device default — with an active offload plan, trees that would be parked
+immediately after resume restore straight into host memory
+(``kernels.compat.host_memory_kind()``) and never transit HBM; feed them
+to ``OffloadExecutor.adopt_parked``. On backends without memory kinds the
+leaves stay as host numpy arrays (the parking lot's fallback
+representation), which ``adopt_parked`` accepts unchanged."""
 from __future__ import annotations
 
 import json
@@ -40,14 +48,24 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
-def restore(ckpt_dir: str, step: int, like: Any,
-            shardings: Any = None) -> Any:
+def restore(ckpt_dir: str, step: int, like: Any, shardings: Any = None,
+            *, memory_kind: str = None) -> Any:
+    """Load step ``step`` shaped/typed like ``like``. ``memory_kind``
+    (e.g. ``compat.host_memory_kind()``) retargets placement: leaves land
+    in that memory space — or stay as host numpy arrays when the backend
+    has no such kind — instead of spiking HBM on the way to a parking
+    lot."""
     path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
     data = np.load(path)
     flat_like = jax.tree_util.tree_flatten_with_path(like)[0]
     treedef = jax.tree_util.tree_structure(like)
     shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
                     if shardings is not None else [None] * len(flat_like))
+    kind_ok = False
+    if memory_kind is not None:
+        from repro.kernels import compat
+        kind_ok = memory_kind in (compat.host_memory_kind(),
+                                  compat.device_memory_kind())
     leaves = []
     for (kp, leaf), sh in zip(flat_like, shard_leaves):
         key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
@@ -55,6 +73,15 @@ def restore(ckpt_dir: str, step: int, like: Any,
         arr = data[key]
         assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
         arr = arr.astype(leaf.dtype)
+        if memory_kind is not None:
+            if not kind_ok:         # no such space: stay host-resident
+                leaves.append(arr)
+                continue
+            if sh is not None:
+                sh = sh.with_memory_kind(memory_kind)
+            else:
+                sh = jax.sharding.SingleDeviceSharding(
+                    jax.devices()[0], memory_kind=memory_kind)
         leaves.append(jax.device_put(arr, sh) if sh is not None
                       else jax.device_put(arr))
     return jax.tree_util.tree_unflatten(treedef, leaves)

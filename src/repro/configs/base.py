@@ -91,7 +91,7 @@ class ModelConfig:
     # --- numerics / memory defaults (see DESIGN.md §5) ----------------------
     param_dtype: str = "bfloat16"
     optimizer: str = "adamw"                  # adamw | adamw_bf16 | adafactor
-    remat: str = "full"                       # none | dots | full
+    remat: str = "full"                       # none | dots | full | offload
     microbatches: int = 1                     # gradient-accumulation steps
     source: str = ""                          # citation bracket from the pool
 

@@ -3,13 +3,17 @@
 # (trace.py), RLHF phase plans (phases.py), memory-management strategies
 # (strategies.py), empty_cache-policy profiler (profiler.py).
 from repro.core.allocator import CachingAllocator
-from repro.core.phases import Phase, build_rlhf_phases
+from repro.core.phases import (RLHF_PHASE_SEQUENCE, Phase, build_rlhf_phases,
+                               phase_state_touches, runtime_state_touches)
 from repro.core.profiler import POLICIES, RunResult, run_iteration
-from repro.core.strategies import (MemoryStrategy, PAPER_STRATEGIES,
-                                   lora_trainable_fraction)
+from repro.core.strategies import (MemoryStrategy, OFFLOAD_LEVELS,
+                                   PAPER_STRATEGIES, lora_trainable_fraction,
+                                   offload_managed_states)
 from repro.core.trace import Trace, trace_function
 
-__all__ = ["CachingAllocator", "Phase", "build_rlhf_phases", "POLICIES",
-           "RunResult", "run_iteration", "MemoryStrategy",
-           "PAPER_STRATEGIES", "lora_trainable_fraction", "Trace",
+__all__ = ["CachingAllocator", "Phase", "build_rlhf_phases",
+           "RLHF_PHASE_SEQUENCE", "phase_state_touches",
+           "runtime_state_touches", "POLICIES", "RunResult", "run_iteration",
+           "MemoryStrategy", "OFFLOAD_LEVELS", "PAPER_STRATEGIES",
+           "lora_trainable_fraction", "offload_managed_states", "Trace",
            "trace_function"]

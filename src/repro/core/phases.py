@@ -48,11 +48,94 @@ class Phase:
     free_after: Optional[str] = None
 
 
+# Canonical order of one PPO iteration — the phase sequence the runtime
+# trainer executes and the offload scheduler compiles against.
+RLHF_PHASE_SEQUENCE = (
+    "rollout_prefill", "rollout_decode", "score_reward", "score_ref",
+    "score_values", "score_old_logp", "train_actor", "train_critic")
+
+
+def _collapse_rollout(seq):
+    out = []
+    for p in seq:
+        c = "rollout" if p.startswith("rollout") else p
+        if not out or out[-1] != c:
+            out.append(c)
+    return tuple(out)
+
+
+# the same iteration at the granularity the runtime trainer bounds it
+# (prefill+decode are one "rollout" phase between boundaries) — derived,
+# not restated, so the two sequences cannot drift apart
+RUNTIME_RLHF_PHASE_SEQUENCE = _collapse_rollout(RLHF_PHASE_SEQUENCE)
+
+
+def phase_state_touches(engine: str = "separate") -> Dict[str, frozenset]:
+    """state name -> the phases (trace-level names) during which that
+    persistent tree must be device-resident. This is the paper's
+    phase-exclusivity map, shared verbatim by the allocator simulator
+    (``profiler.run_iteration(offload=...)``) and the runtime scheduler
+    (``offload.OffloadPlan``) so the two can never disagree.
+
+    Hydra notes: ``base_params`` sits out the rollout phases — generation
+    runs from the *merged* copy (``merged_rollout``), so the trunk's
+    adapted leaves are redundant there and the extreme preset
+    (``offload="all"``) parks them; the merge itself happens in the
+    boundary window where both trees briefly coexist."""
+    if engine == "hydra":
+        return {
+            "base_params": frozenset(RLHF_PHASE_SEQUENCE)
+            - {"rollout_prefill", "rollout_decode"},
+            "merged_rollout": frozenset({"rollout_prefill", "rollout_decode"}),
+            "actor_params": frozenset({"rollout_prefill", "rollout_decode",
+                                       "score_old_logp", "train_actor"}),
+            "actor_opt": frozenset({"train_actor"}),
+            "critic_params": frozenset({"score_values", "train_critic"}),
+            "critic_opt": frozenset({"train_critic"}),
+            "reward_params": frozenset({"score_reward"}),
+        }
+    assert engine == "separate", engine
+    return {
+        "actor_params": frozenset({"rollout_prefill", "rollout_decode",
+                                   "score_old_logp", "train_actor"}),
+        "actor_opt": frozenset({"train_actor"}),
+        "critic_params": frozenset({"score_values", "train_critic"}),
+        "critic_opt": frozenset({"train_critic"}),
+        "ref_params": frozenset({"score_ref"}),
+        "reward_params": frozenset({"score_reward"}),
+    }
+
+
+def runtime_state_touches(engine: str = "separate") -> Dict[str, frozenset]:
+    """:func:`phase_state_touches` with the two rollout trace phases
+    collapsed into the single ``"rollout"`` phase the runtime trainer
+    bounds — plus the trees the *merge* step needs resident at rollout
+    entry (hydra: the base trunk feeds ``merge_adapter`` before the
+    scheduler's mid-phase park kicks in)."""
+    out = {}
+    for name, phases in phase_state_touches(engine).items():
+        collapsed = {("rollout" if p.startswith("rollout") else p)
+                     for p in phases}
+        if engine == "hydra" and name in ("base_params",):
+            collapsed.add("rollout")     # resident for the merge itself
+        out[name] = frozenset(collapsed)
+    out.pop("merged_rollout", None)      # runtime merged tree is phase-local
+    return out
+
+
 @dataclass
 class PersistentBuffers:
     """Long-lived allocations (model weights, optimizer states) shared
-    across phases: name -> list[(nbytes, tag)]."""
+    across phases: name -> list[(nbytes, tag)].
+
+    ``required_by`` (name -> phase names) records which phases touch each
+    buffer — the residency schedule the offload axis swaps against; names
+    absent from it are always-resident. ``transient`` names are
+    phase-local at *every* offload level (the hydra engine's merged
+    rollout weights exist only while generation runs)."""
     buffers: Dict[str, List[Tuple[int, str]]] = field(default_factory=dict)
+    required_by: Dict[str, frozenset] = field(default_factory=dict)
+    transient: frozenset = frozenset()
 
 
 def _batch_specs(cfg: ModelConfig, B: int, S: int, train: bool):
@@ -77,8 +160,16 @@ def build_rlhf_phases(actor_cfg: ModelConfig, critic_cfg: ModelConfig, *,
                       gen_len: int = 256, grad_ckpt: bool = False,
                       naive_generation: bool = False,
                       min_bytes: int = 64 * 1024,
-                      ppo_epochs: int = 1):
-    """Returns (phases, persistent buffers)."""
+                      ppo_epochs: int = 1,
+                      engine: str = "separate", lora_rank: int = 128):
+    """Returns (phases, persistent buffers).
+
+    ``engine="separate"`` is the paper's four-model pipeline;
+    ``engine="hydra"`` traces the shared-base engine instead (one frozen
+    trunk, per-role LoRA adapters at ``lora_rank``, adapter-only train
+    steps, merged-weight rollout) so the analytic model covers the same
+    layout the runtime offload subsystem swaps."""
+    assert engine in ("separate", "hydra"), engine
     remat = "full" if grad_ckpt else "none"
     # fp16/bf16 mixed precision as the paper's frameworks use; fused
     # (flash) attention everywhere, as the 2023 frameworks' kernels did
@@ -90,18 +181,8 @@ def build_rlhf_phases(actor_cfg: ModelConfig, critic_cfg: ModelConfig, *,
                                      param_dtype="bfloat16")
     S = prompt_len + gen_len
     actor = Model(actor_cfg)
-    critic = Model(critic_cfg, with_value=True)
-
-    a_params = jax.eval_shape(actor.init, jax.random.PRNGKey(0))
-    c_params = jax.eval_shape(critic.init, jax.random.PRNGKey(0))
-    a_step = make_train_step(actor, actor_cfg, kind="ppo")
-    c_step = make_train_step(critic, critic_cfg, kind="critic")
-    a_state = jax.eval_shape(
-        lambda k: init_train_state(actor, actor_cfg, k, a_step.optimizer),
-        jax.random.PRNGKey(0))
-    c_state = jax.eval_shape(
-        lambda k: init_train_state(critic, critic_cfg, k, c_step.optimizer),
-        jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(0)
+    a_params = jax.eval_shape(actor.init, key)
 
     persistent = PersistentBuffers()
 
@@ -111,12 +192,56 @@ def build_rlhf_phases(actor_cfg: ModelConfig, critic_cfg: ModelConfig, *,
             (int(jnp.dtype(l.dtype).itemsize *
                  __import__("numpy").prod(l.shape)), tag) for l in leaves]
 
-    add_persistent("actor_params", a_state["params"], "param")
-    add_persistent("actor_opt", a_state["opt"], "opt")
-    add_persistent("critic_params", c_state["params"], "param")
-    add_persistent("critic_opt", c_state["opt"], "opt")
-    add_persistent("ref_params", a_params, "param")     # frozen copy
-    add_persistent("reward_params", c_params, "param")  # frozen copy
+    if engine == "hydra":
+        from repro.models.lora import adapted_subtree
+        from repro.steps import init_lora_train_state, make_lora_train_step
+        critic = actor                       # heads ride the shared trunk
+        actor_ad = jax.eval_shape(
+            lambda k: actor.init_adapter(k, a_params, lora_rank), key)
+        critic_ad = jax.eval_shape(
+            lambda k: actor.init_adapter(k, a_params, lora_rank,
+                                         with_value=True), key)
+        a_step = make_lora_train_step(actor, actor_cfg, kind="ppo")
+        c_step = make_lora_train_step(actor, actor_cfg, kind="critic")
+        a_state = jax.eval_shape(
+            lambda ad: init_lora_train_state(ad, a_step.optimizer), actor_ad)
+        c_state = jax.eval_shape(
+            lambda ad: init_lora_train_state(ad, c_step.optimizer), critic_ad)
+        add_persistent("base_params", a_params, "param")   # ONE frozen trunk
+        add_persistent("actor_params", a_state["params"], "param")
+        add_persistent("actor_opt", a_state["opt"], "opt")
+        add_persistent("critic_params", c_state["params"], "param")
+        add_persistent("critic_opt", c_state["opt"], "opt")
+        add_persistent("reward_params", critic_ad, "param")  # frozen adapter
+        # rollout generates from merged weights: a phase-local copy of the
+        # trunk's adapted leaves (non-adapted leaves alias the base)
+        add_persistent("merged_rollout",
+                       adapted_subtree(a_params, actor_ad["lora"]), "param")
+    else:
+        critic = Model(critic_cfg, with_value=True)
+        c_params = jax.eval_shape(critic.init, key)
+        a_step = make_train_step(actor, actor_cfg, kind="ppo")
+        c_step = make_train_step(critic, critic_cfg, kind="critic")
+        a_state = jax.eval_shape(
+            lambda k: init_train_state(actor, actor_cfg, k, a_step.optimizer),
+            key)
+        c_state = jax.eval_shape(
+            lambda k: init_train_state(critic, critic_cfg, k,
+                                       c_step.optimizer), key)
+        add_persistent("actor_params", a_state["params"], "param")
+        add_persistent("actor_opt", a_state["opt"], "opt")
+        add_persistent("critic_params", c_state["params"], "param")
+        add_persistent("critic_opt", c_state["opt"], "opt")
+        add_persistent("ref_params", a_params, "param")     # frozen copy
+        add_persistent("reward_params", c_params, "param")  # frozen copy
+
+    # phase-exclusivity schedule: which phases touch which buffer (the
+    # offload axis of profiler.run_iteration swaps against this)
+    persistent.required_by = {
+        k: v for k, v in phase_state_touches(engine).items()
+        if k in persistent.buffers}
+    persistent.transient = frozenset({"merged_rollout"}) & \
+        frozenset(persistent.buffers)
 
     phases: List[Phase] = []
 
@@ -129,7 +254,8 @@ def build_rlhf_phases(actor_cfg: ModelConfig, critic_cfg: ModelConfig, *,
         (_tags_for(a_params, "param"), _tags_for(pf_batch, "input")),
         min_bytes=min_bytes)
     a_bytes = actor_cfg.param_count() * 2
-    c_bytes = critic_cfg.param_count() * 2
+    # hydra scoring phases stream the shared trunk, not a separate critic
+    c_bytes = a_bytes if engine == "hydra" else critic_cfg.param_count() * 2
     phases.append(Phase("rollout_prefill", "inference", tr_pf,
                         flops=_fwd_flops(actor_cfg, batch * prompt_len),
                         hbm_bytes=a_bytes,
@@ -198,7 +324,17 @@ def build_rlhf_phases(actor_cfg: ModelConfig, critic_cfg: ModelConfig, *,
     # ---- scoring inferences ------------------------------------------------
     full_batch = _batch_specs(actor_cfg, batch, S, train=False)
 
-    def fwd_trace(model, params, cfg, value=False):
+    def fwd_trace(model, params, cfg, value=False, adapter=None):
+        """Forward trace; with ``adapter`` (hydra) the role's LoRA tree is
+        a second persistent param input over the shared trunk."""
+        if adapter is not None:
+            fn = (lambda p, ad, b: model.forward_value(p, b, adapter=ad)) \
+                if value else \
+                (lambda p, ad, b: model.forward(p, b, adapter=ad)[0])
+            return trace_function(
+                fn, (params, adapter, full_batch),
+                (_tags_for(params, "param"), _tags_for(adapter, "param"),
+                 _tags_for(full_batch, "input")), min_bytes=min_bytes)
         fn = (lambda p, b: model.forward_value(p, b)) if value else \
             (lambda p, b: model.forward(p, b)[0])
         return trace_function(
@@ -206,8 +342,11 @@ def build_rlhf_phases(actor_cfg: ModelConfig, critic_cfg: ModelConfig, *,
             (_tags_for(params, "param"), _tags_for(full_batch, "input")),
             min_bytes=min_bytes)
 
+    hy = engine == "hydra"
+    sc_params = a_params if hy else c_params
     phases.append(Phase("score_reward", "inference",
-                        fwd_trace(critic, c_params, critic_cfg, value=True),
+                        fwd_trace(critic, sc_params, critic_cfg, value=True,
+                                  adapter=critic_ad if hy else None),
                         model="reward", hbm_bytes=c_bytes,
                         flops=_fwd_flops(critic_cfg, batch * S),
                         free_after="train_critic"))
@@ -216,30 +355,45 @@ def build_rlhf_phases(actor_cfg: ModelConfig, critic_cfg: ModelConfig, *,
                         flops=_fwd_flops(actor_cfg, batch * S),
                         hbm_bytes=a_bytes, free_after="train_critic"))
     phases.append(Phase("score_values", "inference",
-                        fwd_trace(critic, c_params, critic_cfg, value=True),
+                        fwd_trace(critic, sc_params, critic_cfg, value=True,
+                                  adapter=critic_ad if hy else None),
                         model="critic", hbm_bytes=c_bytes,
                         flops=_fwd_flops(critic_cfg, batch * S),
                         free_after="train_critic"))
     phases.append(Phase("score_old_logp", "inference",
-                        fwd_trace(actor, a_params, actor_cfg), model="actor",
+                        fwd_trace(actor, a_params, actor_cfg,
+                                  adapter=actor_ad if hy else None),
+                        model="actor",
                         flops=_fwd_flops(actor_cfg, batch * S),
                         hbm_bytes=a_bytes, free_after="train_critic"))
 
     # ---- training ----------------------------------------------------------
     tb = _batch_specs(actor_cfg, batch, S, train=True)
-    tr_actor = trace_function(
-        a_step, (a_state, tb),
-        ({"params": _tags_for(a_state["params"], "param"),
-          "opt": _tags_for(a_state["opt"], "opt"), "step": "opt"},
-         _tags_for(tb, "input")), min_bytes=min_bytes)
+    a_tags = {"params": _tags_for(a_state["params"], "param"),
+              "opt": _tags_for(a_state["opt"], "opt"), "step": "opt"}
+    c_tags = {"params": _tags_for(c_state["params"], "param"),
+              "opt": _tags_for(c_state["opt"], "opt"), "step": "opt"}
+    if hy:
+        # lora steps: (adapter_state, frozen_base, batch) — grads/opt cover
+        # only the adapter leaves; the trunk rides along un-differentiated
+        tr_actor = trace_function(
+            a_step, (a_state, a_params, tb),
+            (a_tags, _tags_for(a_params, "param"), _tags_for(tb, "input")),
+            min_bytes=min_bytes)
+        tr_critic = trace_function(
+            c_step, (c_state, a_params, tb),
+            (c_tags, _tags_for(a_params, "param"), _tags_for(tb, "input")),
+            min_bytes=min_bytes)
+    else:
+        tr_actor = trace_function(
+            a_step, (a_state, tb), (a_tags, _tags_for(tb, "input")),
+            min_bytes=min_bytes)
+        tr_critic = trace_function(
+            c_step, (c_state, tb), (c_tags, _tags_for(tb, "input")),
+            min_bytes=min_bytes)
     phases.append(Phase("train_actor", "training", tr_actor,
                         repeats=ppo_epochs, hbm_bytes=3 * a_bytes,
                         flops=3 * _fwd_flops(actor_cfg, batch * S)))
-    tr_critic = trace_function(
-        c_step, (c_state, tb),
-        ({"params": _tags_for(c_state["params"], "param"),
-          "opt": _tags_for(c_state["opt"], "opt"), "step": "opt"},
-         _tags_for(tb, "input")), min_bytes=min_bytes)
     phases.append(Phase("train_critic", "training", tr_critic,
                         repeats=ppo_epochs, model="critic",
                         hbm_bytes=3 * c_bytes,
@@ -265,7 +419,10 @@ def build_grpo_phases(actor_cfg: ModelConfig, *, batch: int = 2,
     for p in phases:
         if p.free_after == "train_critic":
             p.free_after = "train_actor"
-    persistent = PersistentBuffers({
-        k: v for k, v in ppo_persist.buffers.items()
-        if k in ("actor_params", "actor_opt", "ref_params")})
+    keep_bufs = ("actor_params", "actor_opt", "ref_params")
+    persistent = PersistentBuffers(
+        {k: v for k, v in ppo_persist.buffers.items() if k in keep_bufs},
+        required_by={k: frozenset(p for p in v if p in {ph.name for ph in phases})
+                     for k, v in ppo_persist.required_by.items()
+                     if k in keep_bufs})
     return phases, persistent

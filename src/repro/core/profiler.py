@@ -15,6 +15,17 @@ Realism notes (each maps to a paper observation):
 
 empty_cache policies (paper §3.3): none | after_inference | after_training |
 after_all.
+
+The runtime-offload axis (``strategy.offload`` / the ``offload=`` kwarg, see
+``repro.offload``) is modelled at *phase granularity*: a managed persistent
+buffer group is device-resident exactly during the phases that touch it
+(``PersistentBuffers.required_by``). At each boundary, evicted groups are
+freed **before** ``empty_cache`` runs (so their segments can release — the
+order the runtime scheduler uses too) and the next phase's groups are
+malloc'd after the boundary record (the runtime fetch is an async
+``device_put`` issued at the same point). Swap traffic pays a PCIe-bandwidth
+term that overlaps phase compute: per phase, max(compute/HBM time, swap
+time).
 """
 from __future__ import annotations
 
@@ -23,7 +34,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.allocator import MB, CachingAllocator
 from repro.core.phases import PersistentBuffers, Phase
-from repro.core.strategies import MemoryStrategy
+from repro.core.strategies import MemoryStrategy, offload_managed_states
 
 POLICIES = ("none", "after_inference", "after_training", "after_all")
 
@@ -32,6 +43,7 @@ _FLOPS_RATE = 60e12            # sustained bf16 FLOP/s per GPU (3090-class)
 _HBM_BW = 800e9                # B/s
 _CUDA_MALLOC_MS = 0.75         # cudaMalloc/cudaFree latency
 _EMPTY_CACHE_MS = 2.0          # empty_cache API call overhead
+_PCIE_BW = 16e9                # B/s host<->device swap bandwidth
 
 
 @dataclass
@@ -42,6 +54,8 @@ class PhaseRecord:
     allocated_end: int
     peak_reserved: int
     frag_end: int
+    host_bytes: int = 0            # parked on host at phase end (offload)
+    alloc_peak: int = 0            # peak live bytes *within* this phase
 
 
 @dataclass
@@ -57,6 +71,9 @@ class RunResult:
     time_s: float
     phase_records: List[PhaseRecord] = field(default_factory=list)
     timeline: List[Tuple[int, int, int]] = field(default_factory=list)
+    offload: str = "none"
+    peak_host_bytes: int = 0       # peak parked on host (offload)
+    swapped_bytes: int = 0         # cumulative host<->device swap traffic
 
     def row(self) -> dict:
         GB = 1 << 30
@@ -83,30 +100,80 @@ def run_iteration(plans, persistent: PersistentBuffers,
                   strategy: MemoryStrategy, policy: str = "none", *,
                   ndp: int = 4, trainable_fraction: float = 1.0,
                   capacity: int = 24 << 30,
-                  timeline: bool = False) -> RunResult:
+                  timeline: bool = False,
+                  offload: Optional[str] = None) -> RunResult:
     """Replay PPO iterations. ``plans`` is a list of phase lists — one per
     iteration (varying generation lengths) — or a single phase list.
     ``capacity`` models the device HBM (24 GB RTX-3090 for Table 1,
-    80 GB A100 for Table 2)."""
+    80 GB A100 for Table 2). ``offload`` (default: ``strategy.offload``)
+    selects the runtime-offload level; see the module docstring."""
     if plans and isinstance(plans[0], Phase):
         plans = [plans]
+    offload = offload if offload is not None else \
+        getattr(strategy, "offload", "none")
     alloc = CachingAllocator(timeline=timeline, capacity=capacity)
     scale = lambda tag: strategy.scale(tag, ndp=ndp,
                                        trainable_fraction=trainable_fraction)
 
-    # persistent model/optimizer buffers live for the whole run
-    for name, bufs in persistent.buffers.items():
-        for nb, tag in bufs:
+    # phase-scoped buffer groups: offload-managed role state + transients
+    # (e.g. the hydra merged rollout weights); everything else is resident
+    # for the whole run, exactly as before the offload axis existed
+    managed = offload_managed_states(offload, persistent.buffers) \
+        & set(persistent.required_by)
+    scoped = managed | (set(persistent.transient) & set(persistent.buffers))
+    resident: Dict[str, List[int]] = {}
+    state_bytes: Dict[str, int] = {}
+    swapped_total = 0
+    peak_host = 0
+    parked_now = 0
+
+    def group_bytes(name: str) -> int:
+        return sum(int(nb * scale(tag))
+                   for nb, tag in persistent.buffers[name]
+                   if scale(tag) > 0 and nb * scale(tag) >= 4096)
+
+    def group_malloc(name: str):
+        hs = []
+        for nb, tag in persistent.buffers[name]:
             s = scale(tag)
             if s > 0 and nb * s >= 4096:
-                alloc.malloc(int(nb * s))
+                hs.append(alloc.malloc(int(nb * s)))
+        resident[name] = hs
+
+    def group_free(name: str):
+        for h in resident.pop(name):
+            alloc.free(h)
+
+    for name in persistent.buffers:
+        state_bytes[name] = group_bytes(name)
+        if name not in scoped:
+            group_malloc(name)
+
+    # flattened schedule (across iterations) for next-phase lookups
+    flat: List[Phase] = [ph for phases in plans for ph in phases]
+
+    def needed(idx: int) -> frozenset:
+        if idx >= len(flat):
+            return frozenset()
+        pname = flat[idx].name
+        return frozenset(n for n in scoped
+                         if pname in persistent.required_by.get(n, ()))
+
+    # initial placement for the first phase (not counted as swap traffic);
+    # managed groups not needed by it start out parked on host
+    for n in needed(0):
+        group_malloc(n)
+    parked_now = sum(state_bytes[n] for n in managed if n not in resident)
+    peak_host = parked_now
 
     total_time = 0.0
     n_empty = 0
+    gi = 0
     records: List[PhaseRecord] = []
     for phases in plans:
         deferred: Dict[str, List[int]] = {}
         for ph in phases:
+            alloc_peak = alloc.allocated
             for rep in range(ph.repeats):
                 handle_map: Dict[int, int] = {}
                 for op, vid, nb, tag in ph.trace.events:
@@ -115,6 +182,7 @@ def run_iteration(plans, persistent: PersistentBuffers,
                         continue
                     if op == "alloc":
                         handle_map[vid] = alloc.malloc(size)
+                        alloc_peak = max(alloc_peak, alloc.allocated)
                     else:
                         h = handle_map.pop(vid, None)
                         if h is not None:
@@ -128,14 +196,36 @@ def run_iteration(plans, persistent: PersistentBuffers,
             # outputs scheduled to die after this phase
             for h in deferred.pop(ph.name, []):
                 alloc.free(h)
-            total_time += max(ph.flops / _FLOPS_RATE,
-                              ph.hbm_bytes / _HBM_BW)
+            # boundary, offload half 1: park groups the next phase doesn't
+            # touch (free BEFORE empty_cache so their segments can release)
+            nxt = needed(gi + 1)
+            boundary_swap = 0
+            for n in [r for r in list(resident) if r in scoped and r not in nxt]:
+                group_free(n)
+                if n in managed:
+                    boundary_swap += state_bytes[n]
+                    parked_now += state_bytes[n]
             if _should_empty(policy, ph.kind):
                 alloc.empty_cache()
                 n_empty += 1
+            peak_host = max(peak_host, parked_now)
             records.append(PhaseRecord(
                 ph.name, ph.kind, alloc.reserved, alloc.allocated,
-                alloc.stats.peak_reserved, alloc.fragmentation()))
+                alloc.stats.peak_reserved, alloc.fragmentation(),
+                host_bytes=parked_now, alloc_peak=alloc_peak))
+            # boundary, offload half 2: fetch the next phase's groups (the
+            # runtime issues these as async device_puts at the same point)
+            for n in nxt - frozenset(resident):
+                group_malloc(n)
+                if n in managed:
+                    boundary_swap += state_bytes[n]
+                    parked_now -= state_bytes[n]
+            swapped_total += boundary_swap
+            # swap copies overlap phase compute (double-buffered prefetch)
+            total_time += max(max(ph.flops / _FLOPS_RATE,
+                                  ph.hbm_bytes / _HBM_BW),
+                              boundary_swap / _PCIE_BW)
+            gi += 1
         # anything still deferred dies at iteration end
         for hs in deferred.values():
             for h in hs:
@@ -150,4 +240,6 @@ def run_iteration(plans, persistent: PersistentBuffers,
         frag_at_peak=st.frag_at_peak, max_frag=st.max_frag,
         n_cuda_malloc=st.n_cuda_malloc, n_empty_cache=n_empty,
         time_s=time_s, phase_records=records,
-        timeline=alloc.timeline if timeline else [])
+        timeline=alloc.timeline if timeline else [],
+        offload=offload, peak_host_bytes=peak_host,
+        swapped_bytes=swapped_total)

@@ -5,7 +5,7 @@ The paper's experiment grid is DP over 4 GPUs (no TP), LoRA dim 128. Each
 strategy maps to per-tag size multipliers applied when a trace is replayed
 through the allocator simulator:
 
-  tag            None   ZeRO-1      ZeRO-2      ZeRO-3          offload
+  tag            None   ZeRO-1      ZeRO-2      ZeRO-3          cpu_offload
   param          1      1           1           1/ndp           -
   opt            1      1/ndp       1/ndp       1/ndp           0 (host)
   grad           1      1           1/ndp       1/ndp           -
@@ -20,6 +20,24 @@ events vanish. Gradient checkpointing is not a multiplier — it swaps in the
 remat="full" trace of the same model (the liveness change emerges from the
 jaxpr, see core.trace).
 
+Beyond the per-tag multipliers there is a *runtime offload* axis,
+``MemoryStrategy.offload`` — the phase-aware HBM<->host swapping of
+``repro.offload``, which the simulator models by parking/fetching whole
+persistent buffer groups at phase boundaries (see
+``profiler.run_iteration``) instead of scaling them:
+
+  offload level   parked off-phase
+  none            nothing (every tree HBM-resident for the whole iteration)
+  optimizer       optimizer moments  (*_opt)
+  roles           + per-role params/adapters (actor/critic/ref/reward)
+  all             + the frozen base trunk while merged weights serve rollout
+                    (hydra engine)
+
+``cpu_offload`` stays the paper's DeepSpeed-style *static* placement (the
+optimizer lives on host permanently, updates run there: scale 0); the
+``offload`` axis is the dynamic schedule where state is HBM-resident
+exactly during the phases that touch it.
+
 LoRA scales grad/opt by the trainable fraction. The fraction is computed
 EXACTLY, by building the real adapter tree of ``models.lora`` under
 ``jax.eval_shape`` (no allocation) and counting leaves — the analytic
@@ -31,7 +49,34 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 from functools import lru_cache
-from typing import Dict
+from typing import Dict, Iterable, Set
+
+OFFLOAD_LEVELS = ("none", "optimizer", "roles", "all")
+
+# role params/adapters swapped at level "roles"; the frozen trunk joins at
+# "all" (its rollout-phase eviction is what the hydra merged copy enables)
+_ROLE_STATES = ("actor_params", "critic_params", "ref_params",
+                "reward_params")
+
+
+def offload_managed_states(level: str, names: Iterable[str]) -> Set[str]:
+    """Which persistent-state names the runtime offload level swaps.
+    Shared by the allocator simulator and ``offload.OffloadPlan`` so the
+    analytic and runtime schedules agree by construction."""
+    if level not in OFFLOAD_LEVELS:
+        raise ValueError(f"unknown offload level {level!r}; "
+                         f"expected one of {OFFLOAD_LEVELS}")
+    out: Set[str] = set()
+    for n in names:
+        if level == "none":
+            break
+        if n.endswith("_opt"):
+            out.add(n)
+        elif level in ("roles", "all") and n in _ROLE_STATES:
+            out.add(n)
+        elif level == "all" and n == "base_params":
+            out.add(n)
+    return out
 
 
 @dataclass(frozen=True)
@@ -41,6 +86,7 @@ class MemoryStrategy:
     cpu_offload: bool = False
     grad_ckpt: bool = False
     lora_rank: int = 128         # LoRA rank of the trainable-fraction axis
+    offload: str = "none"        # runtime swap level (repro.offload)
 
     def scale(self, tag: str, *, ndp: int, trainable_fraction: float = 1.0,
               param_persistent: bool = True) -> float:

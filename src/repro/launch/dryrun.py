@@ -27,7 +27,8 @@ from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.models import Model
 from repro.sharding import (ShardingStrategy, batch_pspecs, cache_pspecs,
-                            param_pspecs, to_named, zero_opt_pspecs)
+                            opt_shardings, param_pspecs, to_named,
+                            zero_opt_pspecs)
 from repro.steps import (cache_specs, decode_window, input_specs,
                          make_decode_step, make_prefill_step, make_train_step,
                          sds)
@@ -110,7 +111,12 @@ def build_lowerable(arch: str, shape_name: str, mesh,
         if cfg.mtp_depth:
             metric_keys = metric_keys + ("mtp_loss",)
         out_specs = (state_specs, {k: P() for k in metric_keys})
-        in_sh = (to_named(mesh, state_specs),
+        # optimizer state may target the host memory kind
+        # (strat.offload_optimizer — the runtime face of cpu_offload)
+        in_state_sh = {"params": to_named(mesh, pspecs),
+                       "opt": opt_shardings(mesh, opt_specs, strat),
+                       "step": NamedSharding(mesh, P())}
+        in_sh = (in_state_sh,
                  to_named(mesh, {k: bspecs[k] for k in batch}))
         return (step, (state_shape, batch), in_sh, to_named(mesh, out_specs),
                 (0,))  # donate the train state

@@ -158,6 +158,30 @@ def delete_merged(merged_params, lora_tree) -> None:
             leaf.delete()
 
 
+def adapted_subtree(params, lora_tree) -> Any:
+    """The sub-pytree of ``params`` at the adapted sites — exactly the
+    leaves :func:`merge_adapter` replaces. This is the swappable unit the
+    offload subsystem parks while a merged copy serves rollout (the
+    non-adapted leaves, which the merged tree aliases, must stay put)."""
+    if _is_site(lora_tree):
+        return params
+    return {k: adapted_subtree(params[k], sub)
+            for k, sub in (lora_tree or {}).items() if k in params}
+
+
+def with_adapted_leaves(params, lora_tree, subtree) -> Any:
+    """Rebuild ``params`` with the adapted-site leaves replaced by
+    ``subtree`` (an :func:`adapted_subtree`-shaped tree); all other leaves
+    are returned by reference."""
+    if _is_site(lora_tree):
+        return subtree
+    if not isinstance(params, dict):
+        return params
+    lora_tree = lora_tree or {}
+    return {k: with_adapted_leaves(v, lora_tree[k], subtree[k])
+            if k in lora_tree else v for k, v in params.items()}
+
+
 def adapter_param_count(adapter) -> int:
     """Total trainable parameters in an adapter (lora factors + value head)."""
     import numpy as np

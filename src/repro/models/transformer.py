@@ -255,15 +255,21 @@ class Model:
                         adapter=None if ad is None else ad.get(f"slot{i}"))
                     caches[f"slot{i}"] = c
                     aux = aux + a
+                if cfg.remat == "offload":
+                    # name the carried residual so the offload-aware
+                    # checkpoint policy can spill it to host (see
+                    # repro.offload.policies)
+                    from jax.ad_checkpoint import checkpoint_name
+                    hh = checkpoint_name(hh, "residual")
                 return (hh, aux), caches
 
             body = group_fwd
             if cfg.remat == "full":
                 body = jax.checkpoint(group_fwd)
-            elif cfg.remat == "dots":
-                body = jax.checkpoint(
-                    group_fwd,
-                    policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+            elif cfg.remat in ("dots", "offload"):
+                from repro.offload.policies import remat_policy_for
+                body = jax.checkpoint(group_fwd,
+                                      policy=remat_policy_for(cfg.remat))
             xs = (params[f"segment{si}"],
                   cross_kv[si] if cross_kv is not None else None,
                   init_caches[si] if init_caches is not None else None,

@@ -1,0 +1,13 @@
+# Phase-aware host-offload subsystem: runtime HBM<->host swapping of RLHF
+# role state (host_store + scheduler) and offload-aware remat (policies).
+# The schedule is compiled from core.phases so the allocator simulator and
+# the runtime agree; byte movement gates on the memory-kind capability
+# probe in kernels.compat.
+from repro.offload.host_store import HostParkingLot, LotStats, tree_nbytes
+from repro.offload.policies import offload_remat_policy, remat_policy_for
+from repro.offload.scheduler import (RUNTIME_PHASE_SEQUENCE, OffloadExecutor,
+                                     OffloadPlan)
+
+__all__ = ["HostParkingLot", "LotStats", "tree_nbytes",
+           "offload_remat_policy", "remat_policy_for",
+           "RUNTIME_PHASE_SEQUENCE", "OffloadExecutor", "OffloadPlan"]

@@ -1,0 +1,213 @@
+"""HostParkingLot: runtime HBM <-> host swapping of whole pytrees.
+
+The paper's core finding is that most RLHF state is *phase-exclusive*:
+each of the seven PPO phases touches one role's trees and leaves the rest
+idle on HBM. The parking lot is the byte-moving half of the offload
+subsystem (the phase schedule lives in ``offload.scheduler``): it parks a
+named pytree to host memory, frees the device copy, and fetches it back —
+bit-identical — when its phase comes around again.
+
+Two transports, selected by the capability probe in ``kernels.compat``:
+
+  * **memory kinds** (TPU/GPU runtimes exposing "pinned_host"): leaves move
+    with ``jax.device_put`` onto the same sharding re-targeted at the host
+    memory kind — layout-preserving, async, DMA-able back in;
+  * **committed-numpy fallback** (CPU, old runtimes): leaves are copied to
+    host ``numpy`` arrays and the device buffers deleted. Round trips are
+    still bit-identical (``np.asarray`` of a bf16 array keeps the raw
+    bits via ml_dtypes).
+
+Fetches are double-buffered by construction: ``jax.device_put`` back to
+device is asynchronous, so a fetch issued at a phase boundary overlaps the
+host-side setup (and, with ``prefetch``, the tail of the previous phase's
+device compute). Parks block by default — eviction is the point of a
+boundary — but ``block=False`` defers the source ``delete`` to ``drain()``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.kernels import compat
+
+
+def tree_nbytes(tree) -> int:
+    return int(sum(getattr(l, "nbytes", 0) for l in jax.tree.leaves(tree)))
+
+
+def _is_device_array(leaf) -> bool:
+    return hasattr(leaf, "delete") and hasattr(leaf, "sharding")
+
+
+def _delete(leaf) -> None:
+    if hasattr(leaf, "delete") and not leaf.is_deleted():
+        leaf.delete()
+
+
+@dataclass
+class LotStats:
+    parked_bytes: int = 0           # currently host-resident
+    peak_parked_bytes: int = 0
+    bytes_parked_total: int = 0     # cumulative device->host traffic
+    bytes_fetched_total: int = 0    # cumulative host->device traffic
+    n_park: int = 0
+    n_fetch: int = 0
+    n_prefetch_hits: int = 0
+
+
+@dataclass
+class _Entry:
+    host_leaves: List[Any]
+    treedef: Any
+    nbytes: int
+    # pending device->host transfer: device sources to delete once the
+    # host copy is known materialized (async park)
+    pending_sources: Optional[List[Any]] = None
+
+
+class HostParkingLot:
+    """Named pytree parking between device HBM and host memory.
+
+    ``use_memory_kinds=None`` (default) auto-selects from the compat probe;
+    ``False`` forces the numpy fallback (useful for tests / determinism
+    studies on memory-kind backends).
+    """
+
+    def __init__(self, *, use_memory_kinds: Optional[bool] = None):
+        if use_memory_kinds is None:
+            use_memory_kinds = compat.supports_host_offload()
+        self.host_kind = compat.host_memory_kind() if use_memory_kinds else None
+        self.device_kind = compat.device_memory_kind()
+        self._entries: Dict[str, _Entry] = {}
+        self._prefetched: Dict[str, List[Any]] = {}
+        self.stats = LotStats()
+        # (op, name) stream — "park" | "prefetch" | "fetch_hit" | "fetch"
+        self.events: List[Tuple[str, str]] = []
+
+    # ------------------------------------------------------------- transport
+    def _to_host(self, leaf):
+        if not _is_device_array(leaf):
+            return leaf
+        if self.host_kind is not None:
+            return jax.device_put(
+                leaf, leaf.sharding.with_memory_kind(self.host_kind))
+        return np.asarray(leaf)     # committed copy; blocks
+
+    def _to_device(self, leaf):
+        if self.host_kind is not None and _is_device_array(leaf):
+            return jax.device_put(
+                leaf, leaf.sharding.with_memory_kind(self.device_kind))
+        return jax.device_put(leaf)
+
+    # ---------------------------------------------------------------- public
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def names(self):
+        return tuple(self._entries)
+
+    def parked_bytes(self) -> int:
+        return self.stats.parked_bytes
+
+    def park(self, name: str, tree, *, block: bool = True) -> None:
+        """Move ``tree`` to host under ``name`` and free its device bytes.
+        With ``block=False`` the device sources survive until ``drain()``
+        (or the next access) so the copy can overlap in-flight compute."""
+        assert name not in self._entries, f"{name!r} already parked"
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        host = [self._to_host(l) for l in leaves]
+        sources = [l for l in leaves if _is_device_array(l)]
+        nbytes = tree_nbytes(tree)
+        entry = _Entry(host, treedef, nbytes,
+                       pending_sources=None if block else sources)
+        if block:
+            self._complete_park(entry, sources)
+        self._entries[name] = entry
+        st = self.stats
+        st.n_park += 1
+        st.bytes_parked_total += nbytes
+        st.parked_bytes += nbytes
+        st.peak_parked_bytes = max(st.peak_parked_bytes, st.parked_bytes)
+        self.events.append(("park", name))
+
+    def _complete_park(self, entry: _Entry, sources) -> None:
+        for l in entry.host_leaves:
+            if _is_device_array(l):
+                l.block_until_ready()
+        for l in sources:
+            _delete(l)
+        entry.pending_sources = None
+
+    def drain(self) -> None:
+        """Complete every in-flight (non-blocking) park: wait for the host
+        copies and delete the device sources."""
+        for entry in self._entries.values():
+            if entry.pending_sources is not None:
+                self._complete_park(entry, entry.pending_sources)
+
+    def adopt(self, name: str, tree) -> None:
+        """Insert an already-host-resident tree (numpy leaves, or arrays in
+        the host memory kind) without a device round trip — how a
+        checkpoint restore targets the lot directly (``checkpoint.store
+        .restore(memory_kind=...)``), so resume never spikes HBM with trees
+        that would immediately be parked."""
+        assert name not in self._entries, f"{name!r} already parked"
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        nbytes = tree_nbytes(tree)
+        self._entries[name] = _Entry(list(leaves), treedef, nbytes)
+        st = self.stats
+        st.parked_bytes += nbytes
+        st.peak_parked_bytes = max(st.peak_parked_bytes, st.parked_bytes)
+        self.events.append(("park", name))
+
+    def prefetch(self, name: str) -> None:
+        """Start the host->device copy of a parked tree without removing it
+        from the lot; the following ``fetch`` consumes the in-flight copy.
+        ``jax.device_put`` is asynchronous, so this overlaps whatever the
+        device is still running."""
+        if name in self._prefetched or name not in self._entries:
+            return
+        entry = self._entries[name]
+        if entry.pending_sources is not None:
+            self._complete_park(entry, entry.pending_sources)
+        self._prefetched[name] = [self._to_device(l)
+                                  for l in entry.host_leaves]
+        self.events.append(("prefetch", name))
+
+    def fetch(self, name: str):
+        """Device-resident tree for ``name``; the entry leaves the lot.
+        Uses the prefetched copy when one is in flight."""
+        entry = self._entries.pop(name)
+        if entry.pending_sources is not None:
+            self._complete_park(entry, entry.pending_sources)
+        pre = self._prefetched.pop(name, None)
+        if pre is not None:
+            leaves = pre
+            self.stats.n_prefetch_hits += 1
+            self.events.append(("fetch_hit", name))
+        else:
+            leaves = [self._to_device(l) for l in entry.host_leaves]
+            self.events.append(("fetch", name))
+        st = self.stats
+        st.n_fetch += 1
+        st.parked_bytes -= entry.nbytes
+        st.bytes_fetched_total += entry.nbytes
+        return jax.tree_util.tree_unflatten(entry.treedef, leaves)
+
+    def discard(self, name: str) -> None:
+        """Drop a parked entry without fetching it back to device."""
+        entry = self._entries.pop(name)
+        self._prefetched.pop(name, None)
+        if entry.pending_sources is not None:
+            self._complete_park(entry, entry.pending_sources)
+        self.stats.parked_bytes -= entry.nbytes
+
+    def peek(self, name: str):
+        """The host-resident tree, without fetching. Correctness-preserving
+        stand-in while parked (jit coerces host leaves on accidental use —
+        slow but right); the scheduler treats any such use as a plan bug."""
+        entry = self._entries[name]
+        return jax.tree_util.tree_unflatten(entry.treedef, entry.host_leaves)

@@ -1,0 +1,52 @@
+"""Offload-aware rematerialization: ``cfg.remat == "offload"``.
+
+Gradient checkpointing (``remat="full"``) trades activation memory for
+recompute; host offload trades it for PCIe traffic instead. With
+``remat="offload"`` the per-group residual stream — annotated
+``checkpoint_name(h, "residual")`` in ``models.transformer`` — is *saved*,
+but spilled to the host memory space during the forward pass and fetched
+back for the backward, via ``jax.checkpoint_policies
+.save_and_offload_only_these_names``. Everything else recomputes, exactly
+like ``remat="full"``.
+
+On backends without a distinct host memory kind (the capability probe in
+``kernels.compat``), the policy degrades to ``save_only_these_names
+("residual")`` — the same liveness schedule with the saved residuals kept
+on device, so the numerics and the jaxpr structure are identical and only
+the placement differs. That keeps ``remat="offload"`` runnable (and
+testable) everywhere.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import compat
+
+# the activation name models.transformer tags on the scanned residual
+# stream (the per-layer-group checkpoint the backward pass re-enters from)
+RESIDUAL_NAME = "residual"
+
+
+def offload_remat_policy():
+    """The ``jax.checkpoint`` policy behind ``cfg.remat == "offload"``."""
+    cp = jax.checkpoint_policies
+    kind = compat.host_memory_kind()
+    if kind is not None:
+        return cp.save_and_offload_only_these_names(
+            names_which_can_be_saved=[],
+            names_which_can_be_offloaded=[RESIDUAL_NAME],
+            offload_src=compat.device_memory_kind(),
+            offload_dst=kind)
+    return cp.save_only_these_names(RESIDUAL_NAME)
+
+
+def remat_policy_for(remat: str):
+    """Resolve a ``cfg.remat`` string to a ``jax.checkpoint`` policy
+    (``None`` means checkpoint-everything, i.e. ``remat="full"``)."""
+    if remat == "full":
+        return None
+    if remat == "dots":
+        return jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    if remat == "offload":
+        return offload_remat_policy()
+    raise ValueError(f"no checkpoint policy for remat={remat!r}")

@@ -1,0 +1,165 @@
+"""OffloadPlan / OffloadExecutor: the phase schedule of the offload
+subsystem.
+
+``OffloadPlan`` is compiled from the canonical PPO phase sequence in
+``core.phases`` (``RLHF_PHASE_SEQUENCE`` collapsed to the seven runtime
+phases) and the same per-state touch map the allocator simulator replays
+(``phase_state_touches``) — so the analytic live-HBM curve and the runtime
+one are two views of one schedule and cannot drift apart.
+
+``OffloadExecutor`` binds a plan to a :class:`~repro.offload.host_store.
+HostParkingLot` and a registry of *state accessors* — ``name -> (get,
+set)`` closures owned by the trainer, since role trees live in train-state
+dicts that donation rewrites every step. At each
+``PhaseMemoryManager.boundary()`` the executor:
+
+  1. **parks** every managed tree the next phase doesn't touch (before the
+     boundary's gc/record, so the eviction is visible in the live-bytes
+     curve);
+  2. **fetches** the next phase's parked trees — ``jax.device_put`` is
+     asynchronous, so the host->device copies overlap the boundary's host
+     work and the next phase's dispatch (the double-buffering).
+
+The one mid-phase event is hydra rollout: once ``merge_adapter`` has
+folded A·B into a rollout copy of the trunk, the trunk's adapted leaves
+are redundant until scoring — ``rollout_merged()`` parks them (the
+``offload="all"`` preset), and the rollout boundary fetches them back.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Mapping, Tuple
+
+from repro.core.phases import (RUNTIME_RLHF_PHASE_SEQUENCE,
+                               runtime_state_touches)
+from repro.core.strategies import OFFLOAD_LEVELS, offload_managed_states
+from repro.offload.host_store import HostParkingLot
+
+# one PPO iteration as the trainer bounds it — derived in core.phases from
+# the canonical trace-level sequence (rollout prefill+decode collapsed)
+RUNTIME_PHASE_SEQUENCE = RUNTIME_RLHF_PHASE_SEQUENCE
+
+StateAccessor = Tuple[Callable[[], Any], Callable[[Any], None]]
+
+
+@dataclass(frozen=True)
+class OffloadPlan:
+    """Which state trees must be device-resident during which phase, and
+    which of them the chosen level swaps."""
+    level: str
+    engine: str
+    sequence: Tuple[str, ...]
+    required: Mapping[str, frozenset]     # phase -> state names it touches
+    managed: frozenset                    # states the level parks off-phase
+
+    @classmethod
+    def compile(cls, level: str, *, engine: str = "hydra",
+                states=None, frozen_unused=()) -> "OffloadPlan":
+        """Compile the plan for an offload level. ``states`` (optional)
+        restricts the plan to the state names the caller actually
+        registers (e.g. no ``ref_params`` tree exists under hydra).
+        ``frozen_unused`` names states the run never touches at all (e.g.
+        ``reward_params`` when a programmatic ``reward_fn`` replaces the
+        reward model): they park at ``start()`` and are never fetched,
+        instead of round-tripping over PCIe every iteration."""
+        assert level in OFFLOAD_LEVELS, level
+        touches = runtime_state_touches(engine)
+        if states is not None:
+            touches = {k: v for k, v in touches.items() if k in set(states)}
+        touches.update({n: frozenset() for n in frozen_unused
+                        if n in touches})
+        required = {
+            ph: frozenset(n for n, phs in touches.items() if ph in phs)
+            for ph in RUNTIME_PHASE_SEQUENCE}
+        managed = frozenset(offload_managed_states(level, touches))
+        return cls(level=level, engine=engine,
+                   sequence=RUNTIME_PHASE_SEQUENCE, required=required,
+                   managed=managed)
+
+    def next_phase(self, phase: str) -> str:
+        i = self.sequence.index(phase)
+        return self.sequence[(i + 1) % len(self.sequence)]
+
+    def resident_for(self, phase: str) -> frozenset:
+        """Managed states that must be on device during ``phase``."""
+        return self.managed & self.required[phase]
+
+    def evict_before(self, phase: str) -> frozenset:
+        """Managed states ``phase`` does not touch (park candidates)."""
+        return self.managed - self.required[phase]
+
+
+class OffloadExecutor:
+    """Drives a plan against the trainer's live state at phase boundaries.
+
+    ``states`` maps each plan state name to ``(get, set)`` closures; ``set``
+    must repoint *every* alias the trainer holds (train-state dict, engine
+    adapter view, ...) so no reference to a parked device buffer survives.
+    """
+
+    def __init__(self, plan: OffloadPlan, lot: HostParkingLot,
+                 states: Dict[str, StateAccessor]):
+        missing = plan.managed - set(states)
+        assert not missing, f"no accessor for managed states {missing}"
+        self.plan = plan
+        self.lot = lot
+        self.states = states
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> None:
+        """Initial placement: park everything the first phase (rollout)
+        doesn't touch. Called once at trainer init — and the point where
+        ``adopt_parked`` checkpoint restores land for free."""
+        self._park_except(self.plan.sequence[0])
+
+    def park_for_boundary(self, completed: str) -> None:
+        """Boundary half 1 (before the live-bytes record): evict managed
+        trees the next phase doesn't touch."""
+        self._park_except(self.plan.next_phase(completed))
+
+    def fetch_for_boundary(self, completed: str) -> None:
+        """Boundary half 2 (after the record): bring the next phase's
+        parked trees back. All host->device copies are *prefetched* first
+        — issued back-to-back so they overlap one another and (via JAX's
+        async dispatch) whatever the device is still running from the
+        completed phase — then installed as prefetch hits. A deeper
+        horizon would park/fetch a phase early and hold double residency
+        for a whole phase; this keeps the overlap without the extra live
+        bytes."""
+        nxt = self.plan.next_phase(completed)
+        names = [n for n in sorted(self.plan.resident_for(nxt))
+                 if n in self.lot]
+        for name in names:
+            self.lot.prefetch(name)
+        for name in names:
+            self.states[name][1](self.lot.fetch(name))
+
+    def rollout_merged(self) -> None:
+        """Hydra mid-rollout hook: the merged rollout weights now carry the
+        adapted leaves, so the trunk's own copies are phase-dead — park
+        them (level "all"; no-op otherwise). Their fetch rides the rollout
+        boundary like any other state."""
+        if "base_params" in self.plan.managed and \
+                "base_params" not in self.lot:
+            get, set_ = self.states["base_params"]
+            self.lot.park("base_params", get())
+            set_(self.lot.peek("base_params"))
+
+    def adopt_parked(self, name: str, host_tree) -> None:
+        """Install a host-resident restore (``checkpoint.store.restore(...,
+        memory_kind=...)``) directly into the lot — resume without the
+        transient HBM spike of trees that would immediately be parked."""
+        if name in self.lot:
+            self.lot.discard(name)    # replace a stale parked copy
+        self.lot.adopt(name, host_tree)
+        self.states[name][1](self.lot.peek(name))
+
+    # ------------------------------------------------------------- internals
+    def _park_except(self, phase: str) -> None:
+        for name in sorted(self.plan.evict_before(phase)):
+            if name not in self.lot:
+                get, set_ = self.states[name]
+                self.lot.park(name, get())
+                # leave the host view installed: accidental use stays
+                # correct (jit coerces), and the fetch repoints it
+                set_(self.lot.peek(name))

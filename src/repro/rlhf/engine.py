@@ -97,6 +97,13 @@ class ModelEngine:
     # ``Rollout.generate(..., adapter=...)`` via ``Model.merge_adapter`` and
     # ``lora.delete_merged``.
 
+    def lora_sites(self):
+        """Structure-only copy of the adapter site tree (every leaf True).
+        The offload subsystem traverses it to find the trunk's swappable
+        adapted-site leaves (``lora.adapted_subtree``) — the site layout is
+        shared by every role, so the actor's adapter defines it."""
+        return jax.tree.map(lambda _: True, self.adapters["actor"]["lora"])
+
     # ---------------------------------------------------------- accounting
     def base_param_count(self) -> int:
         return int(sum(np.prod(l.shape)

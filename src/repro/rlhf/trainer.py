@@ -18,6 +18,14 @@ a real run is observable, phase by phase, exactly like the paper's profiler
 (App. B). On TPU, buffer *placement* churn is already avoided by design
 (static shapes + donation — see rollout.py); what remains at boundaries is
 reference hygiene, which this manager enforces.
+
+``RLHFConfig.offload`` adds the runtime half of the paper's
+phase-exclusivity story (``repro.offload``): role state is parked to host
+between the phases that touch it and async-fetched back at the boundary —
+``"optimizer"`` swaps the moments, ``"roles"`` adds the per-role
+params/adapters, ``"all"`` also parks the hydra trunk's adapted leaves
+while merged weights serve rollout. Parking is bit-exact, so every offload
+level reproduces the ``"none"`` losses to the last ulp.
 """
 from __future__ import annotations
 
@@ -42,15 +50,33 @@ MEMORY_POLICIES = ("none", "after_inference", "after_training", "after_all")
 
 
 def live_device_bytes() -> int:
-    return sum(getattr(a, "nbytes", 0) for a in jax.live_arrays())
+    """Live *device* bytes: arrays parked in the host memory kind by the
+    offload subsystem don't count (numpy fallback copies never did)."""
+    from repro.kernels import compat
+    host_kind = compat.host_memory_kind()
+    total = 0
+    for a in jax.live_arrays():
+        if host_kind is not None and \
+                getattr(a.sharding, "memory_kind", None) == host_kind:
+            continue
+        total += getattr(a, "nbytes", 0)
+    return total
 
 
 @dataclass
 class PhaseMemoryManager:
-    """Phase-boundary memory hygiene + per-phase live-memory profiling."""
+    """Phase-boundary memory hygiene + per-phase live-memory profiling.
+
+    With an ``offload`` executor attached (``rl.offload != "none"``), each
+    boundary also runs the offload schedule: park the trees the next phase
+    doesn't touch *before* the live-bytes record (so eviction shows in the
+    curve), async-fetch the next phase's trees after it — mirroring the
+    park -> empty_cache -> record -> fetch order of the allocator
+    simulator's boundary model."""
     # none | after_inference | after_training | after_all
     policy: str = "after_inference"
     records: List[dict] = field(default_factory=list)
+    offload: Optional[Any] = None      # offload.OffloadExecutor
 
     def __post_init__(self):
         if self.policy not in MEMORY_POLICIES:
@@ -58,19 +84,36 @@ class PhaseMemoryManager:
                 f"unknown memory policy {self.policy!r}; "
                 f"expected one of {MEMORY_POLICIES}")
 
+    def _record(self, phase: str, kind: str, **extra):
+        rec = {"phase": phase, "kind": kind,
+               "live_bytes": live_device_bytes(),
+               "host_bytes": (self.offload.lot.parked_bytes()
+                              if self.offload is not None else 0),
+               "t": time.time()}
+        rec.update(extra)
+        self.records.append(rec)
+
+    def sample(self, phase: str, kind: str = "inference"):
+        """Mid-phase measurement point (no hygiene): used where the live
+        set changes inside a phase — e.g. hydra rollout decode, where the
+        trunk's adapted leaves are parked while merged weights serve."""
+        self._record(phase, kind, sample=True)
+
     def boundary(self, phase: str, kind: str, *drop):
         for tree in drop:
             jax.tree.map(
                 lambda x: x.delete()
                 if hasattr(x, "delete") and not x.is_deleted() else None,
                 tree)
+        if self.offload is not None:
+            self.offload.park_for_boundary(phase)
         if (self.policy == "after_all"
                 or (self.policy == "after_inference" and kind == "inference")
                 or (self.policy == "after_training" and kind == "training")):
             gc.collect()
-        self.records.append({"phase": phase, "kind": kind,
-                             "live_bytes": live_device_bytes(),
-                             "t": time.time()})
+        self._record(phase, kind)
+        if self.offload is not None:
+            self.offload.fetch_for_boundary(phase)
 
 
 @dataclass
@@ -89,6 +132,11 @@ class RLHFConfig:
     memory_policy: str = "after_inference"
     engine: str = "separate"        # separate | hydra
     lora_rank: int = 128            # hydra adapter rank (paper grid: 128)
+    # runtime host-offload level (repro.offload): none | optimizer | roles
+    # | all — which role state is parked to host between the phases that
+    # touch it ("all" also parks the hydra trunk's adapted leaves while
+    # merged weights serve rollout)
+    offload: str = "none"
 
 
 class RLHFTrainer:
@@ -115,6 +163,91 @@ class RLHFTrainer:
         self.rollout = Rollout(self.actor, actor_cfg,
                                capacity=rl.prompt_len + rl.gen_len,
                                temperature=rl.temperature, top_k=rl.top_k)
+        self.offload = self.offload_lot = None
+        if rl.offload != "none":
+            self._init_offload(rl)
+
+    # --------------------------------------------------------------- offload
+    def _init_offload(self, rl: RLHFConfig):
+        """Runtime host-offload: compile the phase plan, bind it to a
+        parking lot over the trainer's state accessors, and do the initial
+        placement (everything the first phase doesn't touch goes to host)."""
+        from repro.offload import HostParkingLot, OffloadExecutor, OffloadPlan
+        states = self._offload_states()
+        # a programmatic reward_fn means score_reward never touches the
+        # reward model: park it once at start instead of swapping it
+        # host<->device every iteration
+        unused = ("reward_params",) if self.reward_fn is not None else ()
+        plan = OffloadPlan.compile(rl.offload, engine=rl.engine,
+                                   states=states, frozen_unused=unused)
+        self.offload_lot = HostParkingLot()
+        self.offload = OffloadExecutor(plan, self.offload_lot, states)
+        self.memory.offload = self.offload
+        self.offload.start()
+
+    def _offload_states(self) -> Dict[str, Any]:
+        """name -> (get, set) accessors over the trainer's live trees. The
+        setters repoint every alias (train-state dicts, engine adapter
+        views) so parked device buffers have no surviving references."""
+
+        def state_slot(state_attr, slot, alias=None):
+            def get():
+                return getattr(self, state_attr)[slot]
+
+            def set_(v):
+                getattr(self, state_attr)[slot] = v
+                if alias is not None:
+                    self.engine.adapters[alias] = v
+            return (get, set_)
+
+        if self.rl.engine == "separate":
+            def attr(name):
+                return (lambda: getattr(self, name),
+                        lambda v: setattr(self, name, v))
+            return {
+                "actor_params": state_slot("actor_state", "params"),
+                "actor_opt": state_slot("actor_state", "opt"),
+                "critic_params": state_slot("critic_state", "params"),
+                "critic_opt": state_slot("critic_state", "opt"),
+                "ref_params": attr("ref_params"),
+                "reward_params": attr("reward_params"),
+            }
+
+        # hydra: the swappable unit of the trunk is its *adapted-site*
+        # subtree — exactly the leaves merge_adapter replaces; the merged
+        # rollout copy aliases everything else, which must stay put
+        from repro.models import lora as LORA
+        lora_sites = self.engine.lora_sites()
+
+        def get_base():
+            return LORA.adapted_subtree(self.base_params, lora_sites)
+
+        def set_base(subtree):
+            new = LORA.with_adapted_leaves(self.base_params, lora_sites,
+                                           subtree)
+            self.base_params = new
+            self.engine.base_params = new
+            self.ref_params = new          # reference IS the base
+
+        def reward_acc():
+            def get():
+                return self.reward_adapter
+
+            def set_(v):
+                self.reward_adapter = v
+                self.engine.adapters["reward"] = v
+            return (get, set_)
+
+        return {
+            "base_params": (get_base, set_base),
+            "actor_params": state_slot("actor_state", "params",
+                                       alias="actor"),
+            "actor_opt": state_slot("actor_state", "opt"),
+            "critic_params": state_slot("critic_state", "params",
+                                        alias="critic"),
+            "critic_opt": state_slot("critic_state", "opt"),
+            "reward_params": reward_acc(),
+        }
 
     # -------------------------------------------------------------- separate
     def _init_separate(self, actor_cfg, critic_cfg, rl, key):
@@ -202,10 +335,28 @@ class RLHFTrainer:
         self._jit_reward = self._jit_values
 
         # engine-bound callables (hydra flavor: the frozen trunk threads
-        # through every call; rollout merges A·B into it once per phase)
-        self._gen = lambda prompts, key: self.rollout.generate(
-            self.base_params, {"tokens": prompts}, self.rl.gen_len, key,
-            adapter=self.actor_state["params"])
+        # through every call; rollout merges A·B into it once per phase).
+        # The merge happens here rather than inside Rollout.generate so the
+        # offload scheduler can park the trunk's now-redundant adapted
+        # leaves for the duration of generation (offload="all").
+        def _gen(prompts, key):
+            from repro.models.lora import delete_merged
+            adapter = self.actor_state["params"]
+            merged = self.actor.merge_adapter(self.base_params, adapter)
+            if self.offload is not None:
+                self.offload.rollout_merged()
+            try:
+                ro = self.rollout.generate(merged, {"tokens": prompts},
+                                           self.rl.gen_len, key)
+                # live set changes inside this phase (merged weights serve,
+                # trunk possibly parked): record it before the merged
+                # leaves die at the boundary
+                self.memory.sample("rollout_decode")
+                return ro
+            finally:
+                delete_merged(merged, adapter.get("lora"))
+
+        self._gen = _gen
         self._old_logp = lambda b: self._jit_logp(
             self.base_params, self.actor_state["params"], b)
         # reference logp IS the plain base forward — no ref replica
@@ -252,18 +403,14 @@ class RLHFTrainer:
 
     def make_experience(self, prompts: jax.Array, key) -> Dict[str, Any]:
         """Phases 1-5: rollout + the four scoring inferences -> experience.
-        Straight-line over the engine-bound callables from ``_init_*``."""
+        Straight-line over the engine-bound callables from ``_init_*``, in
+        the canonical order of ``core.phases.RLHF_PHASE_SEQUENCE`` (the
+        order the offload plan prefetches against)."""
         mm = self.memory
         ro = self._gen(prompts, key)
         mm.boundary("rollout", "inference")
 
         batch = {"tokens": ro.tokens}
-        old_logp = self._old_logp(batch)
-        mm.boundary("score_old_logp", "inference")
-        ref_logp = self._ref_logp(batch)
-        mm.boundary("score_ref", "inference")
-        values = self._values(batch) * ro.mask
-        mm.boundary("score_values", "inference")
         if self.reward_fn is not None:
             terminal = self.reward_fn(ro.tokens, ro.mask)
         else:
@@ -271,6 +418,12 @@ class RLHFTrainer:
             idx = jnp.maximum(ro.mask.sum(-1).astype(jnp.int32) - 1, 0)
             terminal = jnp.take_along_axis(rm, idx[:, None], 1)[:, 0]
         mm.boundary("score_reward", "inference")
+        ref_logp = self._ref_logp(batch)
+        mm.boundary("score_ref", "inference")
+        values = self._values(batch) * ro.mask
+        mm.boundary("score_values", "inference")
+        old_logp = self._old_logp(batch)
+        mm.boundary("score_old_logp", "inference")
 
         rewards = kl_shaped_rewards(old_logp, ref_logp, terminal, ro.mask,
                                     kl_coef=self.rl.kl_coef)

@@ -1,7 +1,7 @@
 from repro.sharding.rules import (
-    ShardingStrategy, batch_pspecs, cache_pspecs, dp_axes, param_pspecs,
-    to_named, zero_opt_pspecs,
+    ShardingStrategy, batch_pspecs, cache_pspecs, dp_axes, opt_shardings,
+    param_pspecs, to_named, zero_opt_pspecs,
 )
 
 __all__ = ["ShardingStrategy", "batch_pspecs", "cache_pspecs", "dp_axes",
-           "param_pspecs", "to_named", "zero_opt_pspecs"]
+           "opt_shardings", "param_pspecs", "to_named", "zero_opt_pspecs"]

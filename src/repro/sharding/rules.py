@@ -50,7 +50,11 @@ class ShardingStrategy:
     zero_stage: int = 3          # 1 | 2 | 3
     tensor_parallel: bool = True
     expert_parallel: bool = True
-    offload_optimizer: bool = False   # host offload (trace-level on CPU)
+    # host-offloaded optimizer state: realized as real device placement by
+    # opt_shardings() (host memory kind) on backends that support memory
+    # kinds — the same axis MemoryStrategy.cpu_offload models analytically
+    # and repro.offload swaps at runtime, so the three can't disagree
+    offload_optimizer: bool = False
     remat: Optional[str] = None       # override cfg.remat if set
 
 
@@ -238,3 +242,23 @@ def cache_pspecs(model, cfg: ModelConfig, mesh: Mesh, batch: int,
 def to_named(mesh: Mesh, spec_tree):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_shardings(mesh: Mesh, opt_spec_tree, strat: ShardingStrategy):
+    """NamedShardings for the optimizer state. With
+    ``strat.offload_optimizer`` the shardings target the host memory kind
+    (when the backend exposes one — see ``kernels.compat``): the optimizer
+    moments live on host as *committed device placement*, which is what
+    ``MemoryStrategy.scale(tag="opt") == 0`` has been modelling at the
+    trace level. Backends without memory kinds fall back to plain device
+    shardings; the dynamic alternative there is the runtime parking lot
+    (``repro.offload``, ``offload="optimizer"``)."""
+    named = to_named(mesh, opt_spec_tree)
+    if not strat.offload_optimizer:
+        return named
+    from repro.kernels.compat import host_memory_kind
+    kind = host_memory_kind()
+    if kind is None:
+        return named
+    return jax.tree.map(lambda s: s.with_memory_kind(kind), named,
+                        is_leaf=lambda x: isinstance(x, NamedSharding))
