@@ -8,23 +8,89 @@ CSV rows (and the detailed tables beneath).
   placement  — empty_cache placement ablation (paper §3.3)
   generation — naive (HF-style growing cache) vs framework static cache
   paged      — dense [B, capacity] vs paged KV cache on ragged requests
+  zero       — mesh-sharded ZeRO RLHF smoke on 8 forced host devices
   kernels    — wall-time microbenches of the XLA flash twin vs dense sdpa
   roofline   — summary of roofline_baseline.json if present
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only table1 ...]
+
+Every run writes one ``BENCH_<name>.json`` per benchmark into ``--out-dir``
+(default ``benchmarks/results/``; CI uploads them as artifacts). Metrics a
+benchmark registers via ``_gate`` are regression-gated: with
+``--check-baseline``, any gated metric that regresses >10% against the
+committed ``benchmarks/baselines/BENCH_<name>.json`` fails the run —
+the perf trajectory is recorded, not just asserted once.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import sys
 import time
 
 GB = 1 << 30
 
+# per-benchmark results registry: name -> {"metrics": {...}, "gated": {...}}
+RESULTS: dict = {}
+_CURRENT = [None]                   # benchmark currently executing
+
+
+def _result(name=None):
+    cur = name or _CURRENT[0] or "misc"
+    return RESULTS.setdefault(cur, {"name": cur, "metrics": {}, "gated": {}})
+
 
 def _csv(name, us, derived=""):
     print(f"CSV,{name},{us:.1f},{derived}")
+    _result()["metrics"][name] = {"us_per_call": round(us, 1),
+                                  "derived": derived}
+
+
+def _gate(key, value, better="higher"):
+    """Register a regression-gated metric for the current benchmark.
+    ``better="higher"`` fails when the value drops >10% below baseline;
+    ``"lower"`` fails when it rises >10% above."""
+    assert better in ("higher", "lower"), better
+    _result()["gated"][key] = {"value": float(value), "better": better}
+
+
+def write_results(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    for name, rec in RESULTS.items():
+        path = os.path.join(out_dir, f"BENCH_{name}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, sort_keys=True)
+        print(f"[bench] wrote {path}")
+
+
+def check_baseline(baseline_dir: str, tol: float = 0.10) -> int:
+    """Compare this run's gated metrics against the committed baselines.
+    Returns the number of regressions (>tol relative, in the bad
+    direction — improvements never fail)."""
+    failures = 0
+    for name, rec in RESULTS.items():
+        path = os.path.join(baseline_dir, f"BENCH_{name}.json")
+        if not os.path.exists(path):
+            if rec["gated"]:
+                print(f"[bench] {name}: no baseline committed "
+                      f"({path}) — skipped")
+            continue
+        base = json.load(open(path)).get("gated", {})
+        for key, cur in rec["gated"].items():
+            if key not in base:
+                print(f"[bench] {name}.{key}: not in baseline — skipped")
+                continue
+            bv, cv = base[key]["value"], cur["value"]
+            if cur["better"] == "higher":
+                ok = cv >= bv - abs(bv) * tol
+            else:
+                ok = cv <= bv + abs(bv) * tol
+            status = "ok" if ok else "REGRESSION"
+            print(f"[bench] {name}.{key}: {cv:.2f} vs baseline {bv:.2f} "
+                  f"({cur['better']} is better) {status}")
+            failures += 0 if ok else 1
+    return failures
 
 
 def _study(actor_name, critic_name, gen_lens, naive=True):
@@ -73,6 +139,7 @@ def bench_figure1():
     print(f"peak reserved {r.peak_reserved/GB:.2f}G  "
           f"frag@peak {r.frag_at_peak/GB:.2f}G  "
           f"(overhead {ov:.0f}% — paper: 46%)")
+    _gate("frag_overhead_pct", ov, "lower")
     _csv("figure1_timeline", (time.time() - t0) * 1e6,
          f"frag_overhead_pct={ov:.0f}")
 
@@ -268,6 +335,8 @@ def bench_paged():
     assert paged_r < dense_r, "paged must reserve less than dense"
     print(f"-> paged reserves {100*(1-paged_r/dense_r):.0f}% less KV than "
           f"the dense [B, capacity] layout")
+    _gate("kv_reduction_pct", 100 * (1 - paged_r / dense_r), "higher")
+    _gate("paged_reserved_bytes", paged_r, "lower")
     _csv("paged", (time.time() - t0) * 1e6,
          f"dense_bytes={dense_r};paged_bytes={paged_r}")
 
@@ -343,6 +412,7 @@ def bench_hydra():
     match = bool(jnp.array_equal(greedy, gen))
     print(f"-> merged-rollout greedy tokens == unmerged argmax: {match}")
     assert match, "merged rollout diverged from unmerged argmax path"
+    _gate("reduction_pct", 100 * red, "higher")
     _csv("hydra", (time.time() - t0) * 1e6,
          f"separate_bytes={init_bytes['separate']};"
          f"hydra_bytes={init_bytes['hydra']};reduction_pct={100*red:.0f}")
@@ -480,6 +550,8 @@ def bench_offload():
               f"{'ok' if ok else 'OUT'}")
         assert ok, (r["phase"], lo, measured, hi)
     print("-> simulator's predicted live-HBM curve brackets the runtime")
+    _gate("sim_reduction_pct", 100 * red, "higher")
+    _gate("runtime_reduction_pct", 100 * run_red, "higher")
     _csv("offload", (time.time() - t0) * 1e6,
          f"sim_reduction_pct={100*red:.0f};"
          f"runtime_reduction_pct={100*run_red:.0f}")
@@ -513,6 +585,44 @@ def bench_grpo():
                   f" frag {r.frag_at_peak/GB:5.2f}G"
                   f" alloc {r.peak_allocated/GB:6.2f}G")
     _csv("grpo_vs_ppo", (time.time() - t0) * 1e6)
+
+
+def bench_zero():
+    """Beyond-paper: the mesh-sharded ZeRO RLHF engines, validated on 8
+    forced host devices (subprocess — the flag must be set before jax
+    initializes). Asserts 2-step PPO bit-identity between ndp=1 and ndp=8
+    on BOTH engines, dense+paged rollout identity under the mesh, the
+    ZeRO-3 per-device param+opt cut (<=30% of replicated for the separate
+    engine), and that the simulator's traced ndp=8 curve brackets the
+    measured one. See benchmarks/zero_smoke.py."""
+    import subprocess
+    t0 = time.time()
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(root, "src"),
+               JAX_PLATFORMS="cpu",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    r = subprocess.run([sys.executable, "-m", "benchmarks.zero_smoke"],
+                       env=env, cwd=root, capture_output=True, text=True,
+                       timeout=3000)
+    print("\n== mesh-sharded ZeRO RLHF smoke (8 forced host devices) ==")
+    out = r.stdout or ""
+    print("\n".join(l for l in out.splitlines()
+                    if not l.startswith("ZERO_METRICS")))
+    assert r.returncode == 0, f"zero_smoke failed:\n{out}\n{r.stderr[-3000:]}"
+    metrics = json.loads(
+        [l for l in out.splitlines()
+         if l.startswith("ZERO_METRICS ")][-1][len("ZERO_METRICS "):])
+    assert metrics["separate_biteq"] and metrics["hydra_biteq"]
+    assert metrics["sim_bracket_ok"]
+    assert metrics["separate_state_bytes_zero3"] <= \
+        0.30 * metrics["separate_state_bytes_ndp1"]
+    _gate("separate_zero3_cut_pct", metrics["separate_zero3_cut_pct"],
+          "higher")
+    _gate("hydra_zero3_cut_pct", metrics["hydra_zero3_cut_pct"], "higher")
+    _csv("zero", (time.time() - t0) * 1e6,
+         f"separate_cut_pct={metrics['separate_zero3_cut_pct']};"
+         f"hydra_cut_pct={metrics['hydra_zero3_cut_pct']}")
 
 
 def bench_zero_tpu():
@@ -578,22 +688,47 @@ BENCHES = {
     "paged": bench_paged,
     "hydra": bench_hydra,
     "offload": bench_offload,
+    "zero": bench_zero,
     "kernels": bench_kernels,
     "grpo": bench_grpo,
     "zero_tpu": bench_zero_tpu,
     "roofline": bench_roofline,
 }
 
+_DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "results")
+_DEFAULT_BASELINES = os.path.join(os.path.dirname(__file__), "baselines")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", choices=list(BENCHES), default=None)
+    ap.add_argument("--out-dir", default=_DEFAULT_OUT,
+                    help="where BENCH_<name>.json result files are written")
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="fail when a gated metric regresses >10%% vs the "
+                         "committed benchmarks/baselines/BENCH_*.json")
+    ap.add_argument("--baseline-dir", default=_DEFAULT_BASELINES)
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    for name, fn in BENCHES.items():
-        if args.only and name not in args.only:
-            continue
-        fn()
+    try:
+        for name, fn in BENCHES.items():
+            if args.only and name not in args.only:
+                continue
+            _CURRENT[0] = name
+            try:
+                fn()
+            finally:
+                _CURRENT[0] = None
+    finally:
+        # a failing bench must not lose the results of the ones that
+        # completed — that is exactly when the artifacts matter
+        write_results(args.out_dir)
+    if args.check_baseline:
+        failures = check_baseline(args.baseline_dir)
+        if failures:
+            print(f"[bench] {failures} gated metric(s) regressed >10%")
+            sys.exit(1)
+        print("[bench] baseline gate passed")
 
 
 if __name__ == "__main__":

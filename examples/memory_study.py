@@ -6,6 +6,10 @@ parks off-phase role state to host at phase boundaries.
 
     PYTHONPATH=src python examples/memory_study.py [--strategy ZeRO-3]
     PYTHONPATH=src python examples/memory_study.py --engine hydra --offload all
+    PYTHONPATH=src python examples/memory_study.py --ndp 8 --zero-stage 3
+
+The ``--ndp``/``--zero-stage`` axis is traced from the real sharded spec
+trees (``core.strategies.traced_strategy``), not the closed-form ``1/ndp``.
 """
 import argparse
 import dataclasses
@@ -15,7 +19,8 @@ sys.path.insert(0, "src")
 
 from repro.configs import get_config
 from repro.core import (OFFLOAD_LEVELS, PAPER_STRATEGIES, build_rlhf_phases,
-                        lora_trainable_fraction, run_iteration)
+                        lora_trainable_fraction, run_iteration,
+                        traced_strategy)
 
 GB = 1 << 30
 
@@ -31,9 +36,19 @@ def main():
     ap.add_argument("--offload", default="none", choices=OFFLOAD_LEVELS,
                     help="runtime host-offload level applied at phase "
                          "boundaries (repro.offload)")
+    ap.add_argument("--ndp", type=int, default=4,
+                    help="DP/ZeRO domain size of the simulated node")
+    ap.add_argument("--zero-stage", type=int, default=None,
+                    choices=(0, 1, 2, 3),
+                    help="override the strategy's ZeRO stage; with --ndp "
+                         "the per-device fractions are TRACED from the "
+                         "real sharded spec trees, not the closed-form "
+                         "1/ndp (core.strategies.traced_strategy)")
     args = ap.parse_args()
     strat = {s.name: s for s in PAPER_STRATEGIES}[args.strategy]
     strat = dataclasses.replace(strat, offload=args.offload)
+    if args.zero_stage is not None:
+        strat = dataclasses.replace(strat, zero_stage=args.zero_stage)
 
     actor, critic = get_config("opt_1_3b"), get_config("opt_350m")
     # hydra phase plans carry exact adapter-sized opt/grad buffers already
@@ -47,14 +62,19 @@ def main():
                                         grad_ckpt=strat.grad_ckpt,
                                         engine=args.engine)
         plans.append(ph)
+    # trace the ndp axis from the real sharded spec trees (value heads,
+    # norms etc. that cannot shard are charged at full size)
+    strat = traced_strategy(strat, actor, critic, ndp=args.ndp,
+                            engine=args.engine)
 
-    print(f"\nstrategy: {strat.name}  (DP=4, LoRA-128, 24 GB device, "
+    print(f"\nstrategy: {strat.name}  (DP={args.ndp}, "
+          f"zero_stage={strat.zero_stage}, LoRA-128, 24 GB device, "
           f"offload={args.offload})")
     print(f"{'policy':16s} {'reserved':>9s} {'frag@peak':>10s} "
           f"{'allocated':>10s} {'time':>8s}")
     base = None
     for policy in ("none", "after_inference", "after_training", "after_all"):
-        r = run_iteration(plans, persist, strat, policy, ndp=4,
+        r = run_iteration(plans, persist, strat, policy, ndp=args.ndp,
                           trainable_fraction=tf)
         if policy == "none":
             base = r
@@ -63,7 +83,7 @@ def main():
         print(f"{policy:16s} {r.peak_reserved/GB:8.2f}G "
               f"{r.frag_at_peak/GB:9.2f}G {r.peak_allocated/GB:9.2f}G "
               f"{r.time_s:7.2f}s{host}")
-    fixed = run_iteration(plans, persist, strat, "after_inference", ndp=4,
+    fixed = run_iteration(plans, persist, strat, "after_inference", ndp=args.ndp,
                           trainable_fraction=tf)
     print(f"\nempty_cache after inference: "
           f"-{100*(1-fixed.peak_reserved/base.peak_reserved):.0f}% memory, "

@@ -45,6 +45,13 @@ def main():
                     help="runtime host-offload level (repro.offload): park "
                          "off-phase role state to host between the PPO "
                          "phases that touch it")
+    ap.add_argument("--ndp", type=int, default=1,
+                    help="DP/ZeRO domain size: shard params/opt over this "
+                         "many devices (needs >= ndp local devices, e.g. "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--zero-stage", type=int, default=3,
+                    choices=(0, 1, 2, 3),
+                    help="ZeRO stage for --ndp > 1 (DESIGN.md §2)")
     ap.add_argument("--lr", type=float, default=0.0,
                     help="0 = engine default (adapters train at ~10x the "
                          "full-finetune rate: LoRA's B=0 init scales the "
@@ -62,8 +69,19 @@ def main():
                     lora_rank=args.lora_rank,
                     memory_policy=args.memory_policy,
                     offload=args.offload)
+    shard = None
+    if args.ndp > 1:
+        from repro.sharding import ShardedContext
+        assert len(jax.devices()) >= args.ndp, \
+            f"--ndp {args.ndp} needs that many local devices; run under " \
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={args.ndp}"
+        shard = ShardedContext.create(args.ndp, zero_stage=args.zero_stage)
+        print(f"mesh-sharded: ndp={args.ndp} zero_stage={args.zero_stage}")
     trainer = RLHFTrainer(cfg, cfg, rl, jax.random.PRNGKey(0),
-                          reward_fn=make_target_token_reward(7))
+                          reward_fn=make_target_token_reward(7), shard=shard)
+    if shard is not None:
+        print(f"per-device persistent state: "
+              f"{trainer.per_device_state_bytes()/2**20:.2f} MiB")
     if args.engine == "hydra":
         eng = trainer.engine
         print(f"hydra engine: trunk {eng.base_param_count():,} params "

@@ -8,7 +8,8 @@ from repro.core.phases import (RLHF_PHASE_SEQUENCE, Phase, build_rlhf_phases,
 from repro.core.profiler import POLICIES, RunResult, run_iteration
 from repro.core.strategies import (MemoryStrategy, OFFLOAD_LEVELS,
                                    PAPER_STRATEGIES, lora_trainable_fraction,
-                                   offload_managed_states)
+                                   offload_managed_states, traced_strategy,
+                                   traced_zero_scales)
 from repro.core.trace import Trace, trace_function
 
 __all__ = ["CachingAllocator", "Phase", "build_rlhf_phases",
@@ -16,4 +17,4 @@ __all__ = ["CachingAllocator", "Phase", "build_rlhf_phases",
            "runtime_state_touches", "POLICIES", "RunResult", "run_iteration",
            "MemoryStrategy", "OFFLOAD_LEVELS", "PAPER_STRATEGIES",
            "lora_trainable_fraction", "offload_managed_states", "Trace",
-           "trace_function"]
+           "trace_function", "traced_strategy", "traced_zero_scales"]

@@ -74,6 +74,7 @@ class RunResult:
     offload: str = "none"
     peak_host_bytes: int = 0       # peak parked on host (offload)
     swapped_bytes: int = 0         # cumulative host<->device swap traffic
+    ndp: int = 1                   # DP/ZeRO domain size the run modelled
 
     def row(self) -> dict:
         GB = 1 << 30
@@ -112,8 +113,12 @@ def run_iteration(plans, persistent: PersistentBuffers,
     offload = offload if offload is not None else \
         getattr(strategy, "offload", "none")
     alloc = CachingAllocator(timeline=timeline, capacity=capacity)
-    scale = lambda tag: strategy.scale(tag, ndp=ndp,
-                                       trainable_fraction=trainable_fraction)
+    # persistent groups pass their state name through, so a traced strategy
+    # (``strategies.traced_strategy``: per-device fractions from the real
+    # sharded trees) applies its exact per-group fraction; trace-level
+    # events fall back to the per-tag aggregate (or the closed-form 1/ndp)
+    scale = lambda tag, state=None: strategy.scale(
+        tag, ndp=ndp, trainable_fraction=trainable_fraction, state=state)
 
     # phase-scoped buffer groups: offload-managed role state + transients
     # (e.g. the hydra merged rollout weights); everything else is resident
@@ -128,14 +133,17 @@ def run_iteration(plans, persistent: PersistentBuffers,
     parked_now = 0
 
     def group_bytes(name: str) -> int:
-        return sum(int(nb * scale(tag))
-                   for nb, tag in persistent.buffers[name]
-                   if scale(tag) > 0 and nb * scale(tag) >= 4096)
+        total = 0
+        for nb, tag in persistent.buffers[name]:
+            s = scale(tag, name)
+            if s > 0 and nb * s >= 4096:
+                total += int(nb * s)
+        return total
 
     def group_malloc(name: str):
         hs = []
         for nb, tag in persistent.buffers[name]:
-            s = scale(tag)
+            s = scale(tag, name)
             if s > 0 and nb * s >= 4096:
                 hs.append(alloc.malloc(int(nb * s)))
         resident[name] = hs
@@ -242,4 +250,4 @@ def run_iteration(plans, persistent: PersistentBuffers,
         time_s=time_s, phase_records=records,
         timeline=alloc.timeline if timeline else [],
         offload=offload, peak_host_bytes=peak_host,
-        swapped_bytes=swapped_total)
+        swapped_bytes=swapped_total, ndp=ndp)

@@ -47,9 +47,10 @@ strategy grid (the paper's grid fixes it at 128).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import dataclasses
+from dataclasses import dataclass
 from functools import lru_cache
-from typing import Dict, Iterable, Set
+from typing import Dict, Iterable, Optional, Set, Tuple
 
 OFFLOAD_LEVELS = ("none", "optimizer", "roles", "all")
 
@@ -79,6 +80,13 @@ def offload_managed_states(level: str, names: Iterable[str]) -> Set[str]:
     return out
 
 
+@lru_cache(maxsize=256)
+def _traced_lookup(traced: tuple) -> dict:
+    """Tuple->dict view of a traced-scales tuple, cached — ``scale`` sits
+    on the profiler's per-buffer hot path."""
+    return dict(traced)
+
+
 @dataclass(frozen=True)
 class MemoryStrategy:
     name: str
@@ -87,10 +95,26 @@ class MemoryStrategy:
     grad_ckpt: bool = False
     lora_rank: int = 128         # LoRA rank of the trainable-fraction axis
     offload: str = "none"        # runtime swap level (repro.offload)
+    # traced per-device byte fractions from the *real* sharded spec trees
+    # (built by :func:`traced_strategy` / :func:`traced_zero_scales`):
+    # entries keyed "state:tag" (exact, per persistent group) with "tag"
+    # aggregates as fallback. Empty = the closed-form 1/ndp model.
+    traced: Tuple[Tuple[str, float], ...] = ()
 
     def scale(self, tag: str, *, ndp: int, trainable_fraction: float = 1.0,
-              param_persistent: bool = True) -> float:
+              param_persistent: bool = True,
+              state: Optional[str] = None) -> float:
         z = self.zero_stage
+        if self.traced and tag in ("param", "opt", "grad"):
+            if tag == "opt" and self.cpu_offload:
+                return 0.0
+            d = _traced_lookup(self.traced)
+            v = d.get(f"{state}:{tag}") if state else None
+            if v is None:
+                v = d.get(tag)
+            if v is not None:
+                mult = trainable_fraction if tag in ("opt", "grad") else 1.0
+                return v * mult
         if tag == "param":
             return 1.0 / ndp if z >= 3 else 1.0
         if tag == "opt":
@@ -141,3 +165,141 @@ def lora_trainable_fraction(cfg, rank: int = 128) -> float:
     if rank <= 0:
         return 1.0
     return _exact_fraction(cfg, rank)
+
+
+# ---------------------------------------------------------------------------
+# Traced ndp axis: per-device fractions from the REAL sharded spec trees
+# ---------------------------------------------------------------------------
+def _tree_fraction(spec_tree, shape_tree, mesh) -> Tuple[float, float]:
+    """(total_bytes, per_device_bytes) of a shape tree under its specs."""
+    import jax
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.rules import spec_device_fraction
+    flat_s = jax.tree_util.tree_leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+    flat_l = jax.tree_util.tree_leaves(shape_tree)
+    tot = dev = 0.0
+    for spec, leaf in zip(flat_s, flat_l):
+        nb = float(np.prod(leaf.shape) *
+                   jax.numpy.dtype(leaf.dtype).itemsize)
+        tot += nb
+        dev += nb * spec_device_fraction(spec, leaf, mesh)
+    return tot, dev
+
+
+@lru_cache(maxsize=64)
+def traced_zero_scales(actor_cfg, critic_cfg=None, *, ndp: int,
+                       zero_stage: int, engine: str = "separate",
+                       lora_rank: int = 128) -> Tuple[Tuple[str, float], ...]:
+    """Per-device byte fractions of every persistent RLHF state group,
+    traced from the REAL sharded spec trees (``jax.eval_shape`` of the
+    role trees under the mesh rules) instead of the closed-form ``1/ndp``.
+
+    The returned tuple plugs into :attr:`MemoryStrategy.traced`: exact
+    ``"<state>:<tag>"`` entries for every group of
+    ``core.phases.build_rlhf_phases`` (so the simulator charges e.g. the
+    hydra value heads at full size — they cannot shard — while the trunk
+    shards to 1/ndp), plus byte-weighted ``"param"/"opt"/"grad"``
+    aggregates as fallback for trace-level events. ``merged_rollout`` is
+    pinned at 1.0: merged generation runs from a *gathered* compute copy
+    by the runtime contract (DESIGN.md §3)."""
+    import jax
+
+    from repro.models import Model
+    from repro.optim import make_optimizer
+    from repro.sharding.rules import (ShardingStrategy, SpecMesh,
+                                      adapter_pspecs, param_pspecs,
+                                      zero_opt_pspecs)
+    assert engine in ("separate", "hydra"), engine
+    mesh = SpecMesh({"data": ndp})
+    strat = ShardingStrategy(zero_stage=zero_stage, tensor_parallel=False,
+                             expert_parallel=False)
+    key = jax.random.PRNGKey(0)
+    actor = Model(actor_cfg)
+    a_shapes = jax.eval_shape(actor.init, key)
+    a_specs = param_pspecs(actor_cfg, mesh, strat, a_shapes)
+
+    def opt_entry(pspecs, shapes, cfg):
+        opt = make_optimizer(cfg.optimizer)
+        o_shapes = jax.eval_shape(opt.init, shapes)
+        o_specs = opt.init_specs(
+            zero_opt_pspecs(pspecs, shapes, mesh, strat), shapes)
+        return _tree_fraction(o_specs, o_shapes, mesh)
+
+    groups: Dict[str, Tuple[str, Tuple[float, float]]] = {}
+    if engine == "hydra":
+        a_ad = jax.eval_shape(
+            lambda k: actor.init_adapter(k, a_shapes, lora_rank), key)
+        c_ad = jax.eval_shape(
+            lambda k: actor.init_adapter(k, a_shapes, lora_rank,
+                                         with_value=True), key)
+        ad_specs = adapter_pspecs(mesh, strat, a_ad)
+        cad_specs = adapter_pspecs(mesh, strat, c_ad)
+        from repro.models.lora import adapted_subtree
+        import numpy as np
+        merged = adapted_subtree(a_shapes, a_ad["lora"])
+        nb_merged = float(sum(
+            np.prod(l.shape) * jax.numpy.dtype(l.dtype).itemsize
+            for l in jax.tree.leaves(merged)))
+        groups = {
+            "base_params": ("param", _tree_fraction(a_specs, a_shapes, mesh)),
+            "actor_params": ("param", _tree_fraction(ad_specs, a_ad, mesh)),
+            "critic_params": ("param", _tree_fraction(cad_specs, c_ad, mesh)),
+            "reward_params": ("param", _tree_fraction(cad_specs, c_ad, mesh)),
+            "actor_opt": ("opt", opt_entry(ad_specs, a_ad, actor_cfg)),
+            "critic_opt": ("opt", opt_entry(cad_specs, c_ad, actor_cfg)),
+            # merged generation runs from a gathered (replicated) copy:
+            # per-device == total, fraction pinned at 1.0
+            "merged_rollout": ("param", (nb_merged, nb_merged)),
+        }
+        trainables = [("actor_params", ad_specs, a_ad, actor_cfg),
+                      ("critic_params", cad_specs, c_ad, actor_cfg)]
+    else:
+        critic_cfg = critic_cfg or actor_cfg
+        critic = Model(critic_cfg, with_value=True)
+        c_shapes = jax.eval_shape(critic.init, key)
+        c_specs = param_pspecs(critic_cfg, mesh, strat, c_shapes)
+        groups = {
+            "actor_params": ("param", _tree_fraction(a_specs, a_shapes, mesh)),
+            "critic_params": ("param", _tree_fraction(c_specs, c_shapes, mesh)),
+            "ref_params": ("param", _tree_fraction(a_specs, a_shapes, mesh)),
+            "reward_params": ("param", _tree_fraction(c_specs, c_shapes, mesh)),
+            "actor_opt": ("opt", opt_entry(a_specs, a_shapes, actor_cfg)),
+            "critic_opt": ("opt", opt_entry(c_specs, c_shapes, critic_cfg)),
+        }
+        trainables = [("actor_params", a_specs, a_shapes, actor_cfg),
+                      ("critic_params", c_specs, c_shapes, critic_cfg)]
+
+    out = []
+    agg: Dict[str, Tuple[float, float]] = {}
+    for name, (tag, (tot, dev)) in groups.items():
+        out.append((f"{name}:{tag}", dev / tot if tot else 1.0))
+        t, d = agg.get(tag, (0.0, 0.0))
+        agg[tag] = (t + tot, d + dev)
+    for tag, (tot, dev) in agg.items():
+        out.append((tag, dev / tot if tot else 1.0))
+    # grads: ZeRO>=2 re-shards them onto the optimizer layout of the
+    # trainable trees; below that they stay replicated
+    if zero_stage >= 2:
+        gt = gd = 0.0
+        for _, pspecs, shapes, _cfg in trainables:
+            o_specs = zero_opt_pspecs(pspecs, shapes, mesh, strat)
+            t, d = _tree_fraction(o_specs, shapes, mesh)
+            gt, gd = gt + t, gd + d
+        out.append(("grad", gd / gt if gt else 1.0))
+    else:
+        out.append(("grad", 1.0))
+    return tuple(out)
+
+
+def traced_strategy(base: MemoryStrategy, actor_cfg, critic_cfg=None, *,
+                    ndp: int, engine: str = "separate",
+                    lora_rank: Optional[int] = None) -> MemoryStrategy:
+    """``base`` with its ndp axis traced from the real sharded trees."""
+    return dataclasses.replace(
+        base, traced=traced_zero_scales(
+            actor_cfg, critic_cfg, ndp=ndp, zero_stage=base.zero_stage,
+            engine=engine,
+            lora_rank=base.lora_rank if lora_rank is None else lora_rank))

@@ -26,9 +26,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.models import Model
-from repro.sharding import (ShardingStrategy, batch_pspecs, cache_pspecs,
-                            opt_shardings, param_pspecs, to_named,
-                            zero_opt_pspecs)
+from repro.sharding import (ShardedContext, ShardingStrategy, batch_pspecs,
+                            cache_pspecs, opt_shardings, to_named)
 from repro.steps import (cache_specs, decode_window, input_specs,
                          make_decode_step, make_prefill_step, make_train_step,
                          sds)
@@ -86,11 +85,15 @@ def build_lowerable(arch: str, shape_name: str, mesh,
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     strat = strat or ShardingStrategy()
+    # the same context the RLHF trainer threads: param/opt specs come from
+    # its TreePlans, so the launch path and the runtime engines cannot
+    # disagree about what a ZeRO stage means
+    sctx = ShardedContext(mesh, strat)
     model = Model(cfg)
     window = decode_window(cfg, shape)
 
     params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
-    pspecs = param_pspecs(cfg, mesh, strat, params_shape)
+    pspecs = sctx.plan_params(cfg, params_shape).param_specs
     bspecs = batch_pspecs(cfg, shape, mesh)
     batch = input_specs(cfg, shape)
 
@@ -101,9 +104,8 @@ def build_lowerable(arch: str, shape_name: str, mesh,
         # mechanism stays available in sharding.ctx for TPU/Shardy runs.)
         step = make_train_step(model, cfg, kind="ppo")
         opt = step.optimizer
+        opt_specs = sctx.plan_params(cfg, params_shape, opt).opt_specs
         opt_shape = jax.eval_shape(opt.init, params_shape)
-        opt_specs = opt.init_specs(
-            zero_opt_pspecs(pspecs, params_shape, mesh, strat), params_shape)
         state_shape = {"params": params_shape, "opt": opt_shape,
                        "step": sds((), jnp.int32)}
         state_specs = {"params": pspecs, "opt": opt_specs, "step": P()}

@@ -30,6 +30,21 @@ def make_host_mesh() -> jax.sharding.Mesh:
     return make_mesh((1, 1), ("data", "model"))
 
 
+def make_zero_mesh(ndp: int = 1, *, model: int = 1,
+                   devices=None) -> jax.sharding.Mesh:
+    """``(data=ndp, model=...)`` mesh over the first ``ndp * model`` local
+    devices — the DP/ZeRO domain of the sharded RLHF engines. Unlike
+    :func:`make_mesh` this takes an explicit device subset, so one forced
+    multi-device CPU process can host the ``ndp=1`` baseline and the
+    ``ndp=8`` sharded run side by side (the CI validation topology)."""
+    import numpy as np
+    devices = list(devices if devices is not None else jax.devices())
+    n = ndp * model
+    assert len(devices) >= n, (len(devices), n)
+    arr = np.array(devices[:n]).reshape(ndp, model)
+    return jax.sharding.Mesh(arr, ("data", "model"))
+
+
 # TPU v5e hardware constants for the roofline (per chip).
 PEAK_FLOPS_BF16 = 197e12      # FLOP/s
 HBM_BW = 819e9                # B/s

@@ -66,6 +66,10 @@ class _Entry:
     # pending device->host transfer: device sources to delete once the
     # host copy is known materialized (async park)
     pending_sources: Optional[List[Any]] = None
+    # per-leaf device shardings captured at park time (numpy fallback):
+    # fetches restore them, so a parked ZeRO shard comes back as the same
+    # 1/ndp per-device slice — offload and zero_stage compose
+    shardings: Optional[List[Any]] = None
 
 
 class HostParkingLot:
@@ -96,11 +100,22 @@ class HostParkingLot:
                 leaf, leaf.sharding.with_memory_kind(self.host_kind))
         return np.asarray(leaf)     # committed copy; blocks
 
-    def _to_device(self, leaf):
+    def _to_device(self, leaf, sharding=None):
         if self.host_kind is not None and _is_device_array(leaf):
             return jax.device_put(
                 leaf, leaf.sharding.with_memory_kind(self.device_kind))
+        if sharding is not None:
+            return jax.device_put(leaf, sharding)
         return jax.device_put(leaf)
+
+    @staticmethod
+    def _sharding_of(leaf):
+        """Multi-device sharding to restore on fetch (single-device /
+        non-array leaves need none — the default placement is right)."""
+        sh = getattr(leaf, "sharding", None)
+        if sh is not None and len(getattr(sh, "device_set", ())) > 1:
+            return sh
+        return None
 
     # ---------------------------------------------------------------- public
     def __contains__(self, name: str) -> bool:
@@ -119,10 +134,13 @@ class HostParkingLot:
         assert name not in self._entries, f"{name!r} already parked"
         leaves, treedef = jax.tree_util.tree_flatten(tree)
         host = [self._to_host(l) for l in leaves]
+        shardings = [self._sharding_of(l) for l in leaves] \
+            if self.host_kind is None else None
         sources = [l for l in leaves if _is_device_array(l)]
         nbytes = tree_nbytes(tree)
         entry = _Entry(host, treedef, nbytes,
-                       pending_sources=None if block else sources)
+                       pending_sources=None if block else sources,
+                       shardings=shardings)
         if block:
             self._complete_park(entry, sources)
         self._entries[name] = entry
@@ -173,8 +191,9 @@ class HostParkingLot:
         entry = self._entries[name]
         if entry.pending_sources is not None:
             self._complete_park(entry, entry.pending_sources)
-        self._prefetched[name] = [self._to_device(l)
-                                  for l in entry.host_leaves]
+        shs = entry.shardings or [None] * len(entry.host_leaves)
+        self._prefetched[name] = [self._to_device(l, s)
+                                  for l, s in zip(entry.host_leaves, shs)]
         self.events.append(("prefetch", name))
 
     def fetch(self, name: str):
@@ -189,7 +208,9 @@ class HostParkingLot:
             self.stats.n_prefetch_hits += 1
             self.events.append(("fetch_hit", name))
         else:
-            leaves = [self._to_device(l) for l in entry.host_leaves]
+            shs = entry.shardings or [None] * len(entry.host_leaves)
+            leaves = [self._to_device(l, s)
+                      for l, s in zip(entry.host_leaves, shs)]
             self.events.append(("fetch", name))
         st = self.stats
         st.n_fetch += 1

@@ -53,7 +53,7 @@ class ModelEngine:
     VALUE_ROLES = frozenset({"critic", "reward"})
 
     def __init__(self, cfg: ModelConfig, key, *, rank: int = 128,
-                 roles=("actor", "critic", "reward")):
+                 roles=("actor", "critic", "reward"), shard=None):
         assert cfg.input_mode == "tokens", \
             f"hydra engine needs token-input models, got {cfg.input_mode}"
         assert all(k == ATTN for k in cfg.layer_kinds()), \
@@ -75,6 +75,22 @@ class ModelEngine:
             self.adapters[role] = self.model.init_adapter(
                 kr, self.base_params, rank,
                 with_value=role in self.VALUE_ROLES)
+        # ZeRO placement (sharding.ShardedContext): the frozen trunk shards
+        # over the DP/FSDP domain per zero_stage; per-role adapters are
+        # replicated-or-sharded by rule (rules.adapter_pspecs). Init values
+        # are unchanged — only the committed layout moves.
+        self.shard = shard
+        self.base_plan = None
+        self.adapter_plans: Dict[str, Any] = {}
+        if shard is not None:
+            from repro.optim import make_optimizer
+            opt = make_optimizer(cfg.optimizer)
+            self.base_plan = shard.plan_params(cfg, self.base_params)
+            self.base_params = self.base_plan.place_params(self.base_params)
+            for role, ad in self.adapters.items():
+                plan = shard.plan_adapter(ad, opt)
+                self.adapter_plans[role] = plan
+                self.adapters[role] = plan.place_params(ad)
 
     # ------------------------------------------------------ role forwards
     # The trunk is an explicit argument (not read off ``self``) so jitted

@@ -49,6 +49,15 @@ from repro.steps import (init_lora_train_state, init_train_state,
 MEMORY_POLICIES = ("none", "after_inference", "after_training", "after_all")
 
 
+def _jit_step(step):
+    """Jit a train step unless the builder already jitted it internally
+    (ZeRO steps are two programs with an eager grad re-shard between —
+    see ``steps.make_train_step(shard=...)``)."""
+    if getattr(step, "prejitted", False):
+        return step
+    return jax.jit(step, donate_argnums=(0,))
+
+
 def live_device_bytes() -> int:
     """Live *device* bytes: arrays parked in the host memory kind by the
     offload subsystem don't count (numpy fallback copies never did)."""
@@ -61,6 +70,26 @@ def live_device_bytes() -> int:
             continue
         total += getattr(a, "nbytes", 0)
     return total
+
+
+def per_device_live_bytes() -> int:
+    """Max-over-devices live bytes — the per-device HBM figure ZeRO cuts.
+    Replicated arrays cost full size on every device; ZeRO-3-sharded trees
+    cost 1/ndp. Equal to :func:`live_device_bytes` on one device."""
+    from repro.kernels import compat
+    host_kind = compat.host_memory_kind()
+    per: Dict[Any, int] = {}
+    for a in jax.live_arrays():
+        if host_kind is not None and \
+                getattr(a.sharding, "memory_kind", None) == host_kind:
+            continue
+        shards = getattr(a, "addressable_shards", None)
+        if not shards:
+            per[None] = per.get(None, 0) + getattr(a, "nbytes", 0)
+        else:
+            for s in shards:
+                per[s.device] = per.get(s.device, 0) + s.data.nbytes
+    return max(per.values()) if per else 0
 
 
 @dataclass
@@ -85,8 +114,11 @@ class PhaseMemoryManager:
                 f"expected one of {MEMORY_POLICIES}")
 
     def _record(self, phase: str, kind: str, **extra):
+        live = live_device_bytes()
         rec = {"phase": phase, "kind": kind,
-               "live_bytes": live_device_bytes(),
+               "live_bytes": live,
+               "live_bytes_per_device": (per_device_live_bytes()
+                                         if jax.device_count() > 1 else live),
                "host_bytes": (self.offload.lot.parked_bytes()
                               if self.offload is not None else 0),
                "t": time.time()}
@@ -147,14 +179,28 @@ class RLHFTrainer:
     With ``rl.engine == "hydra"`` the four roles share one frozen trunk
     (``critic_cfg`` is ignored — the critic/reward heads ride the actor
     trunk) and only adapter leaves train.
+
+    ``shard`` (a ``sharding.ShardedContext``) makes the whole pipeline
+    mesh-aware: params, grads, and optimizer state partition over the DP
+    axis per ``shard.strat.zero_stage`` on *both* engines — the hydra path
+    shards the frozen trunk with ZeRO-3 and the per-role adapters by rule,
+    the separate path shards all four role trees. Rollout and merged-weight
+    generation run under the same mesh from a gathered compute copy, and
+    ``offload`` composes: the parking lot round-trips sharded leaves
+    sharding-intact, so ``offload != "none"`` still parks exactly the
+    per-device ZeRO shards. Every stage reproduces the unsharded losses
+    bit-for-bit (the gather-compute/slice-update contract of
+    ``steps.make_train_step`` — DESIGN.md §3).
     """
 
     def __init__(self, actor_cfg: ModelConfig, critic_cfg: ModelConfig,
-                 rl: RLHFConfig, key, reward_fn: Optional[Callable] = None):
+                 rl: RLHFConfig, key, reward_fn: Optional[Callable] = None,
+                 shard=None):
         assert rl.engine in ("separate", "hydra"), rl.engine
         self.rl = rl
         self.actor_cfg, self.critic_cfg = actor_cfg, critic_cfg
         self.reward_fn = reward_fn
+        self.shard = shard
         self.memory = PhaseMemoryManager(policy=rl.memory_policy)
         if rl.engine == "hydra":
             self._init_hydra(actor_cfg, rl, key)
@@ -166,6 +212,27 @@ class RLHFTrainer:
         self.offload = self.offload_lot = None
         if rl.offload != "none":
             self._init_offload(rl)
+
+    # ------------------------------------------------------------- sharding
+    def per_device_state_bytes(self) -> int:
+        """Max-over-devices bytes of the persistent role state (params +
+        optimizer moments) — the figure the ZeRO stages cut. Replicated
+        trees cost full size per device; ZeRO-3 trees cost 1/ndp."""
+        from repro.sharding import tree_per_device_bytes
+        return tree_per_device_bytes(list(self._persistent_trees().values()))
+
+    def _persistent_trees(self) -> Dict[str, Any]:
+        out = {"actor_params": self.actor_state["params"],
+               "actor_opt": self.actor_state["opt"],
+               "critic_params": self.critic_state["params"],
+               "critic_opt": self.critic_state["opt"]}
+        if self.rl.engine == "hydra":
+            out["base_params"] = self.base_params
+            out["reward_params"] = self.reward_adapter
+        else:
+            out["ref_params"] = self.ref_params
+            out["reward_params"] = self.reward_params
+        return out
 
     # --------------------------------------------------------------- offload
     def _init_offload(self, rl: RLHFConfig):
@@ -258,14 +325,33 @@ class RLHFTrainer:
         self.ref = Model(actor_cfg)
         ks = jax.random.split(key, 2)
 
+        # ZeRO plans (one per role tree) when a ShardedContext is threaded
+        self.actor_plan = self.critic_plan = None
+        if self.shard is not None:
+            from repro.optim import make_optimizer
+            a_shapes = jax.eval_shape(self.actor.init, ks[0])
+            c_shapes = jax.eval_shape(self.critic.init, ks[1])
+            self.actor_plan = self.shard.plan_params(
+                actor_cfg, a_shapes, make_optimizer(actor_cfg.optimizer))
+            self.critic_plan = self.shard.plan_params(
+                critic_cfg, c_shapes, make_optimizer(critic_cfg.optimizer))
+
         self.actor_step = make_train_step(self.actor, actor_cfg, kind="ppo",
-                                          lr=rl.lr, kl_coef=rl.kl_coef)
+                                          lr=rl.lr, kl_coef=rl.kl_coef,
+                                          shard=self.actor_plan)
         self.critic_step = make_train_step(self.critic, critic_cfg,
-                                           kind="critic", lr=rl.critic_lr)
+                                           kind="critic", lr=rl.critic_lr,
+                                           shard=self.critic_plan)
         self.actor_state = init_train_state(self.actor, actor_cfg, ks[0],
                                             self.actor_step.optimizer)
         self.critic_state = init_train_state(self.critic, critic_cfg, ks[1],
                                              self.critic_step.optimizer)
+        if self.actor_plan is not None:
+            # commit the ZeRO placement (params + opt sharded over DP per
+            # stage) — init values are unchanged, only their layout
+            self.actor_state = self.actor_plan.place_state(self.actor_state)
+            self.critic_state = self.critic_plan.place_state(
+                self.critic_state)
         # reference = frozen copy of the (SFT) actor init; reward = frozen
         # copy of the critic init (same value-head structure — the reward
         # model is "a critic that stopped learning at preference time")
@@ -273,19 +359,32 @@ class RLHFTrainer:
         self.reward_params = jax.tree.map(jnp.copy,
                                           self.critic_state["params"])
 
-        self._jit_actor_step = jax.jit(self.actor_step, donate_argnums=(0,))
-        self._jit_critic_step = jax.jit(self.critic_step, donate_argnums=(0,))
-        self._jit_logp = jax.jit(self._token_logp)
+        ga = lambda p: p if self.actor_plan is None \
+            else self.actor_plan.gather(p)
+        gc_ = lambda p: p if self.critic_plan is None \
+            else self.critic_plan.gather(p)
+        self._jit_actor_step = _jit_step(self.actor_step)
+        self._jit_critic_step = _jit_step(self.critic_step)
+        self._jit_logp = jax.jit(
+            lambda p, b: self._token_logp(ga(p), b))
         self._jit_values = jax.jit(
-            lambda p, b: self.critic.forward_value(p, b))
+            lambda p, b: self.critic.forward_value(gc_(p), b))
         self._jit_reward = jax.jit(
-            lambda p, b: self.reward_model.forward_value(p, b))
+            lambda p, b: self.reward_model.forward_value(gc_(p), b))
 
         # engine-bound callables: make_experience / train_step are the same
         # straight-line code for both engines over these seven.
-        self._gen = lambda prompts, key: self.rollout.generate(
-            self.actor_state["params"], {"tokens": prompts},
-            self.rl.gen_len, key)
+        # Rollout generates from a gathered compute copy of the ZeRO-3
+        # actor shards (below stage 3 this is the same buffers); the copy
+        # dies at the rollout phase boundary.
+        def _gen(prompts, key):
+            p = self.actor_state["params"]
+            if self.actor_plan is not None:
+                p = self.actor_plan.gather_copy(p)
+            return self.rollout.generate(p, {"tokens": prompts},
+                                         self.rl.gen_len, key)
+
+        self._gen = _gen
         self._old_logp = lambda b: self._jit_logp(
             self.actor_state["params"], b)
         self._ref_logp = lambda b: self._jit_logp(self.ref_params, b)
@@ -307,42 +406,72 @@ class RLHFTrainer:
 
     # ----------------------------------------------------------------- hydra
     def _init_hydra(self, cfg: ModelConfig, rl: RLHFConfig, key):
-        self.engine = ModelEngine(cfg, key, rank=rl.lora_rank)
+        self.engine = ModelEngine(cfg, key, rank=rl.lora_rank,
+                                  shard=self.shard)
         self.actor = self.engine.model          # shared headless trunk
         self.critic = self.reward_model = self.ref = self.actor
         self.base_params = self.engine.base_params
+        base_plan = self.engine.base_plan
+        a_plan = self.engine.adapter_plans.get("actor")
+        c_plan = self.engine.adapter_plans.get("critic")
 
         self.actor_step = make_lora_train_step(self.actor, cfg, kind="ppo",
-                                               lr=rl.lr, kl_coef=rl.kl_coef)
+                                               lr=rl.lr, kl_coef=rl.kl_coef,
+                                               shard=a_plan,
+                                               base_shard=base_plan)
         self.critic_step = make_lora_train_step(self.actor, cfg,
                                                 kind="critic",
-                                                lr=rl.critic_lr)
+                                                lr=rl.critic_lr,
+                                                shard=c_plan,
+                                                base_shard=base_plan)
         self.actor_state = init_lora_train_state(
             self.engine.adapters["actor"], self.actor_step.optimizer)
         self.critic_state = init_lora_train_state(
             self.engine.adapters["critic"], self.critic_step.optimizer)
+        if a_plan is not None:
+            self.actor_state = a_plan.place_state(self.actor_state)
+            self.critic_state = c_plan.place_state(self.critic_state)
+            self.engine.adapters["actor"] = self.actor_state["params"]
+            self.engine.adapters["critic"] = self.critic_state["params"]
         # frozen roles: reference IS the base (no copy at all); reward is
         # the frozen reward adapter over the same base (seeded from the
         # critic adapter init inside ModelEngine)
         self.ref_params = self.base_params
         self.reward_adapter = self.engine.adapters["reward"]
 
-        self._jit_actor_step = jax.jit(self.actor_step, donate_argnums=(0,))
-        self._jit_critic_step = jax.jit(self.critic_step, donate_argnums=(0,))
-        self._jit_logp = jax.jit(self._token_logp_adapter)
-        self._jit_ref_logp = jax.jit(self._token_logp_ref)
-        self._jit_values = jax.jit(self.engine.values)
-        self._jit_reward = self._jit_values
+        gb = lambda p: p if base_plan is None else base_plan.gather(p)
+        gad = lambda plan: (lambda ad: ad if plan is None
+                            else plan.gather(ad))
+        ga, gc_ = gad(a_plan), gad(c_plan)
+        rw_plan = self.engine.adapter_plans.get("reward")
+        grw = gad(rw_plan)
+        self._jit_actor_step = _jit_step(self.actor_step)
+        self._jit_critic_step = _jit_step(self.critic_step)
+        self._jit_logp = jax.jit(
+            lambda p, ad, b: self._token_logp_adapter(gb(p), ga(ad), b))
+        self._jit_ref_logp = jax.jit(
+            lambda p, b: self._token_logp_ref(gb(p), b))
+        self._jit_values = jax.jit(
+            lambda p, ad, b: self.engine.values(gb(p), gc_(ad), b))
+        self._jit_reward = jax.jit(
+            lambda p, ad, b: self.engine.values(gb(p), grw(ad), b))
 
         # engine-bound callables (hydra flavor: the frozen trunk threads
         # through every call; rollout merges A·B into it once per phase).
         # The merge happens here rather than inside Rollout.generate so the
         # offload scheduler can park the trunk's now-redundant adapted
-        # leaves for the duration of generation (offload="all").
+        # leaves for the duration of generation (offload="all"). Under a
+        # mesh, the merge runs on gathered compute copies of the ZeRO-3
+        # trunk shards (and the actor adapter) — merged generation and the
+        # paged decode path both execute under the same mesh.
         def _gen(prompts, key):
             from repro.models.lora import delete_merged
             adapter = self.actor_state["params"]
-            merged = self.actor.merge_adapter(self.base_params, adapter)
+            base = self.base_params
+            if base_plan is not None:
+                base = base_plan.gather_copy(base)
+                adapter = a_plan.gather_copy(adapter)
+            merged = self.actor.merge_adapter(base, adapter)
             if self.offload is not None:
                 self.offload.rollout_merged()
             try:

@@ -1,7 +1,12 @@
-from repro.sharding.rules import (
-    ShardingStrategy, batch_pspecs, cache_pspecs, dp_axes, opt_shardings,
-    param_pspecs, to_named, zero_opt_pspecs,
-)
+from repro.sharding.context import (ShardedContext, TreePlan,
+                                    tree_per_device_bytes)
+from repro.sharding.rules import (ShardingStrategy, SpecMesh, adapter_pspecs,
+                                  batch_pspecs, cache_pspecs, dp_axes,
+                                  opt_shardings, param_pspecs,
+                                  spec_device_fraction, to_named,
+                                  zero_opt_pspecs)
 
-__all__ = ["ShardingStrategy", "batch_pspecs", "cache_pspecs", "dp_axes",
-           "opt_shardings", "param_pspecs", "to_named", "zero_opt_pspecs"]
+__all__ = ["ShardedContext", "ShardingStrategy", "SpecMesh", "TreePlan",
+           "adapter_pspecs", "batch_pspecs", "cache_pspecs", "dp_axes",
+           "opt_shardings", "param_pspecs", "spec_device_fraction",
+           "to_named", "tree_per_device_bytes", "zero_opt_pspecs"]

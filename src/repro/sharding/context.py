@@ -1,0 +1,222 @@
+"""ShardedContext: the mesh + rule set that makes ZeRO execution real for
+the RLHF engines (DESIGN.md §3).
+
+``sharding.rules`` builds PartitionSpecs; this module owns their *runtime*
+application for the RLHF trainer: a :class:`ShardedContext` wraps a mesh
+and a :class:`~repro.sharding.rules.ShardingStrategy` and hands out
+:class:`TreePlan` objects — one per parameter tree (full model trees and
+hydra LoRA adapters alike) — that know
+
+  * the **state specs** the tree is stored under between steps (ZeRO-3
+    shards params over the DP domain; 1/2 keep them replicated),
+  * the **optimizer-state specs** (sharded over DP from ZeRO-1 up, via
+    ``zero_opt_pspecs`` + the optimizer's ``init_specs``),
+  * the **compute specs** — the state specs with the DP entries stripped
+    (tensor-parallel entries survive): what a forward/backward gathers to.
+
+The execution contract (validated bit-level on forced multi-device CPU,
+see ``benchmarks/zero_smoke.py``): step functions gather parameters to the
+compute specs *before* any matmul, run the loss/gradient computation on
+the gathered (DP-replicated) values, clip on the replicated gradients, and
+only then re-shard gradients onto the optimizer layout — a slice, not a
+reduction, so every ZeRO stage reproduces the single-device arithmetic to
+the last ulp while persistent state lives at 1/ndp per device. The
+transient gathered tree is exactly the ``layer_slice`` all-gather cost the
+allocator simulator has always charged ZeRO-3 for.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.rules import (ShardingStrategy, adapter_pspecs,
+                                  param_pspecs, zero_opt_pspecs)
+
+_IS_SPEC = lambda x: isinstance(x, P)
+
+
+def _constrain(tree, spec_tree, mesh):
+    """with_sharding_constraint over a (tree, spec tree) pair — usable
+    inside jit; the constraint is its own transpose, so gradients of a
+    gathered tree re-shard automatically."""
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, s)),
+        tree, spec_tree, is_leaf=lambda x: _IS_SPEC(x))
+
+
+def _place(tree, spec_tree, mesh):
+    """Committed device placement (outside jit): ``jax.device_put`` each
+    leaf onto its NamedSharding. Re-placing an already-conforming leaf is
+    a no-op (same buffers), so this is safe to call idempotently."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        tree, spec_tree, is_leaf=lambda x: _IS_SPEC(x))
+
+
+def tree_per_device_bytes(tree) -> int:
+    """Max-over-devices resident bytes of ``tree`` — the number that OOMs.
+    Replicated leaves count full size (every device holds a copy); ZeRO-3
+    leaves count 1/ndp. Host-committed (numpy) leaves count zero."""
+    per: dict = {}
+    for leaf in jax.tree.leaves(tree):
+        shards = getattr(leaf, "addressable_shards", None)
+        if shards is None:
+            continue
+        for s in shards:
+            per[s.device] = per.get(s.device, 0) + s.data.nbytes
+    return max(per.values()) if per else 0
+
+
+@dataclass(frozen=True)
+class TreePlan:
+    """Sharding plan for one parameter tree (+ its optimizer state)."""
+    mesh: Mesh
+    strat: ShardingStrategy
+    param_specs: Any               # state placement (ZeRO-3: DP-sharded)
+    compute_specs: Any             # DP entries stripped (gather target)
+    opt_specs: Optional[Any] = None
+    # param-shaped layout of the optimizer shards (``zero_opt_pspecs``):
+    # the *uniform* sharding every update-program operand — gradients
+    # included — is eagerly placed on, so the elementwise optimizer math
+    # is partitioned identically for params, grads, and moments. Mixed
+    # layouts make XLA fuse (FMA) differently per operand and cost a ulp
+    # (DESIGN.md §3).
+    update_specs: Optional[Any] = None
+
+    # ----------------------------------------------------------- in-jit
+    def gather(self, params):
+        """Constrain ``params`` to the compute specs — the per-step
+        all-gather of ZeRO-3 (a no-op below stage 3)."""
+        return _constrain(params, self.compute_specs, self.mesh)
+
+    def place_grads(self, grads):
+        """Eager re-shard of DP-identical gradients onto the update layout
+        — a committed ``device_put`` slice between the grad and update
+        programs, so the layout change can never exert sharding pressure
+        on either graph (the bit-identity contract)."""
+        if self.update_specs is None:
+            return grads
+        return _place(grads, self.update_specs, self.mesh)
+
+    def place_update_params(self, params):
+        """Params on the update layout: at ZeRO-3 these are the state
+        buffers themselves; below, a transient 1/ndp slice copy so the
+        update program sees uniformly-sharded operands."""
+        if self.update_specs is None:
+            return params
+        return _place(params, self.update_specs, self.mesh)
+
+    def constrain_update(self, params):
+        """Pin param-shaped values to the uniform update layout (a
+        same-layout constraint — never a reshard, so codegen-neutral)."""
+        if self.update_specs is None:
+            return params
+        return _constrain(params, self.update_specs, self.mesh)
+
+    def constrain_opt(self, opt):
+        if self.opt_specs is None:
+            return opt
+        return _constrain(opt, self.opt_specs, self.mesh)
+
+    # ------------------------------------------------------ out-of-jit
+    def place_params(self, params):
+        return _place(params, self.param_specs, self.mesh)
+
+    def place_opt(self, opt):
+        if self.opt_specs is None:
+            return opt
+        return _place(opt, self.opt_specs, self.mesh)
+
+    def place_state(self, state):
+        """Place a ``{"params", "opt", "step"}`` train state."""
+        out = dict(state)
+        out["params"] = self.place_params(state["params"])
+        if "opt" in state:
+            out["opt"] = self.place_opt(state["opt"])
+        return out
+
+    def gather_copy(self, params):
+        """Materialize a DP-gathered copy of ``params`` (committed
+        ``device_put`` onto the compute shardings) for rollout / merged
+        generation. Below ZeRO-3 the specs already match, so this returns
+        the same buffers (no copy — do not ``delete`` the result)."""
+        return _place(params, self.compute_specs, self.mesh)
+
+    # (per-device byte *accounting* lives in core.strategies —
+    # ``traced_zero_scales`` / ``_tree_fraction`` — so the simulator and
+    # the runtime read one implementation)
+
+
+class ShardedContext:
+    """Mesh + ZeRO strategy, threaded through trainer / engine / steps."""
+
+    def __init__(self, mesh: Mesh, strat: Optional[ShardingStrategy] = None):
+        self.mesh = mesh
+        self.strat = strat or ShardingStrategy()
+
+    @classmethod
+    def create(cls, ndp: int = 1, *, zero_stage: int = 3, model: int = 1,
+               devices=None) -> "ShardedContext":
+        """Build a ``(data=ndp, model=...)`` mesh from the first
+        ``ndp * model`` local devices (so an 8-device process can host both
+        the ndp=1 baseline and the ndp=8 sharded run)."""
+        from repro.launch.mesh import make_zero_mesh
+        mesh = make_zero_mesh(ndp, model=model, devices=devices)
+        return cls(mesh, ShardingStrategy(zero_stage=zero_stage,
+                                          tensor_parallel=model > 1))
+
+    @property
+    def ndp(self) -> int:
+        from repro.sharding.rules import _axsize, dp_axes
+        return _axsize(self.mesh, dp_axes(self.mesh))
+
+    @property
+    def zero_stage(self) -> int:
+        return self.strat.zero_stage
+
+    # ------------------------------------------------------------- plans
+    def _plan(self, pspecs, shapes, optimizer) -> TreePlan:
+        strat = self.strat
+        opt_specs = update_specs = None
+        if optimizer is not None:
+            base = zero_opt_pspecs(pspecs, shapes, self.mesh, strat)
+            opt_specs = optimizer.init_specs(base, shapes)
+            update_specs = base
+        compute = jax.tree.map(
+            lambda s: _strip_dp(s, self.mesh), pspecs,
+            is_leaf=_IS_SPEC) if strat.zero_stage >= 3 else pspecs
+        return TreePlan(self.mesh, strat, pspecs, compute,
+                        opt_specs, update_specs)
+
+    def plan_params(self, cfg, params_shape, optimizer=None) -> TreePlan:
+        """Plan for a full model tree (``rules.param_pspecs``)."""
+        pspecs = param_pspecs(cfg, self.mesh, self.strat, params_shape)
+        return self._plan(pspecs, params_shape, optimizer)
+
+    def plan_adapter(self, adapter_shape, optimizer=None) -> TreePlan:
+        """Plan for a hydra LoRA adapter tree (``rules.adapter_pspecs``)."""
+        pspecs = adapter_pspecs(self.mesh, self.strat, adapter_shape)
+        return self._plan(pspecs, adapter_shape, optimizer)
+
+
+def _strip_dp(spec: P, mesh) -> P:
+    """Remove DP/FSDP axes from a spec, keeping tensor-parallel entries —
+    the compute layout a ZeRO-3 gather targets."""
+    from repro.sharding.rules import dp_axes
+    dp = set(dp_axes(mesh))
+
+    def keep(entry):
+        if entry is None:
+            return None
+        es = entry if isinstance(entry, tuple) else (entry,)
+        kept = tuple(e for e in es if e not in dp)
+        if not kept:
+            return None
+        return kept if len(kept) > 1 else kept[0]
+
+    return P(*(keep(e) for e in spec))

@@ -44,10 +44,25 @@ def _axsize(mesh: Mesh, axes) -> int:
     return n
 
 
+class SpecMesh:
+    """Devices-free stand-in for spec construction and byte accounting.
+
+    The rules in this module only read ``mesh.shape`` (a name -> size
+    mapping) and ``mesh.axis_names`` — so PartitionSpecs (and the
+    per-device byte fractions ``core.strategies`` traces from them) can be
+    built without any jax device state, e.g. for an 8-way DP domain on a
+    1-device test process. Real ``jax.sharding.Mesh`` objects satisfy the
+    same protocol."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(self.shape)
+
+
 @dataclass(frozen=True)
 class ShardingStrategy:
     """The paper's §2.2 memory-management strategy knobs, pjit edition."""
-    zero_stage: int = 3          # 1 | 2 | 3
+    zero_stage: int = 3          # 0 | 1 | 2 | 3  (0 = fully replicated DP)
     tensor_parallel: bool = True
     expert_parallel: bool = True
     # host-offloaded optimizer state: realized as real device placement by
@@ -160,7 +175,7 @@ def zero_opt_pspecs(param_specs, params_shape, mesh: Mesh,
     n = _axsize(mesh, dp)
 
     def respec(spec: P, leaf) -> P:
-        if strat.zero_stage >= 3 or n == 1:
+        if strat.zero_stage >= 3 or strat.zero_stage < 1 or n == 1:
             return spec
         entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
         best, best_dim = None, 0
@@ -173,6 +188,56 @@ def zero_opt_pspecs(param_specs, params_shape, mesh: Mesh,
 
     return jax.tree.map(respec, param_specs, params_shape,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+def adapter_pspecs(mesh: Mesh, strat: ShardingStrategy, adapter_shape) -> dict:
+    """PartitionSpec pytree for a hydra LoRA adapter tree (see
+    ``models.lora.init_adapter``: {"lora": {... {"a", "b"} sites}, optional
+    "value_head"}). The RLHF sharding contract (DESIGN.md §2):
+
+      * ``a`` factors ``[*lead, d_in, r]`` shard ``d_in`` over the DP/FSDP
+        domain at ZeRO-3 (the rank dim is tiny and stays whole);
+      * ``b`` factors ``[*lead, r, d_out]`` shard ``d_out`` likewise;
+      * value heads / biases are replicated (scalar-output leaves);
+      * below ZeRO-3 the whole adapter is replicated — the per-role trees
+        are paper-small, so only the FSDP stage bothers cutting them.
+
+    Divisibility falls back to replication per-leaf, same as
+    :func:`param_pspecs`."""
+    dp = dp_axes(mesh)
+    fsdp = dp if strat.zero_stage >= 3 else None
+
+    def fs(dim: int):
+        return fsdp if (fsdp and dim % _axsize(mesh, fsdp) == 0) else None
+
+    def spec_for(path: Tuple[str, ...], leaf) -> P:
+        shape = leaf.shape
+        name = path[-1]
+        if "value_head" in path or len(shape) < 2:
+            return P(*([None] * len(shape)))
+        lead = (None,) * (len(shape) - 2)
+        if name == "a":
+            return P(*lead, fs(shape[-2]), None)
+        if name == "b":
+            return P(*lead, None, fs(shape[-1]))
+        return P(*([None] * len(shape)))
+
+    flat = jax.tree_util.tree_flatten_with_path(adapter_shape)[0]
+    paths = [tuple(str(getattr(k, "key", k)) for k in kp) for kp, _ in flat]
+    leaves = [spec_for(p, l) for p, (_, l) in zip(paths, flat)]
+    treedef = jax.tree_util.tree_structure(adapter_shape)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def spec_device_fraction(spec: P, leaf, mesh: Mesh) -> float:
+    """Per-device fraction of ``leaf``'s bytes under ``spec``: 1/(product of
+    the mesh axes the spec actually uses). The traced alternative to the
+    closed-form ``1/ndp`` of ``MemoryStrategy.scale``."""
+    n = 1
+    for entry in spec:
+        if entry is not None:
+            n *= _axsize(mesh, entry)
+    return 1.0 / n
 
 
 # ---------------------------------------------------------------------------

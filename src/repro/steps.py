@@ -139,10 +139,64 @@ def _accumulated_grads(loss_fn, params, batch, N: int, acc_dtype):
             jax.tree.map(lambda g: g / N, grads))
 
 
+def _make_sharded_update(optimizer, shard, lr):
+    """Update half of a ZeRO step: a jit whose operands (moments, grads,
+    params) all arrive eagerly pre-placed on the SAME param-shaped update
+    layout (``TreePlan.update_specs``) — uniform sharding keeps XLA's
+    elementwise fusion identical to the unsharded program, which mixed
+    layouts do not (per-operand reshards change FMA contraction by a ulp).
+    The program's outputs STAY on the update layout (an in-graph gather
+    back to replicated fuses into the elementwise math and perturbs it);
+    ``_run_sharded_update`` re-places new params onto the persistent ZeRO
+    layout eagerly afterwards — an exact-element all-gather below stage 3,
+    a no-op at stage 3."""
+
+    def apply_update(opt, step, grads, p_u):
+        new_params, new_opt = optimizer.update(grads, opt, p_u, lr)
+        new_params = shard.constrain_update(new_params)
+        new_opt = shard.constrain_opt(new_opt)
+        return new_params, new_opt, step + 1
+
+    # donate: moments (rewritten), grads (consumed), and the update-layout
+    # params (at ZeRO-3 the state buffers themselves — true in-place
+    # update; below, the transient 1/ndp slice copy)
+    return jax.jit(apply_update, donate_argnums=(0, 2, 3))
+
+
+def _run_sharded_update(jit_update, shard, state, grads):
+    grads = shard.place_grads(grads)
+    p_u = shard.place_update_params(state["params"])
+    new_params, new_opt, step = jit_update(state["opt"], state["step"],
+                                           grads, p_u)
+    return {"params": shard.place_params(new_params), "opt": new_opt,
+            "step": step}
+
+
 def make_train_step(model: Model, cfg: ModelConfig, *, lr: float = 3e-5,
                     kind: str = "ppo", kl_coef: float = 0.1,
-                    max_grad_norm: float = 1.0):
-    """kind: ppo | critic | lm."""
+                    max_grad_norm: float = 1.0, shard=None):
+    """kind: ppo | critic | lm.
+
+    ``shard`` (a ``sharding.TreePlan``) makes the step ZeRO-aware, split
+    into two programs so the ZeRO layout can never perturb the arithmetic
+    (DESIGN.md §3):
+
+      1. a *grad* jit — params gathered to the DP-stripped compute specs
+         at entry (the per-step all-gather of ZeRO-3; its transpose pins
+         the parameter cotangent replicated, so no sharding pressure
+         reaches the forward/backward matmuls), loss + clipped grads
+         computed exactly as on one device;
+      2. an eager ``device_put`` of the DP-identical grads (and, below
+         stage 3, a transient slice of the params) onto the uniform
+         update layout — bit-exact by construction;
+      3. an *update* jit — elementwise optimizer math over uniformly
+         sharded operands, outputs staying on that layout; new params are
+         re-placed onto the persistent ZeRO shardings eagerly afterwards.
+
+    Every stage therefore reproduces the unsharded step bit-for-bit while
+    persistent params/opt live at ~1/ndp per device. (Bit-identity holds
+    for elementwise optimizers — adamw; adafactor's factored moments
+    reduce across elements and are only close, not equal, under ZeRO.)"""
     optimizer = make_optimizer(cfg.optimizer)
     prefix = _prefix_len(cfg)
 
@@ -171,17 +225,34 @@ def make_train_step(model: Model, cfg: ModelConfig, *, lr: float = 3e-5,
     # grad-accumulation dtype: bf16 for the memory-lean >=100B configs
     acc_dtype = jnp.float32 if cfg.optimizer == "adamw" else jnp.bfloat16
 
-    def train_step(state, batch):
+    def grads_and_metrics(state, batch):
+        params = state["params"] if shard is None \
+            else shard.gather(state["params"])
         (loss, metrics), grads = _accumulated_grads(
-            loss_fn, state["params"], batch, N, acc_dtype)
+            loss_fn, params, batch, N, acc_dtype)
         grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
-        new_params, new_opt = optimizer.update(grads, state["opt"],
-                                               state["params"], lr)
-        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
-        return {"params": new_params, "opt": new_opt,
-                "step": state["step"] + 1}, metrics
+        return grads, dict(metrics, loss=loss, grad_norm=gnorm)
+
+    if shard is None:
+        def train_step(state, batch):
+            grads, metrics = grads_and_metrics(state, batch)
+            new_params, new_opt = optimizer.update(grads, state["opt"],
+                                                   state["params"], lr)
+            return {"params": new_params, "opt": new_opt,
+                    "step": state["step"] + 1}, metrics
+
+        train_step.optimizer = optimizer
+        return train_step
+
+    jit_grads = jax.jit(grads_and_metrics)
+    jit_update = _make_sharded_update(optimizer, shard, lr)
+
+    def train_step(state, batch):
+        grads, metrics = jit_grads(state, batch)
+        return _run_sharded_update(jit_update, shard, state, grads), metrics
 
     train_step.optimizer = optimizer
+    train_step.prejitted = True     # callers must NOT wrap in jax.jit
     return train_step
 
 
@@ -193,7 +264,8 @@ def init_train_state(model: Model, cfg: ModelConfig, key, optimizer):
 
 def make_lora_train_step(model: Model, cfg: ModelConfig, *, lr: float = 3e-5,
                          kind: str = "ppo", kl_coef: float = 0.1,
-                         max_grad_norm: float = 1.0):
+                         max_grad_norm: float = 1.0, shard=None,
+                         base_shard=None):
     """LoRA-aware twin of :func:`make_train_step` for the hydra engine.
 
     The step signature is ``(state, base_params, batch)``: gradients and the
@@ -203,6 +275,12 @@ def make_lora_train_step(model: Model, cfg: ModelConfig, *, lr: float = 3e-5,
     accumulation and the MTP auxiliary loss match :func:`make_train_step`
     (the MTP head stays frozen in the trunk; its loss still trains the
     adapter through the hidden states). kind: ppo | critic | lm.
+
+    ``shard`` (the adapter's ``sharding.TreePlan``) and ``base_shard``
+    (the frozen trunk's) make the step ZeRO-aware with the same
+    gather-compute / slice-update contract as :func:`make_train_step`: the
+    ZeRO-3 trunk is gathered for the forward, adapter grads are clipped
+    replicated then sliced onto the adapter optimizer layout.
     """
     optimizer = make_optimizer(cfg.optimizer)
     prefix = _prefix_len(cfg)
@@ -231,18 +309,38 @@ def make_lora_train_step(model: Model, cfg: ModelConfig, *, lr: float = 3e-5,
     N = max(1, cfg.microbatches)
     acc_dtype = jnp.float32 if cfg.optimizer == "adamw" else jnp.bfloat16
 
-    def train_step(state, base_params, batch):
+    def grads_and_metrics(state, base_params, batch):
+        if base_shard is not None:
+            base_params = base_shard.gather(base_params)
+        adapter = state["params"] if shard is None \
+            else shard.gather(state["params"])
         (loss, metrics), grads = _accumulated_grads(
             lambda ad, mb: loss_fn(ad, base_params, mb),
-            state["params"], batch, N, acc_dtype)
+            adapter, batch, N, acc_dtype)
         grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
-        new_params, new_opt = optimizer.update(grads, state["opt"],
-                                               state["params"], lr)
-        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
-        return {"params": new_params, "opt": new_opt,
-                "step": state["step"] + 1}, metrics
+        return grads, dict(metrics, loss=loss, grad_norm=gnorm)
+
+    if shard is None and base_shard is None:
+        def train_step(state, base_params, batch):
+            grads, metrics = grads_and_metrics(state, base_params, batch)
+            new_params, new_opt = optimizer.update(grads, state["opt"],
+                                                   state["params"], lr)
+            return {"params": new_params, "opt": new_opt,
+                    "step": state["step"] + 1}, metrics
+
+        train_step.optimizer = optimizer
+        return train_step
+
+    assert shard is not None, "base_shard without an adapter plan"
+    jit_grads = jax.jit(grads_and_metrics)
+    jit_update = _make_sharded_update(optimizer, shard, lr)
+
+    def train_step(state, base_params, batch):
+        grads, metrics = jit_grads(state, base_params, batch)
+        return _run_sharded_update(jit_update, shard, state, grads), metrics
 
     train_step.optimizer = optimizer
+    train_step.prejitted = True     # callers must NOT wrap in jax.jit
     return train_step
 
 
