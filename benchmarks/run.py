@@ -617,12 +617,20 @@ def bench_zero():
     assert metrics["sim_bracket_ok"]
     assert metrics["separate_state_bytes_zero3"] <= \
         0.30 * metrics["separate_state_bytes_ndp1"]
+    # per-layer FSDP gathers: the compiled-program transient peak must
+    # drop from the whole stacked tree to ~one layer period, and the
+    # traced simulator term must bracket the measured delta
+    assert metrics["layer_transient_ok"]
+    assert metrics["transient_sim_bracket_ok"]
     _gate("separate_zero3_cut_pct", metrics["separate_zero3_cut_pct"],
           "higher")
     _gate("hydra_zero3_cut_pct", metrics["hydra_zero3_cut_pct"], "higher")
+    _gate("gather_transient_cut_pct", metrics["gather_transient_cut_pct"],
+          "higher")
     _csv("zero", (time.time() - t0) * 1e6,
          f"separate_cut_pct={metrics['separate_zero3_cut_pct']};"
-         f"hydra_cut_pct={metrics['hydra_zero3_cut_pct']}")
+         f"hydra_cut_pct={metrics['hydra_zero3_cut_pct']};"
+         f"gather_transient_cut_pct={metrics['gather_transient_cut_pct']}")
 
 
 def bench_zero_tpu():

@@ -10,8 +10,10 @@ Checks (each asserted, and emitted as one ``ZERO_METRICS`` JSON line for
 ``benchmarks/run.py --only zero`` to parse and gate):
 
   1. 2-step PPO losses are BIT-IDENTICAL between ``ndp=1`` and ``ndp=8``
-     ZeRO-3 on BOTH engines (the gather-compute / uniform-layout-update
-     contract of ``steps.make_train_step(shard=...)``);
+     ZeRO-3 on BOTH engines and BOTH gather modes (whole-``tree`` and
+     per-``layer`` FSDP gathers — the gather-compute /
+     uniform-layout-update contract of ``steps.make_train_step(shard=...)``
+     plus the in-scan constraint of DESIGN.md §3.7);
   2. greedy rollout tokens are identical too — including the paged decode
      path running under the same mesh;
   3. per-device live param+opt bytes at ``zero_stage=3`` are <= 30% of the
@@ -20,7 +22,14 @@ Checks (each asserted, and emitted as one ``ZERO_METRICS`` JSON line for
   4. the allocator simulator's per-phase ``ndp=8`` curve — run with the
      strategy's ndp axis TRACED from the real sharded spec trees
      (``core.strategies.traced_strategy``) — brackets the measured
-     per-device live-bytes curve of the separate-engine run.
+     per-device live-bytes curve of the separate-engine run;
+  5. the per-device TRANSIENT peak of the compiled grad program (XLA
+     ``memory_analysis().temp_size_in_bytes``): switching the ZeRO-3
+     gather from ``"tree"`` to ``"layer"`` must free at least the whole
+     stacked parameter tree minus ~2 layer periods — i.e. the gathered
+     weights resident at any instant drop from every layer to one — and
+     the traced simulator transient delta (``layer_slice`` charged at the
+     scan length vs at 1x) brackets the measured delta.
 """
 from __future__ import annotations
 
@@ -29,19 +38,24 @@ import gc
 import json
 
 GB = 1 << 30
+MiB = 1 << 20
 
 
 def main() -> dict:
     import jax
     import jax.numpy as jnp
+    import numpy as np
 
     from repro.configs import get_config
     from repro.core import (MemoryStrategy, build_rlhf_phases, run_iteration,
                             traced_strategy)
+    from repro.models import Model
+    from repro.optim import make_optimizer
     from repro.rlhf import RLHFConfig, RLHFTrainer, Rollout
     from repro.rlhf.reward import make_target_token_reward
     from repro.rlhf.trainer import per_device_live_bytes
     from repro.sharding import ShardedContext
+    from repro.steps import init_train_state, make_train_step
 
     assert jax.device_count() >= 8, \
         f"needs 8 forced host devices, got {jax.device_count()} — run under " \
@@ -84,27 +98,40 @@ def main() -> dict:
                        top_k=0).generate(p1, {"tokens": prompts},
                                          G, key).tokens
 
-        sc = ShardedContext.create(NDP, zero_stage=3)
-        gc.collect()
-        base_live8 = per_device_live_bytes()
-        tr8, m8, recs8 = build(engine, sc, base_live8)
+        # both ZeRO-3 gather granularities must reproduce ndp=1 exactly
+        # (the tree-mode trainer is dropped right after its check so two
+        # full ZeRO-3 trainers are never resident at once)
+        tr8 = m8 = recs8 = None
+        for mode in ("tree", "layer"):
+            del tr8, m8, recs8
+            sc = ShardedContext.create(NDP, zero_stage=3, gather_mode=mode)
+            gc.collect()
+            base_live8 = per_device_live_bytes()
+            tr8, m8, recs8 = build(engine, sc, base_live8)
+            biteq = True
+            for a, b in zip(m1, m8):
+                for k in ("loss", "ppo_loss", "vf_loss"):
+                    if k in a and a[k] != b.get(k):
+                        biteq = False
+            assert biteq, f"{engine}/{mode}: ndp=1 vs ndp={NDP} losses " \
+                "not bit-identical"
+            metrics[f"{engine}_biteq_{mode}"] = biteq
+        metrics[f"{engine}_biteq"] = True
 
-        biteq = True
-        for a, b in zip(m1, m8):
-            for k in ("loss", "ppo_loss", "vf_loss"):
-                if k in a and a[k] != b.get(k):
-                    biteq = False
-        assert biteq, f"{engine}: ndp=1 vs ndp={NDP} losses not bit-identical"
-        metrics[f"{engine}_biteq"] = biteq
-
-        # rollout identity under the mesh: dense AND paged decode
+        # rollout identity under the mesh: dense AND paged decode, from an
+        # OWNED gather copy (deleted below — the ownership-flag contract)
+        owned_trees = []
         if engine == "separate":
-            p8 = tr8.actor_plan.gather_copy(tr8.actor_state["params"])
+            p8, owned = tr8.actor_plan.gather_copy(tr8.actor_state["params"])
+            assert owned, "ZeRO-3 gather_copy must return an owned copy"
+            owned_trees.append(p8)
         else:
-            base8 = tr8.engine.base_plan.gather_copy(tr8.base_params)
-            ad8 = tr8.engine.adapter_plans["actor"].gather_copy(
+            base8, ob = tr8.engine.base_plan.gather_copy(tr8.base_params)
+            ad8, oa = tr8.engine.adapter_plans["actor"].gather_copy(
                 tr8.actor_state["params"])
+            assert ob and oa
             p8 = tr8.actor.merge_adapter(base8, ad8)
+            owned_trees += [base8, ad8, p8]
         for backend in ("dense", "paged"):
             ro8 = Rollout(tr8.actor, cfg, capacity=P + G, temperature=0.0,
                           top_k=0, backend=backend).generate(
@@ -115,10 +142,13 @@ def main() -> dict:
 
         b1 = tr1.per_device_state_bytes()
         b8 = tr8.per_device_state_bytes()
+        from repro.sharding import delete_tree
+        for t in owned_trees:      # owned copies die at the phase boundary
+            delete_tree(t)
         metrics[f"{engine}_state_bytes_ndp1"] = int(b1)
         metrics[f"{engine}_state_bytes_zero3"] = int(b8)
         metrics[f"{engine}_zero3_cut_pct"] = round(100 * (1 - b8 / b1), 1)
-        print(f"[{engine:9s}] biteq=True  per-device state "
+        print(f"[{engine:9s}] biteq=True (tree+layer)  per-device state "
               f"{b1/2**20:7.2f} -> {b8/2**20:7.2f} MiB "
               f"(-{100*(1-b8/b1):.0f}%)")
         if engine == "separate":
@@ -128,7 +158,7 @@ def main() -> dict:
                 f"ZeRO-3 per-device state must be <=30% of replicated, " \
                 f"got {100*b8/b1:.0f}%"
             sep_records = recs8
-        del tr1, tr8, m1, m8, p1, p8
+        del tr1, tr8, m1, m8, p1, p8, recs8
 
     # ---- simulator bracket: traced ndp=8 curve vs the measured one -------
     ph, persist = build_rlhf_phases(
@@ -155,6 +185,76 @@ def main() -> dict:
               f"{'ok' if ok else 'OUT'}")
         assert ok, (r["phase"], lo, r["live_pd"], hi)
     metrics["sim_bracket_ok"] = bracket_ok
+
+    # ---- per-layer gather transient: compiled-program temp peak ----------
+    # A deeper, remat-enabled config so the whole-tree gather dwarfs one
+    # layer period (layer mode needs remat to drop the gathered slice —
+    # without it the saved residuals hold the gathered weights anyway).
+    cfg_t = dataclasses.replace(cfg, num_layers=8, d_model=256, d_ff=512,
+                                num_heads=8, num_kv_heads=4, head_dim=32,
+                                remat="full")
+    model_t = Model(cfg_t)
+    shapes = jax.eval_shape(model_t.init, jax.random.PRNGKey(0))
+    stacked_bytes = int(sum(
+        int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+        for k in shapes if k.startswith("segment")
+        for l in jax.tree.leaves(shapes[k])))
+    n_slices = sum(seg.n_groups for seg in model_t.segments)
+    slice_bytes = stacked_bytes // n_slices
+    S = P + G
+    tb = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                                       cfg_t.vocab_size)}
+    for k in ("loss_mask", "advantages", "old_logp", "ref_logp", "returns"):
+        tb[k] = jnp.zeros((B, S), jnp.float32)
+
+    def grads_temp(zero_stage, mode):
+        sc = ShardedContext.create(NDP, zero_stage=zero_stage,
+                                   gather_mode=mode)
+        plan = sc.plan_params(cfg_t, shapes,
+                              make_optimizer(cfg_t.optimizer))
+        step = make_train_step(model_t, cfg_t, kind="ppo", shard=plan)
+        state = plan.place_state(init_train_state(
+            model_t, cfg_t, jax.random.PRNGKey(0), step.optimizer))
+        c = step.jit_grads.lower(state, tb).compile()
+        return int(c.memory_analysis().temp_size_in_bytes)
+
+    t_tree = grads_temp(3, "tree")
+    t_layer = grads_temp(3, "layer")
+    delta = t_tree - t_layer
+    print("\ntransient peak of the compiled grad program (per-device "
+          "temp bytes):")
+    print(f"  stacked tree {stacked_bytes/MiB:7.2f} MiB  one layer period "
+          f"{slice_bytes/MiB:7.2f} MiB  ({n_slices} scan slices)")
+    print(f"  tree  mode   {t_tree/MiB:7.2f} MiB")
+    print(f"  layer mode   {t_layer/MiB:7.2f} MiB "
+          f"(-{100*(1 - t_layer/max(t_tree, 1)):.0f}%, "
+          f"freed {delta/MiB:.2f} MiB)")
+    eps = 256 * 1024
+    # per-layer gathers must free at least the whole stacked tree minus
+    # ~2 layer periods: the gathered weights concurrently live drop from
+    # every layer to one (+ scheduling headroom)
+    layer_ok = delta >= stacked_bytes - 2 * slice_bytes - eps
+    assert layer_ok, (delta, stacked_bytes, slice_bytes)
+    # the traced simulator transient term brackets the measured delta:
+    # "tree" charges each layer_slice event at the scan length, "layer"
+    # at 1x (traced_zero_scales gather_mode axis). The measured delta may
+    # exceed the sim term by up to ~2x — layer mode also shards the
+    # remat-saved weight slices the tree program keeps replicated.
+    scale_of = lambda mode: traced_strategy(
+        MemoryStrategy("ZeRO-3", zero_stage=3, gather_mode=mode),
+        cfg_t, cfg_t, ndp=NDP).scale("layer_slice", ndp=NDP)
+    sim_delta = (scale_of("tree") - scale_of("layer")) * slice_bytes
+    sim_ok = 0.5 * sim_delta - eps <= delta <= 2.5 * sim_delta + eps
+    print(f"  sim transient delta {sim_delta/MiB:7.2f} MiB  measured "
+          f"{delta/MiB:7.2f} MiB  {'ok' if sim_ok else 'OUT'}")
+    assert sim_ok, (sim_delta, delta)
+    metrics.update(
+        layer_slice_bytes=slice_bytes, stacked_param_bytes=stacked_bytes,
+        grads_temp_tree=t_tree, grads_temp_layer=t_layer,
+        gather_transient_cut_pct=round(
+            100 * (1 - t_layer / max(t_tree, 1)), 1),
+        layer_transient_ok=bool(layer_ok),
+        transient_sim_bracket_ok=bool(sim_ok))
     print("ZERO_METRICS " + json.dumps(metrics))
     return metrics
 

@@ -16,7 +16,13 @@ through the allocator simulator:
 ZeRO-3 they are real transient buffers (the per-layer all-gather of the
 sharded weights — the varied-size churn the paper blames for fragmentation);
 without ZeRO-3 the layer weights are views into persistent storage, so the
-events vanish. Gradient checkpointing is not a multiplier — it swaps in the
+events vanish. The runtime gather granularity
+(``ShardingStrategy.gather_mode``) maps onto the same events: ``"layer"``
+charges each slice at 1x (one layer period live per scan iteration —
+the FSDP schedule the simulator has always assumed), ``"tree"`` charges it
+at the scan length (every gathered layer concurrently live = the whole
+replicated tree, what a whole-tree gather-before-scan realizes). The
+traced entries carry the factor (``traced_zero_scales(gather_mode=...)``). Gradient checkpointing is not a multiplier — it swaps in the
 remat="full" trace of the same model (the liveness change emerges from the
 jaxpr, see core.trace).
 
@@ -95,6 +101,12 @@ class MemoryStrategy:
     grad_ckpt: bool = False
     lora_rank: int = 128         # LoRA rank of the trainable-fraction axis
     offload: str = "none"        # runtime swap level (repro.offload)
+    # ZeRO-3 all-gather granularity of the runtime being modelled
+    # (rules.ShardingStrategy.gather_mode): "layer" = one layer period
+    # transient, "tree" = whole-tree transient. Realized through the
+    # traced "layer_slice" entry; the closed-form fallback stays at the
+    # per-layer schedule.
+    gather_mode: str = "layer"
     # traced per-device byte fractions from the *real* sharded spec trees
     # (built by :func:`traced_strategy` / :func:`traced_zero_scales`):
     # entries keyed "state:tag" (exact, per persistent group) with "tag"
@@ -126,7 +138,13 @@ class MemoryStrategy:
             base = 1.0 / ndp if z >= 2 else 1.0
             return base * trainable_fraction
         if tag == "layer_slice":
-            return 1.0 if z >= 3 else 0.0
+            if z < 3:
+                return 0.0
+            if self.traced:
+                v = _traced_lookup(self.traced).get("layer_slice")
+                if v is not None:
+                    return v
+            return 1.0
         if tag in ("input", "temp", "cache"):
             return 1.0
         return 1.0
@@ -192,7 +210,9 @@ def _tree_fraction(spec_tree, shape_tree, mesh) -> Tuple[float, float]:
 @lru_cache(maxsize=64)
 def traced_zero_scales(actor_cfg, critic_cfg=None, *, ndp: int,
                        zero_stage: int, engine: str = "separate",
-                       lora_rank: int = 128) -> Tuple[Tuple[str, float], ...]:
+                       lora_rank: int = 128,
+                       gather_mode: str = "layer",
+                       ) -> Tuple[Tuple[str, float], ...]:
     """Per-device byte fractions of every persistent RLHF state group,
     traced from the REAL sharded spec trees (``jax.eval_shape`` of the
     role trees under the mesh rules) instead of the closed-form ``1/ndp``.
@@ -204,7 +224,13 @@ def traced_zero_scales(actor_cfg, critic_cfg=None, *, ndp: int,
     shards to 1/ndp), plus byte-weighted ``"param"/"opt"/"grad"``
     aggregates as fallback for trace-level events. ``merged_rollout`` is
     pinned at 1.0: merged generation runs from a *gathered* compute copy
-    by the runtime contract (DESIGN.md §3)."""
+    by the runtime contract (DESIGN.md §3).
+
+    ``gather_mode`` sets the ZeRO-3 transient term: each traced
+    ``layer_slice`` event (one sliced layer period of the scan) is
+    charged 1x under ``"layer"`` (per-layer FSDP gathers — one period
+    live at a time) and at the actor's scan length under ``"tree"``
+    (a whole-tree gather keeps every period live across the scan)."""
     import jax
 
     from repro.models import Model
@@ -291,6 +317,13 @@ def traced_zero_scales(actor_cfg, critic_cfg=None, *, ndp: int,
         out.append(("grad", gd / gt if gt else 1.0))
     else:
         out.append(("grad", 1.0))
+    # ZeRO-3 gather transient (see docstring): tree mode keeps every
+    # gathered layer period live across the scan, so each per-slice event
+    # scales by the number of scan iterations
+    assert gather_mode in ("layer", "tree"), gather_mode
+    n_slices = sum(seg.n_groups for seg in actor.segments)
+    out.append(("layer_slice",
+                1.0 if gather_mode == "layer" else float(n_slices)))
     return tuple(out)
 
 
@@ -301,5 +334,5 @@ def traced_strategy(base: MemoryStrategy, actor_cfg, critic_cfg=None, *,
     return dataclasses.replace(
         base, traced=traced_zero_scales(
             actor_cfg, critic_cfg, ndp=ndp, zero_stage=base.zero_stage,
-            engine=engine,
+            engine=engine, gather_mode=base.gather_mode,
             lora_rank=base.lora_rank if lora_rank is None else lora_rank))

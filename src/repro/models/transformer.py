@@ -224,14 +224,25 @@ class Model:
         return (seg.moe_flags[i] and self.cfg.moe is not None) or self.cfg.d_ff > 0
 
     def _stack_fwd(self, params, h, positions, *, window=0, cross_kv=None,
-                   init_caches=None, adapter=None):
+                   init_caches=None, adapter=None, layer_specs=None):
         """Run all segments. Returns (h, aux, filled_caches_per_segment).
         ``adapter`` is a LoRA tree mirroring the segment structure; its
-        stacked factors ride the scan alongside the stacked weights."""
+        stacked factors ride the scan alongside the stacked weights.
+
+        ``layer_specs`` (a per-segment list of sliced-layer sharding
+        trees, ``sharding.TreePlan.layer_specs``) turns the scan body into
+        the per-layer ZeRO-3/FSDP all-gather: each iteration constrains
+        only its own sliced layer period to the DP-stripped compute
+        layout, so the gathered weights live for ONE layer instead of the
+        whole tree (DESIGN.md §3.7). Falls back to the ambient
+        ``ctx.segment_param_specs()`` (the per-layer grad reduce-scatter
+        hook) when None."""
         cfg = self.cfg
         lora = (adapter or {}).get("lora")
         aux_total = jnp.zeros((), jnp.float32)
         all_caches = []
+        seg_specs = layer_specs if layer_specs is not None \
+            else ctx.segment_param_specs()
         for si, seg in enumerate(self.segments):
             def group_fwd(carry, xs, seg=seg, si=si):
                 hh, aux = carry
@@ -240,7 +251,6 @@ class Model:
                 # checkpoint footprint; XLA all-gathers into the mixers.
                 hh = ctx.constrain(hh, "dp", "model", None)
                 gp, ckv, ic, ad = xs
-                seg_specs = ctx.segment_param_specs()
                 if seg_specs is not None:
                     gp = jax.tree.map(ctx.constrain_spec, gp, seg_specs[si])
                 caches = {}
@@ -340,22 +350,26 @@ class Model:
         positions = jnp.broadcast_to(jnp.arange(S), h.shape[:2])
         return h, positions, cross_kv
 
-    def forward(self, params, batch, *, window: int = 0, adapter=None):
+    def forward(self, params, batch, *, window: int = 0, adapter=None,
+                layer_specs=None):
         """Full-sequence forward -> (logits [B,S,V], aux_loss, h_final).
-        ``adapter`` (optional LoRA tree) is applied unmerged."""
+        ``adapter`` (optional LoRA tree) is applied unmerged;
+        ``layer_specs`` enables the per-layer ZeRO-3 gather in the scan
+        body (see ``_stack_fwd``)."""
         h, positions, cross_kv = self._prepare_inputs(params, batch)
         # cross_kv from _cross_kvs is already per-segment stacked; pass as xs
         h, aux, _ = self._stack_fwd(params, h, positions, window=window,
-                                    cross_kv=cross_kv, adapter=adapter)
+                                    cross_kv=cross_kv, adapter=adapter,
+                                    layer_specs=layer_specs)
         return self.unembed(params, h), aux, h
 
-    def forward_value(self, params, batch, adapter=None):
+    def forward_value(self, params, batch, adapter=None, layer_specs=None):
         """[B,S] per-token scalar values (critic / reward). With an
         ``adapter`` carrying a value head, the head comes from the adapter —
         the hydra engine's critic/reward share a headless base trunk."""
         h, positions, cross_kv = self._prepare_inputs(params, batch)
         h, _, _ = self._stack_fwd(params, h, positions, cross_kv=cross_kv,
-                                  adapter=adapter)
+                                  adapter=adapter, layer_specs=layer_specs)
         h = L.rms_norm(h, params["final_norm"], self.cfg.norm_eps)
         vh = (adapter or {}).get("value_head") or params["value_head"]
         return (h.astype(jnp.float32) @ vh["w"] + vh["b"])[..., 0]

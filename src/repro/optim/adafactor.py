@@ -36,16 +36,35 @@ class Adafactor:
         }
 
     def init_specs(self, param_specs, params=None):
-        """Factored dims inherit the matching spec entries."""
+        """Moment specs are REPLICATED, matching :meth:`update_pspecs`:
+        the adafactor update reduces across elements (factored means, the
+        update-RMS clip), so under ZeRO the whole update runs on
+        replicated operands — sharded moments would feed those reductions
+        a partial-sum/all-reduce order that differs from one device by a
+        ulp. The replicated residency is noise: factored moments are
+        O(rows+cols), and the only full-size ``v`` moments belong to
+        small (<128-dim) leaves."""
         def per_leaf(spec, p):
             if _factored(p):
-                sr = P(*spec[:-1]) if spec else P()
-                sc = P(*(tuple(spec[:-2]) + tuple(spec[-1:]))) if spec else P()
-                return {"vr": sr, "vc": sc}
-            return {"v": spec}
+                return {"vr": P(*([None] * (p.ndim - 1))),
+                        "vc": P(*([None] * (p.ndim - 1)))}
+            return {"v": P(*([None] * p.ndim))}
         specs = jax.tree.map(per_leaf, param_specs, params,
                              is_leaf=lambda x: isinstance(x, P))
         return {"v": specs, "count": P()}
+
+    def update_pspecs(self, param_specs, params=None):
+        """Param-shaped layout for the ZeRO update program: fully
+        replicated. ``steps._run_sharded_update`` eagerly gathers the
+        (DP-identical) grads and params onto it — a bit-exact all-gather
+        — runs :meth:`update` with every reduction in single-device
+        order, and re-slices the new params onto the persistent ZeRO
+        layout afterwards. This is what makes adafactor bit-equal to
+        ndp=1 under every ZeRO stage (DESIGN.md §3.3); elementwise
+        optimizers (adamw) keep the sharded update layout instead."""
+        return jax.tree.map(lambda s, p: P(*([None] * p.ndim)),
+                            param_specs, params,
+                            is_leaf=lambda x: isinstance(x, P))
 
     def update(self, grads, state, params, lr):
         count = state["count"] + 1

@@ -96,17 +96,22 @@ class ModelEngine:
     # The trunk is an explicit argument (not read off ``self``) so jitted
     # callers pass it as a real input — closing over it would bake the
     # largest tree in the system into the executable as a constant.
-    def logits(self, base_params, adapter, batch):
-        """Role-switched forward: base ⊕ adapter -> [B,S,V] logits."""
-        return self.model.forward(base_params, batch, adapter=adapter)[0]
+    def logits(self, base_params, adapter, batch, layer_specs=None):
+        """Role-switched forward: base ⊕ adapter -> [B,S,V] logits.
+        ``layer_specs`` (the base plan's) turns the trunk's ZeRO-3 gather
+        per-layer inside the scan body (DESIGN.md §3.7)."""
+        return self.model.forward(base_params, batch, adapter=adapter,
+                                  layer_specs=layer_specs)[0]
 
-    def ref_logits(self, base_params, batch):
+    def ref_logits(self, base_params, batch, layer_specs=None):
         """Reference forward IS the plain base pass — no ref copy exists."""
-        return self.model.forward(base_params, batch)[0]
+        return self.model.forward(base_params, batch,
+                                  layer_specs=layer_specs)[0]
 
-    def values(self, base_params, adapter, batch):
+    def values(self, base_params, adapter, batch, layer_specs=None):
         """Critic/reward forward: base ⊕ adapter + adapter's value head."""
-        return self.model.forward_value(base_params, batch, adapter=adapter)
+        return self.model.forward_value(base_params, batch, adapter=adapter,
+                                        layer_specs=layer_specs)
 
     # Rollout-speed generation folds A·B into the trunk and drops the
     # merged leaves at the phase boundary — that lifecycle lives in

@@ -169,6 +169,20 @@ class RLHFConfig:
     # touch it ("all" also parks the hydra trunk's adapted leaves while
     # merged weights serve rollout)
     offload: str = "none"
+    # DP batch sharding of the scoring/training batches under a mesh
+    # (DESIGN.md §3.6):
+    #   "throughput" (default) — shard the batch over the DP axis when it
+    #     divides; batch-dim loss reductions then run as per-device
+    #     partials + a cross-device sum, which changes reduction ORDER vs
+    #     the replicated batch — a documented ~ulp drift, accepted for
+    #     the ndp-times-smaller per-device activations. A non-divisible
+    #     batch falls back to replication WITH a warning (never silent).
+    #   "strict" — sharded semantics are required: a batch that does not
+    #     divide the DP size raises instead of silently replicating.
+    # The bit-identity validation harness (zero_smoke, test_zero_rlhf)
+    # deliberately uses non-divisible batches so state shards but batches
+    # replicate and the arithmetic stays exactly single-device.
+    batch_shard: str = "throughput"
 
 
 class RLHFTrainer:
@@ -197,6 +211,10 @@ class RLHFTrainer:
                  rl: RLHFConfig, key, reward_fn: Optional[Callable] = None,
                  shard=None):
         assert rl.engine in ("separate", "hydra"), rl.engine
+        if rl.batch_shard not in ("strict", "throughput"):
+            raise ValueError(
+                f"unknown batch_shard {rl.batch_shard!r}; "
+                "expected 'strict' or 'throughput'")
         self.rl = rl
         self.actor_cfg, self.critic_cfg = actor_cfg, critic_cfg
         self.reward_fn = reward_fn
@@ -220,6 +238,52 @@ class RLHFTrainer:
         trees cost full size per device; ZeRO-3 trees cost 1/ndp."""
         from repro.sharding import tree_per_device_bytes
         return tree_per_device_bytes(list(self._persistent_trees().values()))
+
+    def _shard_batch(self, tree):
+        """DP batch sharding per ``rl.batch_shard`` (DESIGN.md §3.6): place
+        every batch-leading array in ``tree`` onto the data axis. Applied
+        to the scoring batch and the training experience — the phases
+        whose activations dominate — not to rollout (generation runs from
+        the gathered compute copy on its own schedule). Reduction-order
+        drift under a sharded batch is documented and accepted in
+        throughput mode; strict mode refuses to fall back."""
+        if self.shard is None or self.shard.ndp <= 1:
+            return tree
+        leaves = [x for x in jax.tree.leaves(tree)
+                  if getattr(x, "ndim", 0) >= 1]
+        if not leaves:
+            return tree
+        B = leaves[0].shape[0]
+        ndp = self.shard.ndp
+        if B % ndp != 0:
+            if self.rl.batch_shard == "strict":
+                raise ValueError(
+                    f"batch_shard='strict': global batch {B} does not "
+                    f"divide the DP size {ndp} — the batch would silently "
+                    "replicate. Pad the batch or use "
+                    "batch_shard='throughput'.")
+            if not getattr(self, "_batch_shard_warned", False):
+                self._batch_shard_warned = True
+                import warnings
+                warnings.warn(
+                    f"RLHF batch {B} does not divide ndp={ndp}: "
+                    "replicating the batch over the DP axis (state still "
+                    "shards; see RLHFConfig.batch_shard)", stacklevel=3)
+            return tree
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+        from repro.sharding import dp_axes
+        mesh = self.shard.mesh
+        dp = dp_axes(mesh)
+        dp = dp if len(dp) > 1 else dp[0]
+
+        def place(x):
+            if getattr(x, "ndim", 0) < 1 or x.shape[0] != B:
+                return x
+            spec = P(dp, *([None] * (x.ndim - 1)))
+            return jax.device_put(x, NamedSharding(mesh, spec))
+
+        return jax.tree.map(place, tree)
 
     def _persistent_trees(self) -> Dict[str, Any]:
         out = {"actor_params": self.actor_state["params"],
@@ -363,26 +427,38 @@ class RLHFTrainer:
             else self.actor_plan.gather(p)
         gc_ = lambda p: p if self.critic_plan is None \
             else self.critic_plan.gather(p)
+        # per-layer ZeRO-3 gather specs for the scoring forwards (None in
+        # tree mode / unsharded — DESIGN.md §3.7)
+        ls_a = getattr(self.actor_plan, "layer_specs", None)
+        ls_c = getattr(self.critic_plan, "layer_specs", None)
         self._jit_actor_step = _jit_step(self.actor_step)
         self._jit_critic_step = _jit_step(self.critic_step)
         self._jit_logp = jax.jit(
-            lambda p, b: self._token_logp(ga(p), b))
+            lambda p, b: self._token_logp(ga(p), b, ls_a))
         self._jit_values = jax.jit(
-            lambda p, b: self.critic.forward_value(gc_(p), b))
+            lambda p, b: self.critic.forward_value(gc_(p), b,
+                                                   layer_specs=ls_c))
         self._jit_reward = jax.jit(
-            lambda p, b: self.reward_model.forward_value(gc_(p), b))
+            lambda p, b: self.reward_model.forward_value(gc_(p), b,
+                                                         layer_specs=ls_c))
 
         # engine-bound callables: make_experience / train_step are the same
         # straight-line code for both engines over these seven.
         # Rollout generates from a gathered compute copy of the ZeRO-3
-        # actor shards (below stage 3 this is the same buffers); the copy
-        # dies at the rollout phase boundary.
+        # actor shards (below stage 3 gather_copy returns the live
+        # buffers, owned=False); an owned copy is deleted deterministically
+        # when the rollout phase ends — never left to the GC.
         def _gen(prompts, key):
-            p = self.actor_state["params"]
+            from repro.sharding import delete_tree
+            p, owned = self.actor_state["params"], False
             if self.actor_plan is not None:
-                p = self.actor_plan.gather_copy(p)
-            return self.rollout.generate(p, {"tokens": prompts},
-                                         self.rl.gen_len, key)
+                p, owned = self.actor_plan.gather_copy(p)
+            try:
+                return self.rollout.generate(p, {"tokens": prompts},
+                                             self.rl.gen_len, key)
+            finally:
+                if owned:
+                    delete_tree(p)
 
         self._gen = _gen
         self._old_logp = lambda b: self._jit_logp(
@@ -445,16 +521,21 @@ class RLHFTrainer:
         ga, gc_ = gad(a_plan), gad(c_plan)
         rw_plan = self.engine.adapter_plans.get("reward")
         grw = gad(rw_plan)
+        # per-layer ZeRO-3 gather of the frozen trunk (DESIGN.md §3.7)
+        ls_b = getattr(base_plan, "layer_specs", None)
         self._jit_actor_step = _jit_step(self.actor_step)
         self._jit_critic_step = _jit_step(self.critic_step)
         self._jit_logp = jax.jit(
-            lambda p, ad, b: self._token_logp_adapter(gb(p), ga(ad), b))
+            lambda p, ad, b: self._token_logp_adapter(gb(p), ga(ad), b,
+                                                      ls_b))
         self._jit_ref_logp = jax.jit(
-            lambda p, b: self._token_logp_ref(gb(p), b))
+            lambda p, b: self._token_logp_ref(gb(p), b, ls_b))
         self._jit_values = jax.jit(
-            lambda p, ad, b: self.engine.values(gb(p), gc_(ad), b))
+            lambda p, ad, b: self.engine.values(gb(p), gc_(ad), b,
+                                                layer_specs=ls_b))
         self._jit_reward = jax.jit(
-            lambda p, ad, b: self.engine.values(gb(p), grw(ad), b))
+            lambda p, ad, b: self.engine.values(gb(p), grw(ad), b,
+                                                layer_specs=ls_b))
 
         # engine-bound callables (hydra flavor: the frozen trunk threads
         # through every call; rollout merges A·B into it once per phase).
@@ -466,11 +547,13 @@ class RLHFTrainer:
         # paged decode path both execute under the same mesh.
         def _gen(prompts, key):
             from repro.models.lora import delete_merged
-            adapter = self.actor_state["params"]
-            base = self.base_params
+            from repro.sharding import delete_tree
+            adapter, owned_a = self.actor_state["params"], False
+            base, owned_b = self.base_params, False
             if base_plan is not None:
-                base = base_plan.gather_copy(base)
-                adapter = a_plan.gather_copy(adapter)
+                base, owned_b = base_plan.gather_copy(self.base_params)
+                adapter, owned_a = a_plan.gather_copy(
+                    self.actor_state["params"])
             merged = self.actor.merge_adapter(base, adapter)
             if self.offload is not None:
                 self.offload.rollout_merged()
@@ -483,7 +566,16 @@ class RLHFTrainer:
                 self.memory.sample("rollout_decode")
                 return ro
             finally:
+                # deterministic phase-boundary hygiene. Order matters:
+                # delete_merged reads the adapter tree's structure first,
+                # then the owned ZeRO-3 gather copies are dropped (below
+                # stage 3 owned=False — merged aliases the LIVE base, and
+                # only the freshly-merged leaves may die).
                 delete_merged(merged, adapter.get("lora"))
+                if owned_a:
+                    delete_tree(adapter)
+                if owned_b:
+                    delete_tree(base)
 
         self._gen = _gen
         self._old_logp = lambda b: self._jit_logp(
@@ -513,22 +605,25 @@ class RLHFTrainer:
         self._actor_update, self._critic_update = _actor_update, _critic_update
 
     # ------------------------------------------------------------------
-    def _token_logp(self, params, batch):
+    def _token_logp(self, params, batch, layer_specs=None):
         from repro.steps import _action_logp
-        logits, _, _ = self.actor.forward(params, batch)
+        logits, _, _ = self.actor.forward(params, batch,
+                                          layer_specs=layer_specs)
         return _action_logp(logits, batch["tokens"],
                             _prefix_len(self.actor_cfg))
 
-    def _token_logp_adapter(self, params, adapter, batch):
+    def _token_logp_adapter(self, params, adapter, batch, layer_specs=None):
         from repro.steps import _action_logp
-        logits = self.engine.logits(params, adapter, batch)
+        logits = self.engine.logits(params, adapter, batch,
+                                    layer_specs=layer_specs)
         return _action_logp(logits, batch["tokens"],
                             _prefix_len(self.actor_cfg))
 
-    def _token_logp_ref(self, params, batch):
+    def _token_logp_ref(self, params, batch, layer_specs=None):
         from repro.steps import _action_logp
-        return _action_logp(self.engine.ref_logits(params, batch),
-                            batch["tokens"], _prefix_len(self.actor_cfg))
+        return _action_logp(
+            self.engine.ref_logits(params, batch, layer_specs=layer_specs),
+            batch["tokens"], _prefix_len(self.actor_cfg))
 
     def make_experience(self, prompts: jax.Array, key) -> Dict[str, Any]:
         """Phases 1-5: rollout + the four scoring inferences -> experience.
@@ -539,7 +634,7 @@ class RLHFTrainer:
         ro = self._gen(prompts, key)
         mm.boundary("rollout", "inference")
 
-        batch = {"tokens": ro.tokens}
+        batch = self._shard_batch({"tokens": ro.tokens})
         if self.reward_fn is not None:
             terminal = self.reward_fn(ro.tokens, ro.mask)
         else:
@@ -560,13 +655,14 @@ class RLHFTrainer:
                            gamma=self.rl.gamma, lam=self.rl.lam)
         if self.rl.whiten_advantages:
             adv = whiten(adv, ro.mask)
-        return {
+        exp = self._shard_batch({
             "tokens": ro.tokens, "loss_mask": ro.mask,
             "advantages": adv, "old_logp": old_logp * ro.mask,
             "ref_logp": ref_logp * ro.mask, "returns": returns,
             "old_values": values,
-            "mean_reward": terminal.mean(),
-        }
+        })
+        exp["mean_reward"] = terminal.mean()
+        return exp
 
     def train_step(self, prompts: jax.Array, key) -> Dict[str, float]:
         """One full PPO iteration (all seven phases)."""

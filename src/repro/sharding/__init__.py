@@ -1,4 +1,4 @@
-from repro.sharding.context import (ShardedContext, TreePlan,
+from repro.sharding.context import (ShardedContext, TreePlan, delete_tree,
                                     tree_per_device_bytes)
 from repro.sharding.rules import (ShardingStrategy, SpecMesh, adapter_pspecs,
                                   batch_pspecs, cache_pspecs, dp_axes,
@@ -7,6 +7,7 @@ from repro.sharding.rules import (ShardingStrategy, SpecMesh, adapter_pspecs,
                                   zero_opt_pspecs)
 
 __all__ = ["ShardedContext", "ShardingStrategy", "SpecMesh", "TreePlan",
-           "adapter_pspecs", "batch_pspecs", "cache_pspecs", "dp_axes",
+           "adapter_pspecs", "batch_pspecs", "cache_pspecs", "delete_tree",
+           "dp_axes",
            "opt_shardings", "param_pspecs", "spec_device_fraction",
            "to_named", "tree_per_device_bytes", "zero_opt_pspecs"]

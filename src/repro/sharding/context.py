@@ -20,9 +20,27 @@ compute specs *before* any matmul, run the loss/gradient computation on
 the gathered (DP-replicated) values, clip on the replicated gradients, and
 only then re-shard gradients onto the optimizer layout — a slice, not a
 reduction, so every ZeRO stage reproduces the single-device arithmetic to
-the last ulp while persistent state lives at 1/ndp per device. The
-transient gathered tree is exactly the ``layer_slice`` all-gather cost the
-allocator simulator has always charged ZeRO-3 for.
+the last ulp while persistent state lives at 1/ndp per device.
+
+The gather itself comes in two granularities
+(``ShardingStrategy.gather_mode``, DESIGN.md §3.7):
+
+  * ``"tree"``  — the whole parameter tree is constrained to the compute
+    specs before the forward; the transient HBM peak is the full
+    replicated model (what PR 4 shipped);
+  * ``"layer"`` — scanned (stacked) leaves stay ZeRO-sharded at the step
+    boundary and each ``jax.lax.scan`` iteration constrains only its own
+    sliced layer period to the DP-stripped specs (``TreePlan.layer_specs``
+    threaded into the scan body by ``Model._stack_fwd``). The gathered
+    slice dies when the iteration exits (under remat, the backward
+    re-gathers per layer from the saved *sharded* slice), so the
+    transient peak is ONE layer period — exactly the ``layer_slice``
+    schedule the allocator simulator has always charged ZeRO-3 for.
+    Non-stacked leaves (embeddings, lm head, norms, value heads) still
+    gather whole: they are touched at both ends of every forward.
+
+Both modes run the same replicated arithmetic inside the scan body, so
+they are bit-identical to each other and to the single device.
 """
 from __future__ import annotations
 
@@ -30,6 +48,7 @@ from dataclasses import dataclass
 from typing import Any, Optional
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -56,6 +75,14 @@ def _place(tree, spec_tree, mesh):
     return jax.tree.map(
         lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
         tree, spec_tree, is_leaf=lambda x: _IS_SPEC(x))
+
+
+def delete_tree(tree) -> None:
+    """Deterministically delete every device buffer in ``tree`` (phase
+    boundary hygiene for owned copies — see ``TreePlan.gather_copy``)."""
+    jax.tree.map(
+        lambda x: x.delete()
+        if hasattr(x, "delete") and not x.is_deleted() else None, tree)
 
 
 def tree_per_device_bytes(tree) -> int:
@@ -87,11 +114,29 @@ class TreePlan:
     # layouts make XLA fuse (FMA) differently per operand and cost a ulp
     # (DESIGN.md §3).
     update_specs: Optional[Any] = None
+    # per-layer gather mode (``ShardingStrategy.gather_mode == "layer"``
+    # at ZeRO-3, DESIGN.md §3.7): ``layer_param_specs`` is the full-tree
+    # gather target where stacked (scanned) leaves KEEP their sharded
+    # state specs and only non-stacked leaves go to compute specs;
+    # ``layer_specs`` is the per-segment list of NamedSharding trees for
+    # one *sliced* layer period (DP stripped) that ``Model._stack_fwd``
+    # constrains inside the scan body — the actual per-iteration
+    # all-gather. Both None in "tree" mode / below stage 3.
+    layer_param_specs: Optional[Any] = None
+    layer_specs: Optional[Any] = None
+
+    @property
+    def gather_mode(self) -> str:
+        return "layer" if self.layer_param_specs is not None else "tree"
 
     # ----------------------------------------------------------- in-jit
     def gather(self, params):
-        """Constrain ``params`` to the compute specs — the per-step
-        all-gather of ZeRO-3 (a no-op below stage 3)."""
+        """Constrain ``params`` to the gather target — the per-step
+        all-gather of ZeRO-3 (a no-op below stage 3). In layer mode the
+        stacked leaves stay sharded here; the per-layer gather happens
+        inside the scan body (``layer_specs``)."""
+        if self.layer_param_specs is not None:
+            return _constrain(params, self.layer_param_specs, self.mesh)
         return _constrain(params, self.compute_specs, self.mesh)
 
     def place_grads(self, grads):
@@ -143,9 +188,32 @@ class TreePlan:
     def gather_copy(self, params):
         """Materialize a DP-gathered copy of ``params`` (committed
         ``device_put`` onto the compute shardings) for rollout / merged
-        generation. Below ZeRO-3 the specs already match, so this returns
-        the same buffers (no copy — do not ``delete`` the result)."""
-        return _place(params, self.compute_specs, self.mesh)
+        generation. Returns ``(tree, owned)``:
+
+          * ``owned=False`` (below ZeRO-3): the compute specs equal the
+            state specs, so the returned tree is the SAME buffers as the
+            live state — the caller must NOT delete it;
+          * ``owned=True`` (ZeRO-3): every leaf is a fresh buffer the
+            caller owns and should ``delete_tree`` at the phase boundary.
+            Leaves whose sharding is unchanged (replicated norms, value
+            heads) are explicitly copied rather than aliased, so deleting
+            the returned tree can never free live state.
+        """
+        if self.compute_specs is self.param_specs or self.strat.zero_stage < 3:
+            return params, False
+
+        def copy_leaf(x, s):
+            ns = NamedSharding(self.mesh, s)
+            if getattr(x, "sharding", None) is not None and \
+                    x.sharding.is_equivalent_to(ns, x.ndim):
+                # device_put would be a no-op sharing buffers with the
+                # live state; force a real copy so ownership is uniform
+                return jnp.copy(x)
+            return jax.device_put(x, ns)
+
+        gathered = jax.tree.map(copy_leaf, params, self.compute_specs,
+                                is_leaf=lambda x: _IS_SPEC(x))
+        return gathered, True
 
     # (per-device byte *accounting* lives in core.strategies —
     # ``traced_zero_scales`` / ``_tree_fraction`` — so the simulator and
@@ -161,14 +229,17 @@ class ShardedContext:
 
     @classmethod
     def create(cls, ndp: int = 1, *, zero_stage: int = 3, model: int = 1,
+               gather_mode: str = "layer",
                devices=None) -> "ShardedContext":
         """Build a ``(data=ndp, model=...)`` mesh from the first
         ``ndp * model`` local devices (so an 8-device process can host both
         the ndp=1 baseline and the ndp=8 sharded run)."""
         from repro.launch.mesh import make_zero_mesh
+        assert gather_mode in ("layer", "tree"), gather_mode
         mesh = make_zero_mesh(ndp, model=model, devices=devices)
         return cls(mesh, ShardingStrategy(zero_stage=zero_stage,
-                                          tensor_parallel=model > 1))
+                                          tensor_parallel=model > 1,
+                                          gather_mode=gather_mode))
 
     @property
     def ndp(self) -> int:
@@ -180,28 +251,90 @@ class ShardedContext:
         return self.strat.zero_stage
 
     # ------------------------------------------------------------- plans
-    def _plan(self, pspecs, shapes, optimizer) -> TreePlan:
+    def _plan(self, pspecs, shapes, optimizer, *,
+              layerwise: bool = False) -> TreePlan:
         strat = self.strat
         opt_specs = update_specs = None
         if optimizer is not None:
             base = zero_opt_pspecs(pspecs, shapes, self.mesh, strat)
             opt_specs = optimizer.init_specs(base, shapes)
-            update_specs = base
+            # optimizers with element-crossing reductions (adafactor)
+            # override the param-shaped update layout (DESIGN.md §3.3)
+            upd = getattr(optimizer, "update_pspecs", None)
+            update_specs = upd(base, shapes) if upd is not None else base
         compute = jax.tree.map(
             lambda s: _strip_dp(s, self.mesh), pspecs,
             is_leaf=_IS_SPEC) if strat.zero_stage >= 3 else pspecs
+        layer_full = layer_slices = None
+        if layerwise and strat.zero_stage >= 3 and \
+                strat.gather_mode == "layer":
+            layer_full, layer_slices = _layer_specs(pspecs, self.mesh)
         return TreePlan(self.mesh, strat, pspecs, compute,
-                        opt_specs, update_specs)
+                        opt_specs, update_specs,
+                        layer_param_specs=layer_full,
+                        layer_specs=layer_slices)
 
     def plan_params(self, cfg, params_shape, optimizer=None) -> TreePlan:
-        """Plan for a full model tree (``rules.param_pspecs``)."""
+        """Plan for a full model tree (``rules.param_pspecs``).
+
+        Per-layer gathers require every stacked leaf to be touched ONLY
+        inside the scan body. Encoder-decoder models break that premise:
+        ``Model._cross_kvs`` vmaps over the stacked decoder cross-attn
+        weights before the scan, which under layer specs would all-gather
+        them in-graph (a bit-identity hazard per DESIGN.md §3 rule 2) and
+        re-materialize the whole stacked set at once. Those configs fall
+        back to whole-tree gathers."""
         pspecs = param_pspecs(cfg, self.mesh, self.strat, params_shape)
-        return self._plan(pspecs, params_shape, optimizer)
+        layerwise = getattr(cfg, "input_mode", "tokens") != "encdec"
+        return self._plan(pspecs, params_shape, optimizer,
+                          layerwise=layerwise)
 
     def plan_adapter(self, adapter_shape, optimizer=None) -> TreePlan:
-        """Plan for a hydra LoRA adapter tree (``rules.adapter_pspecs``)."""
+        """Plan for a hydra LoRA adapter tree (``rules.adapter_pspecs``).
+        Adapters always gather whole-tree: the per-role trees are
+        paper-small, so the per-layer discipline buys nothing there."""
         pspecs = adapter_pspecs(self.mesh, self.strat, adapter_shape)
         return self._plan(pspecs, adapter_shape, optimizer)
+
+
+def _layer_specs(pspecs, mesh):
+    """Split a full-tree spec dict into the layer-gather pair
+    ``(layer_param_specs, layer_specs)`` — see :class:`TreePlan`.
+
+    Stacked decoder segments (top-level ``segment{i}`` keys — the trees
+    ``jax.lax.scan`` slices per iteration) keep their sharded state specs
+    in the full-tree target and contribute one *sliced* spec tree each
+    (leading scan entry dropped, DP stripped, wrapped as NamedShardings so
+    the scan body can constrain without a mesh context). Everything else
+    — embeddings, lm head, final norm, value heads and the MTP head —
+    gathers whole via DP-stripped compute specs. (Encoder-decoder
+    configs never reach here: ``plan_params`` falls back to whole-tree
+    gathers because ``_cross_kvs`` touches stacked decoder weights
+    outside the scan.)"""
+    if not isinstance(pspecs, dict):
+        return None, None
+    seg_keys = sorted((k for k in pspecs if k.startswith("segment")),
+                      key=lambda k: int(k[len("segment"):]))
+    if not seg_keys:
+        return None, None
+    full = {}
+    for k, sub in pspecs.items():
+        if k in seg_keys:
+            full[k] = sub            # stays ZeRO-sharded at the boundary
+        else:
+            full[k] = jax.tree.map(lambda s: _strip_dp(s, mesh), sub,
+                                   is_leaf=_IS_SPEC)
+
+    real_mesh = isinstance(mesh, Mesh)   # SpecMesh (devices-free) keeps
+    # bare PartitionSpecs — spec-level tests and traced accounting only
+
+    def slice_spec(s: P):
+        sp = _strip_dp(P(*tuple(s)[1:]), mesh)
+        return NamedSharding(mesh, sp) if real_mesh else sp
+
+    slices = [jax.tree.map(slice_spec, pspecs[k], is_leaf=_IS_SPEC)
+              for k in seg_keys]
+    return full, slices
 
 
 def _strip_dp(spec: P, mesh) -> P:

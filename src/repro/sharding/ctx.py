@@ -93,6 +93,14 @@ def segment_param_specs():
 
 
 def constrain_spec(x, spec):
-    if _MESH is None or spec is None:
+    """Constrain ``x`` to ``spec``: a bare PartitionSpec resolves against
+    the ambient mesh (no-op when none is active); a NamedSharding carries
+    its own mesh — the form ``TreePlan.layer_specs`` uses so the per-layer
+    ZeRO-3 gather inside the scan body needs no mesh context."""
+    if spec is None:
+        return x
+    if isinstance(spec, NamedSharding):
+        return jax.lax.with_sharding_constraint(x, spec)
+    if _MESH is None:
         return x
     return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))

@@ -65,6 +65,13 @@ class ShardingStrategy:
     zero_stage: int = 3          # 0 | 1 | 2 | 3  (0 = fully replicated DP)
     tensor_parallel: bool = True
     expert_parallel: bool = True
+    # ZeRO-3 all-gather granularity (DESIGN.md §3.7): "layer" gathers one
+    # scanned layer period per scan iteration inside the forward/backward
+    # (the FSDP discipline — transient peak is ONE layer period), "tree"
+    # gathers the whole parameter tree up front (transient peak is the
+    # full replicated model). Bit-identical to each other and to ndp=1;
+    # only the transient HBM peak differs. Ignored below stage 3.
+    gather_mode: str = "layer"   # "layer" | "tree"
     # host-offloaded optimizer state: realized as real device placement by
     # opt_shardings() (host memory kind) on backends that support memory
     # kinds — the same axis MemoryStrategy.cpu_offload models analytically

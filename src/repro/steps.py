@@ -194,19 +194,24 @@ def make_train_step(model: Model, cfg: ModelConfig, *, lr: float = 3e-5,
          re-placed onto the persistent ZeRO shardings eagerly afterwards.
 
     Every stage therefore reproduces the unsharded step bit-for-bit while
-    persistent params/opt live at ~1/ndp per device. (Bit-identity holds
-    for elementwise optimizers — adamw; adafactor's factored moments
-    reduce across elements and are only close, not equal, under ZeRO.)"""
+    persistent params/opt live at ~1/ndp per device. (Adafactor reduces
+    across elements inside its update; it declares a fully-replicated
+    update layout via ``Adafactor.update_pspecs`` so those reductions run
+    in single-device order — bit-equal too, at the cost of a transient
+    replicated update.)"""
     optimizer = make_optimizer(cfg.optimizer)
     prefix = _prefix_len(cfg)
+    # per-layer ZeRO-3 gather (gather_mode="layer"): the scan body
+    # constrains one sliced layer period at a time (DESIGN.md §3.7)
+    lspecs = getattr(shard, "layer_specs", None)
 
     def loss_fn(params, batch):
         if kind == "critic":
-            values = model.forward_value(params, batch)
+            values = model.forward_value(params, batch, layer_specs=lspecs)
             S = batch["tokens"].shape[1]
             values = values[:, prefix:prefix + S]
             return critic_loss(values, batch)
-        logits, aux, h = model.forward(params, batch)
+        logits, aux, h = model.forward(params, batch, layer_specs=lspecs)
         if kind == "lm":
             loss = lm_loss(logits, batch["tokens"], batch["loss_mask"],
                            prefix=prefix)
@@ -253,6 +258,8 @@ def make_train_step(model: Model, cfg: ModelConfig, *, lr: float = 3e-5,
 
     train_step.optimizer = optimizer
     train_step.prejitted = True     # callers must NOT wrap in jax.jit
+    train_step.jit_grads = jit_grads    # exposed so benchmarks can read the
+    # compiled program's transient-peak stats (memory_analysis)
     return train_step
 
 
@@ -284,14 +291,19 @@ def make_lora_train_step(model: Model, cfg: ModelConfig, *, lr: float = 3e-5,
     """
     optimizer = make_optimizer(cfg.optimizer)
     prefix = _prefix_len(cfg)
+    # per-layer ZeRO-3 gather of the frozen trunk inside the scan body
+    # (the adapter itself always gathers whole — it is paper-small)
+    blspecs = getattr(base_shard, "layer_specs", None)
 
     def loss_fn(adapter, base_params, batch):
         if kind == "critic":
-            values = model.forward_value(base_params, batch, adapter=adapter)
+            values = model.forward_value(base_params, batch, adapter=adapter,
+                                         layer_specs=blspecs)
             S = batch["tokens"].shape[1]
             values = values[:, prefix:prefix + S]
             return critic_loss(values, batch)
-        logits, aux, h = model.forward(base_params, batch, adapter=adapter)
+        logits, aux, h = model.forward(base_params, batch, adapter=adapter,
+                                       layer_specs=blspecs)
         if kind == "lm":
             loss = lm_loss(logits, batch["tokens"], batch["loss_mask"],
                            prefix=prefix)
@@ -341,6 +353,7 @@ def make_lora_train_step(model: Model, cfg: ModelConfig, *, lr: float = 3e-5,
 
     train_step.optimizer = optimizer
     train_step.prejitted = True     # callers must NOT wrap in jax.jit
+    train_step.jit_grads = jit_grads
     return train_step
 
 

@@ -132,6 +132,7 @@ def test_paged_decode_adapter_matches_dense(setup):
                                atol=2e-5)
 
 
+@pytest.mark.slow
 def test_hydra_ppo_base_frozen_adapters_move():
     """2-step PPO smoke on engine="hydra": the base tree is bit-identical
     before/after — only the adapters (and their opt states) moved."""

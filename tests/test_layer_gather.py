@@ -1,0 +1,326 @@
+"""Per-layer ZeRO-3/FSDP gathers in the scan body (DESIGN.md §3.7).
+
+Runtime checks run in subprocesses with 8 forced host devices (the flag
+must be set before jax initializes), mirroring tests/test_zero_rlhf.py;
+they execute in the CI ``multidevice`` job. The spec-level checks at the
+bottom need no devices and always run.
+
+Covers:
+  * 2-step PPO losses bit-identical between ``gather_mode="tree"`` and
+    ``"layer"`` (and the unsharded ndp=1 run) on BOTH engines;
+  * the measured per-device transient peak of the compiled grad program:
+    switching tree -> layer frees at least the whole stacked parameter
+    tree minus ~2 layer periods (the gathered weights live one layer at a
+    time);
+  * TreePlan layer-spec structure: stacked leaves keep their sharded
+    state specs at the step boundary, sliced specs are DP-stripped, and
+    non-stacked leaves gather whole.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+pytestmark = pytest.mark.multidevice
+
+runtime_smoke = pytest.mark.skipif(
+    "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""),
+    reason="layer-gather runtime smokes run in the multidevice CI job (set "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8 to enable)")
+
+
+def _run(code: str, devices: int = 8, timeout: int = 1200):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(_ROOT, "src"),
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, \
+        f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+_PRELUDE = """
+    import dataclasses, jax, jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.rlhf import RLHFConfig, RLHFTrainer
+    from repro.rlhf.reward import make_target_token_reward
+    from repro.sharding import ShardedContext
+
+    cfg = dataclasses.replace(
+        get_config("llama3_2_3b").smoke(), num_layers=2, d_model=128,
+        d_ff=256, vocab_size=64, num_heads=4, num_kv_heads=2, head_dim=32)
+    P, G, B = 8, 12, 4
+    key = jax.random.PRNGKey(1)
+    prompts = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
+
+    def run(engine, shard, steps=2):
+        rl = RLHFConfig(prompt_len=P, gen_len=G, lr=1e-3, critic_lr=1e-3,
+                        kl_coef=0.0, top_k=0, engine=engine, lora_rank=8)
+        tr = RLHFTrainer(cfg, cfg, rl, jax.random.PRNGKey(0),
+                         reward_fn=make_target_token_reward(7), shard=shard)
+        ms = [tr.train_step(prompts, jax.random.fold_in(key, s))
+              for s in range(steps)]
+        return tr, ms
+
+    def assert_biteq(m1, m2, label):
+        for a, b in zip(m1, m2):
+            for k in ("loss", "ppo_loss", "vf_loss"):
+                if k in a:
+                    assert a[k] == b[k], (label, k, a[k], b[k])
+"""
+
+
+@runtime_smoke
+@pytest.mark.slow
+@pytest.mark.parametrize("engine", ["separate", "hydra"])
+def test_layer_vs_tree_bit_identity(engine):
+    """2-step PPO losses bit-identical across ndp=1, whole-tree gather,
+    and per-layer gather at ZeRO-3 — the per-layer all-gather is a pure
+    schedule change, never an arithmetic one."""
+    _run(_PRELUDE + f"""
+    tr1, m1 = run("{engine}", None)
+    trT, mT = run("{engine}",
+                  ShardedContext.create(8, zero_stage=3, gather_mode="tree"))
+    trL, mL = run("{engine}",
+                  ShardedContext.create(8, zero_stage=3, gather_mode="layer"))
+    assert trL.actor_plan.gather_mode == "layer" if "{engine}" == "separate" \\
+        else trL.engine.base_plan.gather_mode == "layer"
+    assert_biteq(m1, mT, "{engine}-tree")
+    assert_biteq(m1, mL, "{engine}-layer")
+    print("OK")
+    """)
+
+
+@runtime_smoke
+@pytest.mark.slow
+def test_layer_gather_transient_peak():
+    """The compiled grad program's per-device transient peak (XLA
+    memory_analysis temp bytes): tree -> layer must free at least the
+    whole stacked parameter tree minus ~2 layer periods — i.e. under
+    per-layer gathers at most ~one gathered layer period is resident at
+    any instant (needs remat so the backward re-gathers per layer)."""
+    _run(_PRELUDE + """
+    import numpy as np
+    from repro.models import Model
+    from repro.optim import make_optimizer
+    from repro.steps import init_train_state, make_train_step
+
+    cfg_t = dataclasses.replace(cfg, num_layers=8, d_model=256, d_ff=512,
+                                num_heads=8, num_kv_heads=4, head_dim=32,
+                                param_dtype="bfloat16", remat="full")
+    model = Model(cfg_t)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    stacked = int(sum(int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+                      for k in shapes if k.startswith("segment")
+                      for l in jax.tree.leaves(shapes[k])))
+    n_slices = sum(seg.n_groups for seg in model.segments)
+    slice_b = stacked // n_slices
+    S = P + G
+    tb = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                                       cfg_t.vocab_size)}
+    for k in ("loss_mask", "advantages", "old_logp", "ref_logp", "returns"):
+        tb[k] = jnp.zeros((B, S), jnp.float32)
+
+    def temp_bytes(mode):
+        sc = ShardedContext.create(8, zero_stage=3, gather_mode=mode)
+        plan = sc.plan_params(cfg_t, shapes, make_optimizer(cfg_t.optimizer))
+        step = make_train_step(model, cfg_t, kind="ppo", shard=plan)
+        state = plan.place_state(init_train_state(
+            model, cfg_t, jax.random.PRNGKey(0), step.optimizer))
+        c = step.jit_grads.lower(state, tb).compile()
+        return int(c.memory_analysis().temp_size_in_bytes)
+
+    t_tree, t_layer = temp_bytes("tree"), temp_bytes("layer")
+    freed = t_tree - t_layer
+    eps = 256 * 1024
+    assert freed >= stacked - 2 * slice_b - eps, \\
+        (t_tree, t_layer, stacked, slice_b)
+    print("OK freed", freed, "stacked", stacked, "slice", slice_b)
+    """)
+
+
+@runtime_smoke
+@pytest.mark.slow
+def test_adafactor_zero_bit_identity():
+    """Adafactor under ZeRO is bit-equal to single-device: its update
+    declares a fully-replicated layout (Adafactor.update_pspecs), so the
+    factored-moment and update-RMS reductions run in single-device order
+    (the ROADMAP close-but-not-bit-equal item)."""
+    _run(_PRELUDE + """
+    cfg = dataclasses.replace(cfg, optimizer="adafactor", d_model=128,
+                              d_ff=256)
+    tr1, m1 = run("separate", None)
+    # d_model/d_ff >= 128 so 2-D leaves really take the factored path
+    import repro.optim.adafactor as AF
+    assert AF._factored(tr1.actor_state["params"]["segment0"]
+                        ["slot0"]["mixer"]["wq"])
+    for stage in (1, 3):
+        tr8, m8 = run("separate", ShardedContext.create(8, zero_stage=stage))
+        assert_biteq(m1, m8, f"adafactor-z{stage}")
+    print("OK")
+    """)
+
+
+@runtime_smoke
+@pytest.mark.slow
+def test_batch_shard_modes():
+    """RLHFConfig.batch_shard: 'strict' raises on a non-divisible batch
+    instead of silently replicating; 'throughput' shards a divisible
+    batch over DP (accepted reduction-order drift) and still trains."""
+    _run(_PRELUDE + """
+    rl = RLHFConfig(prompt_len=P, gen_len=G, kl_coef=0.0, top_k=0,
+                    batch_shard="strict")
+    sc = ShardedContext.create(8, zero_stage=3)
+    tr = RLHFTrainer(cfg, cfg, rl, jax.random.PRNGKey(0),
+                     reward_fn=make_target_token_reward(7), shard=sc)
+    try:
+        tr.train_step(prompts, key)     # B=4 does not divide ndp=8
+        raise SystemExit("strict mode must raise on a non-divisible batch")
+    except ValueError as e:
+        assert "strict" in str(e), e
+
+    # divisible batch in throughput mode: experience shards over DP
+    prompts8 = jax.random.randint(key, (8, P), 0, cfg.vocab_size)
+    rl2 = RLHFConfig(prompt_len=P, gen_len=G, kl_coef=0.0, top_k=0,
+                     batch_shard="throughput")
+    tr2 = RLHFTrainer(cfg, cfg, rl2, jax.random.PRNGKey(0),
+                      reward_fn=make_target_token_reward(7), shard=sc)
+    exp = tr2.make_experience(prompts8, key)
+    shards = exp["advantages"].addressable_shards
+    assert len(shards) == 8 and shards[0].data.shape[0] == 1, \\
+        [s.data.shape for s in shards]
+    m = tr2.train_step(prompts8, jax.random.fold_in(key, 1))
+    assert all(bool(jnp.isfinite(v)) for v in m.values()), m
+    print("OK", m["loss"])
+    """)
+
+
+# ---------------------------------------------------------------------------
+# Spec-level checks: no devices needed
+# ---------------------------------------------------------------------------
+def test_layer_plan_spec_structure():
+    """TreePlan layer specs: stacked segment leaves keep their sharded
+    state specs in the full-tree gather target, sliced per-layer specs
+    drop the scan dim and every DP axis, and non-stacked leaves (embed,
+    lm head, norms) are DP-stripped (gather whole). On the devices-free
+    SpecMesh the sliced specs stay bare PartitionSpecs (a real mesh wraps
+    them as NamedShardings — exercised by the runtime smokes above)."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.sharding import ShardingStrategy, SpecMesh, param_pspecs
+    from repro.sharding.context import _layer_specs
+
+    cfg = get_config("llama3_2_3b")
+    model = Model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    mesh = SpecMesh({"data": 8})
+    strat = ShardingStrategy(zero_stage=3, tensor_parallel=False,
+                             gather_mode="layer")
+    pspecs = param_pspecs(cfg, mesh, strat, shapes)
+    full, slices = _layer_specs(pspecs, mesh)
+    assert full is not None and len(slices) == len(model.segments)
+
+    is_p = lambda x: isinstance(x, P)
+
+    def uses_data(spec):
+        for e in tuple(spec):
+            axes = e if isinstance(e, tuple) else (e,)
+            if "data" in axes:
+                return True
+        return False
+
+    # stacked leaves keep the (DP-sharded) state specs
+    for k in full:
+        if k.startswith("segment"):
+            assert full[k] is pspecs[k]
+    # non-stacked leaves lose every DP axis
+    for k in ("embed", "final_norm"):
+        for spec in jax.tree.leaves(full[k], is_leaf=is_p):
+            assert not uses_data(spec), (k, spec)
+    # sliced specs: one fewer dim than the stacked spec, no DP entries
+    flat_stacked = jax.tree.leaves(pspecs["segment0"], is_leaf=is_p)
+    flat_slice = jax.tree.leaves(slices[0], is_leaf=is_p)
+    assert len(flat_stacked) == len(flat_slice)
+    n_dp_sharded = 0
+    for st, sl in zip(flat_stacked, flat_slice):
+        assert len(tuple(sl)) == len(tuple(st)) - 1, (st, sl)
+        assert not uses_data(sl), sl
+        if uses_data(st):
+            n_dp_sharded += 1
+    assert n_dp_sharded > 0, "ZeRO-3 must shard some stacked leaves"
+
+
+def test_tree_mode_plan_has_no_layer_specs():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.sharding import ShardedContext, ShardingStrategy, SpecMesh
+
+    cfg = get_config("llama3_2_3b").smoke()
+    shapes = jax.eval_shape(Model(cfg).init, jax.random.PRNGKey(0))
+    for stage, mode, expect in ((3, "tree", False), (1, "layer", False),
+                                (3, "layer", True)):
+        sc = ShardedContext(SpecMesh({"data": 8}),
+                            ShardingStrategy(zero_stage=stage,
+                                             tensor_parallel=False,
+                                             gather_mode=mode))
+        plan = sc.plan_params(cfg, shapes)
+        assert (plan.layer_specs is not None) == expect, (stage, mode)
+        assert plan.gather_mode == ("layer" if expect else "tree")
+
+
+def test_encdec_falls_back_to_tree_gather():
+    """Encoder-decoder configs must NOT get per-layer gathers: the model
+    reads stacked decoder cross-attn weights outside the scan body
+    (``Model._cross_kvs``), which under layer specs would all-gather
+    in-graph — the bit-identity hazard DESIGN.md §3 rule 2 forbids."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.sharding import ShardedContext, ShardingStrategy, SpecMesh
+
+    cfg = get_config("seamless_m4t_large_v2").smoke()
+    assert cfg.input_mode == "encdec"
+    shapes = jax.eval_shape(Model(cfg).init, jax.random.PRNGKey(0))
+    sc = ShardedContext(SpecMesh({"data": 8}),
+                        ShardingStrategy(zero_stage=3,
+                                         tensor_parallel=False,
+                                         gather_mode="layer"))
+    plan = sc.plan_params(cfg, shapes)
+    assert plan.layer_specs is None and plan.gather_mode == "tree"
+
+
+def test_traced_layer_slice_distinguishes_modes():
+    """traced_zero_scales: the layer_slice transient term is 1x under
+    per-layer gathers and the scan length under whole-tree gathers."""
+    import dataclasses as dc
+
+    from repro.configs import get_config
+    from repro.core import MemoryStrategy, traced_strategy
+
+    cfg = dc.replace(get_config("llama3_2_3b").smoke(), num_layers=8)
+    ndp = 8
+    sL = traced_strategy(
+        MemoryStrategy("Z3", zero_stage=3, gather_mode="layer"),
+        cfg, cfg, ndp=ndp)
+    sT = traced_strategy(
+        MemoryStrategy("Z3", zero_stage=3, gather_mode="tree"),
+        cfg, cfg, ndp=ndp)
+    assert sL.scale("layer_slice", ndp=ndp) == 1.0
+    assert sT.scale("layer_slice", ndp=ndp) == 8.0
+    # below ZeRO-3 the slices are views into persistent storage: no cost
+    s1 = traced_strategy(
+        MemoryStrategy("Z1", zero_stage=1, gather_mode="tree"),
+        cfg, cfg, ndp=ndp)
+    assert s1.scale("layer_slice", ndp=ndp) == 0.0

@@ -50,6 +50,7 @@ def test_moe_dropping_is_graceful():
 
 @settings(max_examples=20, deadline=None)
 @given(st.integers(2, 64), st.integers(2, 16), st.integers(0, 2**31 - 1))
+@pytest.mark.slow
 def test_router_topk_properties(T, E, seed):
     k = min(4, E)
     logits = jax.random.normal(jax.random.PRNGKey(seed), (T, E))

@@ -8,6 +8,9 @@ import textwrap
 
 import pytest
 
+# runs (also) in the CI multidevice job's forced-device topology
+pytestmark = pytest.mark.multidevice
+
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -22,6 +25,7 @@ def _run(code: str, devices: int = 8, timeout: int = 900):
     return r.stdout
 
 
+@pytest.mark.slow
 def test_moe_shard_map_matches_fallback():
     _run("""
         import jax, jax.numpy as jnp, dataclasses
@@ -96,6 +100,7 @@ def test_sharded_train_step_matches_single_device():
     ("granite_moe_3b_a800m", "prefill_32k"),
     ("jamba_v0_1_52b", "long_500k"),
 ])
+@pytest.mark.slow
 def test_dryrun_single_combo(arch, shape):
     """One (arch x shape) dry-run compile on the 512-host-device mesh."""
     _run(f"""

@@ -173,6 +173,7 @@ def test_executor_roundtrip_repoints_aliases():
 
 # ------------------------------------------------ trainer grid + equality
 @pytest.mark.parametrize("level", OFFLOAD_LEVELS)
+@pytest.mark.slow
 def test_offload_level_x_memory_policy_grid(level):
     """Every offload level composes with every PhaseMemoryManager policy:
     one PPO step runs, losses are finite, and managed state actually
@@ -203,6 +204,7 @@ def test_offload_level_x_memory_policy_grid(level):
 
 
 @pytest.mark.parametrize("engine", ["hydra", "separate"])
+@pytest.mark.slow
 def test_two_step_ppo_loss_equality_all_vs_none(engine):
     """offload="all" must be a pure placement change: 2 PPO steps produce
     exactly the same losses/metrics as offload="none"."""
@@ -261,6 +263,7 @@ def test_offload_remat_policy_gates_on_backend():
 
 
 # ----------------------------------------------------- checkpoint to host
+@pytest.mark.slow
 def test_restore_targets_host_memory_kind(tmp_path):
     """restore(memory_kind=...) never lands leaves in device HBM: on
     backends without that kind they stay as host numpy arrays, which

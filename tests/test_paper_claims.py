@@ -33,6 +33,7 @@ def study():
     return run
 
 
+@pytest.mark.slow
 def test_r1_fragmentation_overhead_exists(study):
     """R1: peak reserved carries a significant fragmentation overhead."""
     r = study("None", "none")
@@ -40,6 +41,7 @@ def test_r1_fragmentation_overhead_exists(study):
     assert overhead > 0.15, overhead        # paper: 46% for all-enabled
 
 
+@pytest.mark.slow
 def test_r1_fragmentation_accumulates_from_inference(study):
     """R1: most fragmentation comes from the inference phases — cleaning
     only after inference recovers almost all of it."""
@@ -48,6 +50,7 @@ def test_r1_fragmentation_accumulates_from_inference(study):
     assert after_inf.frag_at_peak < 0.3 * base.frag_at_peak
 
 
+@pytest.mark.slow
 def test_r3_empty_cache_reduces_consumption(study):
     """R3: empty_cache after inference cuts peak consumption by >=15%
     (paper: 25% average) at <=8% time overhead (paper: 2%)."""
@@ -59,6 +62,7 @@ def test_r3_empty_cache_reduces_consumption(study):
     assert overhead <= 0.08, overhead
 
 
+@pytest.mark.slow
 def test_r3_placement_ablation(study):
     """R3: after_inference ~ after_all; both strictly better than none."""
     none = study("None", "none").peak_reserved
@@ -68,6 +72,7 @@ def test_r3_placement_ablation(study):
     assert abs(ai - aa) / aa < 0.10
 
 
+@pytest.mark.slow
 def test_r2_zero3_raises_fragmentation(study):
     """R2: ZeRO-3's per-layer gather churn raises fragmentation vs ZeRO-1."""
     z1 = study("ZeRO-1", "none")
@@ -77,6 +82,7 @@ def test_r2_zero3_raises_fragmentation(study):
     assert z3.peak_allocated < z1.peak_allocated
 
 
+@pytest.mark.slow
 def test_r2_offload_and_ckpt_reduce_consumption(study):
     none = study("None", "none")
     off = study("ZeRO-3 + CPU Offloading", "none")
@@ -85,6 +91,7 @@ def test_r2_offload_and_ckpt_reduce_consumption(study):
     assert ck.peak_allocated < none.peak_allocated
 
 
+@pytest.mark.slow
 def test_framework_static_cache_removes_decode_churn():
     """Beyond-paper: our fixed-capacity donated KV cache (vs the HF-style
     growing cache the paper studied) removes the decode-phase reserved

@@ -74,6 +74,7 @@ def test_continuous_batcher_eos_frees_slot():
             assert r.out_tokens[-1] == 3 or len(r.out_tokens) == 30
 
 
+@pytest.mark.slow
 def test_grpo_improves_verifiable_reward():
     cfg = _tiny_cfg()
     rl = GRPOConfig(prompt_len=8, gen_len=12, group_size=8, lr=3e-3,

@@ -10,6 +10,9 @@ from repro.models import Model
 from repro.sharding import ShardingStrategy, param_pspecs, zero_opt_pspecs
 from repro.steps import make_train_step
 
+# runs (also) in the CI multidevice job's forced-device topology
+pytestmark = pytest.mark.multidevice
+
 
 class FakeMesh:
     """Spec-validation stand-in (no devices needed)."""

@@ -43,6 +43,7 @@ def test_lm_training_reduces_loss():
     assert losses[-1] < losses[0] - 0.2, losses[::6]
 
 
+@pytest.mark.slow
 def test_rlhf_ppo_improves_verifiable_reward():
     cfg = _tiny_cfg()
     rl = RLHFConfig(prompt_len=8, gen_len=16, lr=3e-3, critic_lr=3e-3,

@@ -10,6 +10,9 @@ import textwrap
 
 import pytest
 
+# runs (also) in the CI multidevice job's forced-device topology
+pytestmark = pytest.mark.multidevice
+
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # The runtime smokes spawn multi-trainer subprocesses (minutes each); they
@@ -128,7 +131,8 @@ def test_sharded_rollout_paged_and_dense():
     tok1 = Rollout(tr1.actor, cfg, capacity=P + G, temperature=0.0,
                    top_k=0).generate(tr1.actor_state["params"],
                                      {"tokens": prompts}, G, key).tokens
-    p8 = tr8.actor_plan.gather_copy(tr8.actor_state["params"])
+    p8, owned = tr8.actor_plan.gather_copy(tr8.actor_state["params"])
+    assert owned     # ZeRO-3: a fresh copy the caller must delete
     for backend in ("dense", "paged"):
         ro = Rollout(tr8.actor, cfg, capacity=P + G, temperature=0.0,
                      top_k=0, backend=backend).generate(
