@@ -8,6 +8,7 @@ CSV rows (and the detailed tables beneath).
   placement  — empty_cache placement ablation (paper §3.3)
   generation — naive (HF-style growing cache) vs framework static cache
   paged      — dense [B, capacity] vs paged KV cache on ragged requests
+  obs        — runtime telemetry: phase spans, sim-vs-measured, overhead
   zero       — mesh-sharded ZeRO RLHF smoke on 8 forced host devices
   kernels    — wall-time microbenches of the XLA flash twin vs dense sdpa
   roofline   — summary of roofline_baseline.json if present
@@ -34,11 +35,22 @@ GB = 1 << 30
 # per-benchmark results registry: name -> {"metrics": {...}, "gated": {...}}
 RESULTS: dict = {}
 _CURRENT = [None]                   # benchmark currently executing
+# with --emit-trace: name -> Chrome-trace dict, written as TRACE_<name>.json
+TRACES: dict = {}
+_EMIT_TRACE = [False]
 
 
 def _result(name=None):
     cur = name or _CURRENT[0] or "misc"
     return RESULTS.setdefault(cur, {"name": cur, "metrics": {}, "gated": {}})
+
+
+def _trace(chrome: dict) -> None:
+    """Attach a Chrome-trace dict to the current benchmark (overrides the
+    harness's own wall-clock span trace for benches that record a richer
+    one, e.g. bench_obs's full per-phase run trace)."""
+    if _EMIT_TRACE[0] and _CURRENT[0]:
+        TRACES[_CURRENT[0]] = chrome
 
 
 def _csv(name, us, derived=""):
@@ -61,6 +73,11 @@ def write_results(out_dir: str) -> None:
         path = os.path.join(out_dir, f"BENCH_{name}.json")
         with open(path, "w") as f:
             json.dump(rec, f, indent=1, sort_keys=True)
+        print(f"[bench] wrote {path}")
+    for name, chrome in TRACES.items():
+        path = os.path.join(out_dir, f"TRACE_{name}.json")
+        with open(path, "w") as f:
+            json.dump(chrome, f)
         print(f"[bench] wrote {path}")
 
 
@@ -557,6 +574,99 @@ def bench_offload():
          f"runtime_reduction_pct={100*run_red:.0f}")
 
 
+def bench_obs():
+    """Unified runtime telemetry acceptance: a 2-step PPO run (hydra
+    engine, offload=all, zero_stage=3) must produce a Perfetto-loadable
+    Chrome trace with >= one span per canonical runtime phase carrying the
+    measured peak bytes AND the traced simulator's prediction, a JSONL that
+    ``launch/report.py`` renders with zero recomputation, and a telemetry
+    tax <= 2% of wall time (tracer self-accounting)."""
+    import dataclasses
+    import tempfile
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.phases import RUNTIME_RLHF_PHASE_SEQUENCE
+    from repro.launch.report import render
+    from repro.obs import RunTelemetry
+    from repro.rlhf import RLHFConfig, RLHFTrainer
+    from repro.rlhf.reward import make_target_token_reward
+    from repro.sharding import ShardedContext
+
+    t0 = time.time()
+    print("\n== runtime telemetry (hydra, offload=all, zero_stage=3) ==")
+    cfg = dataclasses.replace(
+        get_config("llama3_2_3b").smoke(), num_layers=2, d_model=128,
+        d_ff=256, vocab_size=64, num_heads=4, num_kv_heads=2, head_dim=32,
+        param_dtype="bfloat16")
+    rl = RLHFConfig(prompt_len=8, gen_len=16, lr=1e-3, critic_lr=1e-3,
+                    kl_coef=0.0, top_k=0, engine="hydra", lora_rank=16,
+                    offload="all")
+    shard = ShardedContext.create(1, zero_stage=3)
+    tel = RunTelemetry.create(engine="hydra", offload="all", zero_stage=3)
+    tr = RLHFTrainer(cfg, cfg, rl, jax.random.PRNGKey(0),
+                     reward_fn=make_target_token_reward(7), shard=shard,
+                     telemetry=tel)
+    key = jax.random.PRNGKey(1)
+    for s in range(2):
+        prompts = jax.random.randint(jax.random.fold_in(key, s),
+                                     (4, rl.prompt_len), 0, cfg.vocab_size)
+        tr.train_step(prompts, jax.random.fold_in(key, 100 + s))
+    wall = time.time() - t0
+
+    # one span per canonical phase, measured AND simulated peaks attached
+    by_phase = {}
+    for sp in tel.tracer.spans:
+        if sp.cat == "phase":
+            by_phase.setdefault(sp.name, []).append(sp)
+    for ph in RUNTIME_RLHF_PHASE_SEQUENCE:
+        name = "rollout" if ph == "rollout" else ph
+        assert by_phase.get(name), f"no phase span for {ph}"
+        args = by_phase[name][-1].args
+        assert "measured_peak_bytes" in args, (name, args)
+        assert "sim_peak_bytes" in args, \
+            f"{name}: simulator prediction missing from phase span"
+    n_phase = sum(len(v) for v in by_phase.values())
+    print(f"phase spans: {n_phase} over {len(by_phase)} phases "
+          f"(2 iterations x {len(RUNTIME_RLHF_PHASE_SEQUENCE)})")
+    assert n_phase == 2 * len(RUNTIME_RLHF_PHASE_SEQUENCE)
+    n_off = sum(1 for sp in tel.tracer.spans if sp.cat == "offload")
+    assert n_off > 0, "offload=all run emitted no offload spans"
+
+    # Chrome-trace schema: loadable JSON, required keys per event type
+    chrome = tel.tracer.chrome_trace()
+    chrome = json.loads(json.dumps(chrome))        # round-trip
+    assert isinstance(chrome["traceEvents"], list) and chrome["traceEvents"]
+    for ev in chrome["traceEvents"]:
+        assert ev["ph"] in ("M", "X", "i", "C"), ev
+        assert isinstance(ev["pid"], int) and isinstance(ev["tid"], int)
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0 and isinstance(ev["ts"], (int, float))
+    _trace(chrome)
+
+    # report renders the JSONL without recomputation
+    with tempfile.NamedTemporaryFile("w", suffix=".jsonl",
+                                     delete=False) as f:
+        jsonl_path = f.name
+    tel.write_jsonl(jsonl_path)
+    report = render(jsonl_path)
+    for ph in RUNTIME_RLHF_PHASE_SEQUENCE:
+        assert ("rollout" if ph == "rollout" else ph) in report
+    print(report.split("\n\n")[1])                 # the per-phase table
+    os.unlink(jsonl_path)
+
+    ov_pct = 100 * tel.tracer.overhead_fraction(wall)
+    print(f"-> telemetry self-time {tel.tracer.self_time_s*1e3:.2f} ms "
+          f"of {wall:.2f} s wall = {ov_pct:.3f}% (acceptance: <=2%)")
+    assert ov_pct <= 2.0, f"telemetry overhead {ov_pct:.2f}% > 2%"
+    _gate("telemetry_overhead_pct", ov_pct, "lower")
+    _gate("phase_spans_per_iteration", n_phase / 2, "higher")
+    _csv("obs", (time.time() - t0) * 1e6,
+         f"phase_spans={n_phase};offload_spans={n_off};"
+         f"overhead_pct={ov_pct:.3f}")
+
+
 def bench_grpo():
     """Beyond-paper: GRPO (2 models) vs PPO (4 models) peak memory."""
     from repro.configs import get_config
@@ -622,6 +732,9 @@ def bench_zero():
     # traced simulator term must bracket the measured delta
     assert metrics["layer_transient_ok"]
     assert metrics["transient_sim_bracket_ok"]
+    assert metrics["telemetry_overhead_pct"] <= 2.0
+    _gate("telemetry_overhead_pct", metrics["telemetry_overhead_pct"],
+          "lower")
     _gate("separate_zero3_cut_pct", metrics["separate_zero3_cut_pct"],
           "higher")
     _gate("hydra_zero3_cut_pct", metrics["hydra_zero3_cut_pct"], "higher")
@@ -696,6 +809,7 @@ BENCHES = {
     "paged": bench_paged,
     "hydra": bench_hydra,
     "offload": bench_offload,
+    "obs": bench_obs,
     "zero": bench_zero,
     "kernels": bench_kernels,
     "grpo": bench_grpo,
@@ -716,7 +830,11 @@ def main() -> None:
                     help="fail when a gated metric regresses >10%% vs the "
                          "committed benchmarks/baselines/BENCH_*.json")
     ap.add_argument("--baseline-dir", default=_DEFAULT_BASELINES)
+    ap.add_argument("--emit-trace", action="store_true",
+                    help="write a Chrome-trace TRACE_<name>.json sibling "
+                         "next to every BENCH_<name>.json")
     args = ap.parse_args()
+    _EMIT_TRACE[0] = args.emit_trace
     print("name,us_per_call,derived")
     try:
         for name, fn in BENCHES.items():
@@ -724,7 +842,15 @@ def main() -> None:
                 continue
             _CURRENT[0] = name
             try:
-                fn()
+                if args.emit_trace:
+                    from repro.obs import SpanTracer
+                    bench_tr = SpanTracer()
+                    with bench_tr.span(name, "bench"):
+                        fn()
+                    # a bench that recorded its own richer trace wins
+                    TRACES.setdefault(name, bench_tr.chrome_trace())
+                else:
+                    fn()
             finally:
                 _CURRENT[0] = None
     finally:

@@ -36,6 +36,7 @@ from __future__ import annotations
 import dataclasses
 import gc
 import json
+import time
 
 GB = 1 << 30
 MiB = 1 << 20
@@ -73,11 +74,12 @@ def main() -> dict:
     prompts = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
     metrics: dict = {"ndp": NDP}
 
-    def build(engine, shard, base_live):
+    def build(engine, shard, base_live, telemetry=None):
         rl = RLHFConfig(prompt_len=P, gen_len=G, lr=1e-3, critic_lr=1e-3,
                         kl_coef=0.0, top_k=0, engine=engine, lora_rank=16)
         tr = RLHFTrainer(cfg, cfg, rl, jax.random.PRNGKey(0),
-                         reward_fn=make_target_token_reward(7), shard=shard)
+                         reward_fn=make_target_token_reward(7), shard=shard,
+                         telemetry=telemetry)
         ms = [tr.train_step(prompts, jax.random.fold_in(key, s))
               for s in range(2)]
         recs = [dict(r, live_pd=r["live_bytes_per_device"] - base_live)
@@ -88,7 +90,21 @@ def main() -> dict:
     for engine in ("separate", "hydra"):
         gc.collect()
         base_live = per_device_live_bytes()
-        tr1, m1, _ = build(engine, None, base_live)
+        if engine == "separate":
+            # acceptance: enabled telemetry taxes <=2% of wall time on this
+            # bench (tracer self-accounting; sim_delta off so the one-time
+            # simulator setup isn't conflated with steady-state overhead)
+            from repro.obs import RunTelemetry
+            tel = RunTelemetry.create(sim_delta=False)
+            t0 = time.time()
+            tr1, m1, _ = build(engine, None, base_live, telemetry=tel)
+            ov_pct = 100 * tel.tracer.overhead_fraction(time.time() - t0)
+            metrics["telemetry_overhead_pct"] = round(ov_pct, 4)
+            print(f"[telemetry] self-time {tel.tracer.self_time_s*1e3:.2f} "
+                  f"ms = {ov_pct:.3f}% of the instrumented run (<=2%)")
+            assert ov_pct <= 2.0, f"telemetry overhead {ov_pct:.2f}% > 2%"
+        else:
+            tr1, m1, _ = build(engine, None, base_live)
 
         # greedy reference tokens from the ndp=1 (unsharded) state
         p1 = tr1.actor_state["params"] if engine == "separate" else \

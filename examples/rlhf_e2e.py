@@ -57,7 +57,18 @@ def main():
                          "full-finetune rate: LoRA's B=0 init scales the "
                          "effective step down)")
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--metrics-out", default="", metavar="PATH",
+                    help="write the run's telemetry JSONL (spans + metrics; "
+                         "render with python -m repro.launch.report)")
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="write a Chrome-trace JSON (Perfetto-loadable)")
     args = ap.parse_args()
+    telemetry = None
+    if args.metrics_out or args.trace_out:
+        from repro.obs import RunTelemetry
+        telemetry = RunTelemetry.create(
+            engine=args.engine, offload=args.offload,
+            memory_policy=args.memory_policy)
 
     cfg = dataclasses.replace(
         get_config("llama3_2_3b").smoke(), num_layers=args.layers,
@@ -78,7 +89,8 @@ def main():
         shard = ShardedContext.create(args.ndp, zero_stage=args.zero_stage)
         print(f"mesh-sharded: ndp={args.ndp} zero_stage={args.zero_stage}")
     trainer = RLHFTrainer(cfg, cfg, rl, jax.random.PRNGKey(0),
-                          reward_fn=make_target_token_reward(7), shard=shard)
+                          reward_fn=make_target_token_reward(7), shard=shard,
+                          telemetry=telemetry)
     if shard is not None:
         print(f"per-device persistent state: "
               f"{trainer.per_device_state_bytes()/2**20:.2f} MiB")
@@ -119,6 +131,11 @@ def main():
                   else {"base": trainer.base_params,
                         "actor_adapter": trainer.actor_state["params"]})
         print("saved:", save(args.ckpt_dir, args.steps, params))
+    if telemetry is not None:
+        telemetry.write(args.metrics_out or None, args.trace_out or None)
+        for p in (args.metrics_out, args.trace_out):
+            if p:
+                print("telemetry:", p)
 
 
 if __name__ == "__main__":

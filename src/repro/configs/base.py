@@ -88,7 +88,7 @@ class ModelConfig:
     tie_embeddings: bool = False
     norm_eps: float = 1e-5
     mtp_depth: int = 0                        # DeepSeek multi-token prediction
-    # --- numerics / memory defaults (see DESIGN.md §5) ----------------------
+    # --- numerics / memory defaults (see DESIGN.md §6) ----------------------
     param_dtype: str = "bfloat16"
     optimizer: str = "adamw"                  # adamw | adamw_bf16 | adafactor
     remat: str = "full"                       # none | dots | full | offload

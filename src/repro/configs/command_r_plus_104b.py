@@ -14,7 +14,7 @@ CONFIG = register(ModelConfig(
     qkv_bias=False,
     rope_theta=75_000_000.0,
     tie_embeddings=True,
-    # >=100B on a 256-chip v5e pod: bf16 Adam moments (DESIGN.md §5)
+    # >=100B on a 256-chip v5e pod: bf16 Adam moments (DESIGN.md §6)
     optimizer="adamw_bf16",
     microbatches=2,           # same trade as qwen1_5_110b (§Perf C)
     source="[hf:CohereForAI/c4ai-command-r-v01]",

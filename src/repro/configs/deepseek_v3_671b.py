@@ -19,7 +19,7 @@ CONFIG = register(ModelConfig(
     mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512,
                   qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128),
     mtp_depth=1,
-    # 671B on 256 v5e chips: factored second moment only (DESIGN.md §5)
+    # 671B on 256 v5e chips: factored second moment only (DESIGN.md §6)
     optimizer="adafactor",
     microbatches=4,           # §Perf hillclimb A: M -20%, X -31% vs mb=8
     source="[arXiv:2412.19437]",

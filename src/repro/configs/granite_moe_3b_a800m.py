@@ -1,6 +1,6 @@
 """granite-moe-3b-a800m [moe] — MoE 40e top-8 per the assigned structured
 field (the bracket note says 32 experts; we follow the structured field,
-see DESIGN.md §5) [hf:ibm-granite/granite-3.0-1b-a400m-base]."""
+see DESIGN.md §6) [hf:ibm-granite/granite-3.0-1b-a400m-base]."""
 from repro.configs.base import ATTN, ModelConfig, MoEConfig, register
 
 CONFIG = register(ModelConfig(

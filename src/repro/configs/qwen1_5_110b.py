@@ -13,7 +13,7 @@ CONFIG = register(ModelConfig(
     period=(ATTN,),
     qkv_bias=True,
     rope_theta=1_000_000.0,
-    optimizer="adamw_bf16",   # >=100B, see DESIGN.md §5
+    optimizer="adamw_bf16",   # >=100B, see DESIGN.md §6
     microbatches=2,           # §Perf hillclimb C: X -49%, M -26% vs mb=4
     source="[hf:Qwen/Qwen1.5-0.5B]",
 ))

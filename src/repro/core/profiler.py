@@ -26,6 +26,12 @@ malloc'd after the boundary record (the runtime fetch is an async
 ``device_put`` issued at the same point). Swap traffic pays a PCIe-bandwidth
 term that overlaps phase compute: per phase, max(compute/HBM time, swap
 time).
+
+The simulator's predictions are also emitted at *runtime*: a trainer run
+with a ``repro.obs.RunTelemetry`` attached replays ``run_iteration`` once
+and rides each phase's predicted bytes on the measured phase span
+(``sim_peak_bytes`` / ``sim_delta_bytes``), so sim-vs-measured divergence
+is a first-class metric in every trace — see DESIGN.md §4.
 """
 from __future__ import annotations
 
@@ -38,7 +44,8 @@ from repro.core.strategies import MemoryStrategy, offload_managed_states
 
 POLICIES = ("none", "after_inference", "after_training", "after_all")
 
-# time model constants (documented in EXPERIMENTS.md §Paper-claims)
+# time model constants (rationale in DESIGN.md §1; exercised by
+# tests/test_paper_claims.py)
 _FLOPS_RATE = 60e12            # sustained bf16 FLOP/s per GPU (3090-class)
 _HBM_BW = 800e9                # B/s
 _CUDA_MALLOC_MS = 0.75         # cudaMalloc/cudaFree latency

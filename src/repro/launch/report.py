@@ -1,0 +1,176 @@
+"""Render a run's telemetry JSONL (``repro.obs.RunTelemetry.write_jsonl``)
+as a per-phase table and an ASCII memory timeline.
+
+Everything printed here is read straight off the file — phase wall times,
+measured/simulated bytes and PCIe traffic all rode the spans when the run
+recorded them, so the report involves zero recomputation (and can be run
+on another machine, long after the run).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.report RUN.jsonl [--width 64]
+  PYTHONPATH=src python -m repro.launch.report RUN.jsonl --metrics
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_MIB = 2 ** 20
+
+
+def load(path: str) -> Tuple[dict, List[dict], List[dict], List[dict]]:
+    """Split a telemetry JSONL into (meta, spans+instants, samples,
+    metrics)."""
+    meta: dict = {}
+    events: List[dict] = []
+    samples: List[dict] = []
+    metrics: List[dict] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            t = rec.get("type")
+            if t == "meta":
+                meta = rec
+            elif t == "sample":
+                samples.append(rec)
+            elif t == "metric":
+                metrics.append(rec)
+            elif t in ("span", "instant"):
+                events.append(rec)
+    return meta, events, samples, metrics
+
+
+def phase_table(events: List[dict]) -> str:
+    """Aggregate the ``cat == "phase"`` spans per phase name, preserving
+    first-seen order (the canonical phase sequence)."""
+    rows: Dict[str, dict] = {}
+    order: List[str] = []
+    for ev in events:
+        if ev.get("type") != "span" or ev.get("cat") != "phase":
+            continue
+        name, args = ev["name"], ev.get("args", {})
+        if name not in rows:
+            order.append(name)
+            rows[name] = {"n": 0, "wall_us": 0.0, "live": 0, "peak": 0,
+                          "host": 0, "pcie": 0.0, "sim": None, "delta": None}
+        r = rows[name]
+        r["n"] += 1
+        r["wall_us"] += ev.get("dur_us", 0.0)
+        r["live"] = max(r["live"], args.get("measured_bytes", 0))
+        r["peak"] = max(r["peak"], args.get("measured_peak_bytes", 0))
+        r["host"] = max(r["host"], args.get("host_bytes", 0))
+        r["pcie"] += args.get("pcie_bytes", 0)
+        if "sim_peak_bytes" in args:
+            r["sim"] = args["sim_peak_bytes"]
+            r["delta"] = args.get("sim_delta_bytes")
+    if not rows:
+        return "(no phase spans in file)"
+    hdr = (f"{'phase':16s} {'n':>3s} {'wall ms':>9s} {'live MiB':>9s} "
+           f"{'peak MiB':>9s} {'host MiB':>9s} {'PCIe MiB':>9s} "
+           f"{'sim MiB':>9s} {'delta MiB':>10s}")
+    out = [hdr, "-" * len(hdr)]
+    for name in order:
+        r = rows[name]
+        sim = f"{r['sim']/_MIB:9.2f}" if r["sim"] is not None else f"{'-':>9s}"
+        dl = (f"{r['delta']/_MIB:+10.2f}" if r["delta"] is not None
+              else f"{'-':>10s}")
+        out.append(f"{name:16s} {r['n']:3d} {r['wall_us']/1e3:9.1f} "
+                   f"{r['live']/_MIB:9.2f} {r['peak']/_MIB:9.2f} "
+                   f"{r['host']/_MIB:9.2f} {r['pcie']/_MIB:9.2f} {sim} {dl}")
+    return "\n".join(out)
+
+
+def timeline(samples: List[dict], *, track: str = "memory",
+             key: str = "device_mib", width: int = 64,
+             height: int = 10) -> str:
+    """ASCII area chart of one counter-track series over the run."""
+    pts = [(s["ts_us"], s["values"][key]) for s in samples
+           if s.get("track") == track and key in s.get("values", {})]
+    if len(pts) < 2:
+        return f"(no '{track}/{key}' samples in file)"
+    pts.sort()
+    t_lo, t_hi = pts[0][0], pts[-1][0]
+    v_hi = max(v for _, v in pts) or 1.0
+    # bucket samples into `width` columns, keep each column's max
+    cols: List[Optional[float]] = [None] * width
+    for t, v in pts:
+        c = min(int((t - t_lo) / max(t_hi - t_lo, 1) * (width - 1)),
+                width - 1)
+        cols[c] = v if cols[c] is None else max(cols[c], v)
+    last = 0.0
+    for i, c in enumerate(cols):          # carry last value through gaps
+        last = last if c is None else c
+        cols[i] = last
+    grid = []
+    for row in range(height, 0, -1):
+        thr = v_hi * (row - 0.5) / height
+        line = "".join("█" if v >= thr else " " for v in cols)
+        label = f"{v_hi * row / height:8.1f} |" if row in (1, height) \
+            else f"{'':8s} |"
+        grid.append(label + line)
+    grid.append(f"{'':8s} +" + "-" * width)
+    grid.append(f"{'':10s}0 ms{'':{max(width - 18, 1)}s}"
+                f"{(t_hi - t_lo)/1e3:8.1f} ms")
+    return "\n".join(grid)
+
+
+def metric_lines(metrics: List[dict]) -> str:
+    out = []
+    for m in metrics:
+        lab = ",".join(f"{k}={v}" for k, v in sorted(
+            m.get("labels", {}).items()))
+        name = m["name"] + (f"{{{lab}}}" if lab else "")
+        if m["kind"] == "histogram":
+            mean = m["sum"] / m["count"] if m["count"] else 0.0
+            out.append(f"  {name:48s} n={m['count']} mean={mean:.6g} "
+                       f"max={m['max']:.6g}")
+        else:
+            peak = f" peak={m['peak']:.6g}" if "peak" in m else ""
+            out.append(f"  {name:48s} {m['value']:.6g}{peak}")
+    return "\n".join(out) if out else "  (no metrics in file)"
+
+
+def render(path: str, *, width: int = 64, show_metrics: bool = False) -> str:
+    meta, events, samples, metrics = load(path)
+    run_meta = {k: v for k, v in meta.items()
+                if k not in ("type", "t0_wall", "written")}
+    out = [f"telemetry report: {path}"]
+    if run_meta:
+        out.append("  " + " ".join(f"{k}={v}" for k, v in
+                                   sorted(run_meta.items())))
+    n_off = sum(1 for e in events if e.get("cat") == "offload")
+    n_srv = sum(1 for e in events if e.get("cat") == "serving")
+    out += ["", phase_table(events), "",
+            "live device memory (MiB) over the run:",
+            timeline(samples, width=width)]
+    host = [s for s in samples if s.get("track") == "memory"
+            and s.get("values", {}).get("host_mib")]
+    if host:
+        out += ["", "host (parked) memory (MiB) over the run:",
+                timeline(samples, key="host_mib", width=width)]
+    if n_off or n_srv:
+        out += ["", f"other spans: {n_off} offload, {n_srv} serving"]
+    if show_metrics:
+        out += ["", "metrics snapshot:", metric_lines(metrics)]
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("jsonl", help="run telemetry JSONL "
+                                  "(RunTelemetry.write_jsonl output)")
+    ap.add_argument("--width", type=int, default=64,
+                    help="timeline width in columns")
+    ap.add_argument("--metrics", action="store_true",
+                    help="also print the final metrics snapshot")
+    args = ap.parse_args()
+    print(render(args.jsonl, width=args.width, show_metrics=args.metrics))
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,7 @@ All functions are pure; parameters are plain dicts of jnp arrays. Projection
 weights are stored with *fused* head dims (``[d_model, heads*head_dim]``) so
 that tensor-parallel sharding over the ``model`` mesh axis stays divisible
 even when the head count is not (e.g. granite's 24 heads on a 16-way axis) —
-see DESIGN.md §5.
+see DESIGN.md §6.
 """
 from __future__ import annotations
 

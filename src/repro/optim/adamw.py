@@ -1,5 +1,5 @@
 """AdamW with configurable moment dtype (fp32, or bf16 for the >=100B
-configs — see DESIGN.md §5). Pure pytree functions; shard specs for the
+configs — see DESIGN.md §6). Pure pytree functions; shard specs for the
 optimizer state are derived from the parameter specs (ZeRO: the caller
 re-spec's them onto the data axis)."""
 from __future__ import annotations

@@ -4,9 +4,10 @@ from repro.rlhf.ppo import gae, kl_shaped_rewards, whiten
 from repro.rlhf.rollout import Rollout, RolloutResult, sample_token
 from repro.rlhf.trainer import (MEMORY_POLICIES, PhaseMemoryManager,
                                 RLHFConfig, RLHFTrainer, live_device_bytes,
-                                per_device_live_bytes)
+                                live_host_bytes, per_device_live_bytes)
 
 __all__ = ["ModelEngine", "ExperienceBuffer", "gae", "kl_shaped_rewards",
            "whiten", "Rollout", "RolloutResult", "sample_token",
            "MEMORY_POLICIES", "PhaseMemoryManager", "RLHFConfig",
-           "RLHFTrainer", "live_device_bytes", "per_device_live_bytes"]
+           "RLHFTrainer", "live_device_bytes", "live_host_bytes",
+           "per_device_live_bytes"]

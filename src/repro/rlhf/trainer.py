@@ -60,7 +60,8 @@ def _jit_step(step):
 
 def live_device_bytes() -> int:
     """Live *device* bytes: arrays parked in the host memory kind by the
-    offload subsystem don't count (numpy fallback copies never did)."""
+    offload subsystem don't count (numpy fallback copies never did) — they
+    are accounted by :func:`live_host_bytes` instead."""
     from repro.kernels import compat
     host_kind = compat.host_memory_kind()
     total = 0
@@ -72,16 +73,39 @@ def live_device_bytes() -> int:
     return total
 
 
-def per_device_live_bytes() -> int:
+def live_host_bytes() -> int:
+    """Live bytes of jax arrays placed in the *host* memory kind — the
+    other half of :func:`live_device_bytes`, so offloaded state (parked
+    role trees, remat-offloaded residuals) no longer vanishes from all
+    accounting. Note the committed-numpy fallback transport parks plain
+    ``np.ndarray`` copies that are not jax arrays; those are accounted by
+    ``HostParkingLot.parked_bytes()`` and the two figures are merged with
+    ``max`` (never summed — memory-kind parks appear in both) by
+    ``PhaseMemoryManager._record``."""
+    from repro.kernels import compat
+    host_kind = compat.host_memory_kind()
+    if host_kind is None:
+        return 0
+    return sum(getattr(a, "nbytes", 0) for a in jax.live_arrays()
+               if getattr(a.sharding, "memory_kind", None) == host_kind)
+
+
+def per_device_live_bytes(memory: str = "device") -> int:
     """Max-over-devices live bytes — the per-device HBM figure ZeRO cuts.
     Replicated arrays cost full size on every device; ZeRO-3-sharded trees
-    cost 1/ndp. Equal to :func:`live_device_bytes` on one device."""
+    cost 1/ndp. Equal to :func:`live_device_bytes` on one device.
+
+    ``memory="host"`` counts host-memory-kind arrays instead (their
+    shards live in each device's pinned host segment), so parked state is
+    accounted per device by the same shard walk rather than vanishing."""
+    assert memory in ("device", "host"), memory
     from repro.kernels import compat
     host_kind = compat.host_memory_kind()
     per: Dict[Any, int] = {}
     for a in jax.live_arrays():
-        if host_kind is not None and \
-                getattr(a.sharding, "memory_kind", None) == host_kind:
+        on_host = host_kind is not None and \
+            getattr(a.sharding, "memory_kind", None) == host_kind
+        if on_host != (memory == "host"):
             continue
         shards = getattr(a, "addressable_shards", None)
         if not shards:
@@ -101,35 +125,129 @@ class PhaseMemoryManager:
     doesn't touch *before* the live-bytes record (so eviction shows in the
     curve), async-fetch the next phase's trees after it — mirroring the
     park -> empty_cache -> record -> fetch order of the allocator
-    simulator's boundary model."""
+    simulator's boundary model.
+
+    With a ``telemetry`` bundle attached (``obs.RunTelemetry``), every
+    boundary additionally closes one tracer span per canonical runtime
+    phase — carrying the measured live/host/PCIe bytes of the record it
+    just took (zero recomputation) plus, when the trainer attached
+    ``sim_phase_bytes``, the traced allocator-simulator's predicted bytes
+    for that phase and the sim-vs-measured delta — and feeds the metrics
+    registry (``rlhf_phase_*``). Phase spans tile the iteration exactly:
+    each span runs from the previous boundary (or ``iteration_start``) to
+    this one."""
     # none | after_inference | after_training | after_all
     policy: str = "after_inference"
     records: List[dict] = field(default_factory=list)
     offload: Optional[Any] = None      # offload.OffloadExecutor
+    telemetry: Optional[Any] = None    # obs.RunTelemetry
+    # runtime phase -> {"sim_bytes", "sim_peak_bytes"} from the traced
+    # simulator (attached lazily by RLHFTrainer when sim_delta is on)
+    sim_phase_bytes: Dict[str, dict] = field(default_factory=dict)
 
     def __post_init__(self):
         if self.policy not in MEMORY_POLICIES:
             raise ValueError(
                 f"unknown memory policy {self.policy!r}; "
                 f"expected one of {MEMORY_POLICIES}")
+        self._phase_t0: Optional[float] = None   # tracer µs of phase start
+        self._phase_peak = 0                     # mid-phase sample peak
+        self._pcie_mark = 0                      # lot traffic at phase start
+        self._iter_n = 0
 
-    def _record(self, phase: str, kind: str, **extra):
+    def _record(self, phase: str, kind: str, **extra) -> dict:
         live = live_device_bytes()
+        # host-side accounting: memory-kind parks are live jax arrays
+        # (live_host_bytes) AND lot entries; numpy-fallback parks are lot
+        # entries only — max() merges without double counting
+        host = live_host_bytes()
+        if self.offload is not None:
+            host = max(host, self.offload.lot.parked_bytes())
         rec = {"phase": phase, "kind": kind,
                "live_bytes": live,
                "live_bytes_per_device": (per_device_live_bytes()
                                          if jax.device_count() > 1 else live),
-               "host_bytes": (self.offload.lot.parked_bytes()
-                              if self.offload is not None else 0),
+               "host_bytes": host,
                "t": time.time()}
         rec.update(extra)
         self.records.append(rec)
+        return rec
+
+    # ----------------------------------------------------------- telemetry
+    def _pcie_total(self) -> int:
+        if self.offload is None:
+            return 0
+        st = self.offload.lot.stats
+        return st.bytes_parked_total + st.bytes_fetched_total
+
+    def iteration_start(self):
+        """Open the per-iteration parent span (telemetry only)."""
+        if self.telemetry is None:
+            return
+        tr = self.telemetry.tracer
+        tr.begin("ppo_iteration", cat="iteration", n=self._iter_n)
+        self._phase_t0 = tr.now_us()
+        self._phase_peak = 0
+        self._pcie_mark = self._pcie_total()
+
+    def iteration_end(self, **args):
+        if self.telemetry is None:
+            return
+        self.telemetry.tracer.end(**args)
+        self.telemetry.registry.counter(
+            "rlhf_iterations_total", "completed PPO iterations").inc()
+        self._iter_n += 1
+        self._phase_t0 = None
+
+    def _emit_phase_span(self, phase: str, kind: str, rec: dict):
+        tel = self.telemetry
+        tr = tel.tracer
+        now = tr.now_us()
+        t0 = self._phase_t0 if self._phase_t0 is not None else now
+        pcie_now = self._pcie_total()
+        args = {"kind": kind,
+                "measured_bytes": rec["live_bytes"],
+                "measured_peak_bytes": max(rec["live_bytes"],
+                                           self._phase_peak),
+                "measured_bytes_per_device": rec["live_bytes_per_device"],
+                "host_bytes": rec["host_bytes"],
+                "pcie_bytes": pcie_now - self._pcie_mark}
+        sim = self.sim_phase_bytes.get(phase)
+        if sim is not None:
+            args.update(sim)
+            args["sim_delta_bytes"] = rec["live_bytes"] - sim["sim_bytes"]
+        tr.complete(phase, "phase", t0, now - t0, **args)
+        tr.sample("memory", {"device_mib": rec["live_bytes"] / 2**20,
+                             "host_mib": rec["host_bytes"] / 2**20},
+                  ts_us=now)
+        reg = tel.registry
+        reg.counter("rlhf_phase_total", "phase boundaries crossed").inc(
+            phase=phase)
+        reg.gauge("rlhf_phase_live_bytes",
+                  "live device bytes at phase end").set(
+            rec["live_bytes"], phase=phase)
+        reg.gauge("rlhf_phase_host_bytes",
+                  "host-resident bytes at phase end").set(
+            rec["host_bytes"], phase=phase)
+        reg.histogram("rlhf_phase_seconds", "wall time per phase").observe(
+            (now - t0) / 1e6, phase=phase)
+        self._phase_t0 = now
+        self._phase_peak = 0
+        self._pcie_mark = pcie_now
 
     def sample(self, phase: str, kind: str = "inference"):
         """Mid-phase measurement point (no hygiene): used where the live
         set changes inside a phase — e.g. hydra rollout decode, where the
         trunk's adapted leaves are parked while merged weights serve."""
-        self._record(phase, kind, sample=True)
+        rec = self._record(phase, kind, sample=True)
+        self._phase_peak = max(self._phase_peak, rec["live_bytes"])
+        if self.telemetry is not None:
+            tr = self.telemetry.tracer
+            tr.instant(f"{phase}:sample", cat="phase",
+                       measured_bytes=rec["live_bytes"],
+                       host_bytes=rec["host_bytes"])
+            tr.sample("memory", {"device_mib": rec["live_bytes"] / 2**20,
+                                 "host_mib": rec["host_bytes"] / 2**20})
 
     def boundary(self, phase: str, kind: str, *drop):
         for tree in drop:
@@ -143,7 +261,9 @@ class PhaseMemoryManager:
                 or (self.policy == "after_inference" and kind == "inference")
                 or (self.policy == "after_training" and kind == "training")):
             gc.collect()
-        self._record(phase, kind)
+        rec = self._record(phase, kind)
+        if self.telemetry is not None:
+            self._emit_phase_span(phase, kind, rec)
         if self.offload is not None:
             self.offload.fetch_for_boundary(phase)
 
@@ -209,7 +329,7 @@ class RLHFTrainer:
 
     def __init__(self, actor_cfg: ModelConfig, critic_cfg: ModelConfig,
                  rl: RLHFConfig, key, reward_fn: Optional[Callable] = None,
-                 shard=None):
+                 shard=None, telemetry=None):
         assert rl.engine in ("separate", "hydra"), rl.engine
         if rl.batch_shard not in ("strict", "throughput"):
             raise ValueError(
@@ -219,7 +339,11 @@ class RLHFTrainer:
         self.actor_cfg, self.critic_cfg = actor_cfg, critic_cfg
         self.reward_fn = reward_fn
         self.shard = shard
-        self.memory = PhaseMemoryManager(policy=rl.memory_policy)
+        self.telemetry = telemetry          # obs.RunTelemetry | None
+        self._sim_attached = False
+        self._gather_step_bytes: Optional[int] = None
+        self.memory = PhaseMemoryManager(policy=rl.memory_policy,
+                                         telemetry=telemetry)
         if rl.engine == "hydra":
             self._init_hydra(actor_cfg, rl, key)
         else:
@@ -312,7 +436,8 @@ class RLHFTrainer:
         plan = OffloadPlan.compile(rl.offload, engine=rl.engine,
                                    states=states, frozen_unused=unused)
         self.offload_lot = HostParkingLot()
-        self.offload = OffloadExecutor(plan, self.offload_lot, states)
+        self.offload = OffloadExecutor(plan, self.offload_lot, states,
+                                       telemetry=self.telemetry)
         self.memory.offload = self.offload
         self.offload.start()
 
@@ -625,6 +750,90 @@ class RLHFTrainer:
             self.engine.ref_logits(params, batch, layer_specs=layer_specs),
             batch["tokens"], _prefix_len(self.actor_cfg))
 
+    # ----------------------------------------------------------- telemetry
+    def _attach_sim_predictions(self, batch_size: int) -> None:
+        """Run the traced allocator simulator once for THIS run's exact
+        shape (engine, batch, lengths, offload level) and attach its
+        per-phase predicted bytes to the memory manager, so every phase
+        span carries a sim-vs-measured delta. One-time setup (lazy, at the
+        first train_step); failures degrade to spans without predictions
+        rather than killing the run."""
+        try:
+            from repro.core import (MemoryStrategy, build_rlhf_phases,
+                                    run_iteration)
+            from repro.models import layers as _L
+            # build_rlhf_phases raises the flash threshold for its traces;
+            # restore it so telemetry can never perturb the run's numerics
+            flash_min = _L.FLASH_MIN_ELEMS
+            try:
+                ph, persist = build_rlhf_phases(
+                    self.actor_cfg, self.critic_cfg, batch=batch_size,
+                    prompt_len=self.rl.prompt_len, gen_len=self.rl.gen_len,
+                    engine=self.rl.engine, lora_rank=self.rl.lora_rank,
+                    grad_ckpt=(self.actor_cfg.remat == "full"),
+                    ppo_epochs=self.rl.ppo_epochs, min_bytes=2048)
+            finally:
+                _L.FLASH_MIN_ELEMS = flash_min
+            r = run_iteration(
+                ph, persist,
+                MemoryStrategy("None", offload=self.rl.offload,
+                               grad_ckpt=(self.actor_cfg.remat == "full")),
+                "none", ndp=1, trainable_fraction=1.0, capacity=None)
+            sim: Dict[str, dict] = {}
+            for rec in r.phase_records:
+                name = "rollout" if rec.name.startswith("rollout") \
+                    else rec.name
+                cur = sim.setdefault(name, {"sim_bytes": 0,
+                                            "sim_peak_bytes": 0})
+                cur["sim_bytes"] = rec.allocated_end
+                cur["sim_peak_bytes"] = max(cur["sim_peak_bytes"],
+                                            rec.alloc_peak)
+            self.memory.sim_phase_bytes = sim
+        except Exception as e:                        # pragma: no cover
+            import warnings
+            warnings.warn(f"telemetry: simulator prediction unavailable "
+                          f"({e!r}); phase spans carry measured bytes only",
+                          stacklevel=2)
+
+    def _role_gather_bytes(self) -> Dict[str, int]:
+        """Analytic ZeRO-3 all-gather bytes per update program (cached):
+        what the in-jit tree/layer gathers move each time the actor /
+        critic step runs — Python can't observe in-scan collectives, so
+        the counter is fed from the plan (DESIGN.md §4)."""
+        if self._gather_step_bytes is None:
+            ga = gc_ = 0
+            if self.rl.engine == "hydra":
+                bp = self.engine.base_plan
+                trunk = 0 if bp is None else \
+                    bp.gathered_bytes(self.base_params)
+
+                def role_bytes(role):
+                    pl = self.engine.adapter_plans.get(role)
+                    ad = self.engine.adapters[role]
+                    return trunk + (0 if pl is None
+                                    else pl.gathered_bytes(ad))
+
+                ga, gc_ = role_bytes("actor"), role_bytes("critic")
+            else:
+                if self.actor_plan is not None:
+                    ga = self.actor_plan.gathered_bytes(
+                        self.actor_state["params"])
+                if self.critic_plan is not None:
+                    gc_ = self.critic_plan.gathered_bytes(
+                        self.critic_state["params"])
+            self._gather_step_bytes = {"train_actor": ga, "train_critic": gc_}
+        return self._gather_step_bytes
+
+    def _count_gather(self, program: str) -> None:
+        if self.telemetry is None:
+            return
+        b = self._role_gather_bytes().get(program, 0)
+        if b:
+            self.telemetry.registry.counter(
+                "sharding_step_gathered_bytes_total",
+                "bytes all-gathered by ZeRO-3 per update program "
+                "(analytic, from the TreePlan)").inc(b, program=program)
+
     def make_experience(self, prompts: jax.Array, key) -> Dict[str, Any]:
         """Phases 1-5: rollout + the four scoring inferences -> experience.
         Straight-line over the engine-bound callables from ``_init_*``, in
@@ -666,6 +875,11 @@ class RLHFTrainer:
 
     def train_step(self, prompts: jax.Array, key) -> Dict[str, float]:
         """One full PPO iteration (all seven phases)."""
+        if self.telemetry is not None:
+            if self.telemetry.sim_delta and not self._sim_attached:
+                self._sim_attached = True
+                self._attach_sim_predictions(int(prompts.shape[0]))
+            self.memory.iteration_start()
         exp = self.make_experience(prompts, key)
         mean_reward = float(exp.pop("mean_reward"))
         old_values = exp.pop("old_values")
@@ -673,11 +887,15 @@ class RLHFTrainer:
         for _ in range(self.rl.ppo_epochs):
             m = self._actor_update(exp)
             metrics.update({k: float(v) for k, v in m.items()})
+            self._count_gather("train_actor")
         self.memory.boundary("train_actor", "training")
         cbatch = dict(exp, old_values=old_values)
         for _ in range(self.rl.ppo_epochs):
             mc = self._critic_update(cbatch)
             metrics.update({k: float(v) for k, v in mc.items()})
+            self._count_gather("train_critic")
         self.memory.boundary("train_critic", "training", exp, cbatch)
         metrics["mean_reward"] = mean_reward
+        if self.telemetry is not None:
+            self.memory.iteration_end(mean_reward=mean_reward)
         return metrics

@@ -20,6 +20,7 @@ decode into garbage that is masked out.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Deque, List, Optional
 
@@ -40,6 +41,7 @@ class Request:
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     n_preempted: int = 0
+    t_submit: float = 0.0        # wall time at submit(); admission latency
 
 
 class ContinuousBatcher:
@@ -48,8 +50,9 @@ class ContinuousBatcher:
                  temperature: float = 1.0, top_k: int = 0,
                  eos_id: Optional[int] = None, seed: int = 0,
                  cache_backend: str = "dense", page_size: int = 16,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None, telemetry=None):
         assert cache_backend in ("dense", "paged"), cache_backend
+        self.telemetry = telemetry          # obs.RunTelemetry | None
         self.model, self.cfg, self.params = model, cfg, params
         self.B, self.capacity = slots, capacity
         self.temperature, self.top_k, self.eos_id = temperature, top_k, eos_id
@@ -115,9 +118,13 @@ class ContinuousBatcher:
             raise ValueError(
                 f"request needs {len(prompt) + max_new_tokens} tokens, "
                 f"capacity is {self.capacity}")
-        req = Request(self._next_rid, prompt, max_new_tokens)
+        req = Request(self._next_rid, prompt, max_new_tokens,
+                      t_submit=time.perf_counter())
         self._next_rid += 1
         self.queue.append(req)
+        if self.telemetry is not None:
+            self.telemetry.registry.counter(
+                "serving_requests_total", "requests submitted").inc()
         return req
 
     # -- paged helpers -------------------------------------------------------
@@ -152,6 +159,13 @@ class ContinuousBatcher:
         req.n_preempted += 1
         self.queue.appendleft(req)
         self.active[s] = None
+        if self.telemetry is not None:
+            self.telemetry.registry.counter(
+                "serving_preemptions_total",
+                "requests preempted on page-pool exhaustion").inc()
+            self.telemetry.tracer.instant(
+                f"preempt:r{req.rid}", "serving", rid=req.rid,
+                n_preempted=req.n_preempted)
         return True
 
     # -- internals -----------------------------------------------------------
@@ -191,6 +205,17 @@ class ContinuousBatcher:
                 self.pos[s] = P
                 self.last_tok[s] = int(tok[0])
                 req.out_tokens.append(int(tok[0]))
+                if self.telemetry is not None:
+                    reg = self.telemetry.registry
+                    reg.counter("serving_admissions_total",
+                                "admissions incl. preemption re-admits").inc()
+                    # latency only for first admission: a re-admit's wait is
+                    # a preemption artifact, not queueing delay
+                    if req.n_preempted == 0:
+                        reg.histogram(
+                            "serving_admission_latency_s",
+                            "submit -> first admission wall time").observe(
+                            time.perf_counter() - req.t_submit)
 
     def _retire(self):
         done = []
@@ -224,9 +249,56 @@ class ContinuousBatcher:
                     if not self._preempt_youngest(protect=s):
                         raise
 
+    def _emit_step(self, t0_us: float, n_tokens: int, n_done: int) -> None:
+        """One ``serve_step`` span + the backend occupancy/throughput
+        metrics, all read from state the step already maintains."""
+        tel = self.telemetry
+        tr = tel.tracer
+        dur_us = tr.now_us() - t0_us
+        args = {"tokens": n_tokens, "retired": n_done,
+                "queued": len(self.queue),
+                "active": sum(r is not None for r in self.active),
+                "kv_reserved_bytes": self.kv_reserved_bytes()}
+        reg = tel.registry
+        if n_tokens:
+            reg.counter("serving_tokens_total",
+                        "tokens generated (prefill-sampled + decoded)").inc(
+                n_tokens)
+        if dur_us > 0:
+            reg.gauge("serving_tokens_per_s",
+                      "decode throughput of the last step").set(
+                n_tokens / (dur_us * 1e-6))
+        if self.backend == "paged":
+            st = self.pm.stats
+            args.update(pages_in_use=st.pages_in_use,
+                        cow_copies=st.n_cow_copies - self._cow_mark,
+                        forks=st.n_forks - self._fork_mark)
+            self._cow_mark, self._fork_mark = st.n_cow_copies, st.n_forks
+            reg.gauge("paged_pages_in_use",
+                      "pages currently allocated").set(st.pages_in_use)
+            reg.gauge("paged_pages_free", "pages currently free").set(
+                self.pm.num_pages - st.pages_in_use)
+            cow = reg.counter("paged_cow_copies_total",
+                              "copy-on-write page copies")
+            cow.inc(st.n_cow_copies - cow.value())
+            forks = reg.counter("paged_forks_total", "sequence forks")
+            forks.inc(st.n_forks - forks.value())
+            tr.sample("pages", {"in_use": st.pages_in_use,
+                                "free": self.pm.num_pages - st.pages_in_use},
+                      ts_us=t0_us + dur_us)
+        tr.complete(f"serve_step:{self.steps - 1}", "serving", t0_us, dur_us,
+                    **args)
+
     def step(self) -> List[Request]:
         """Admit, one decode step for all live slots, retire. Returns the
         requests completed this step."""
+        t0_us = None
+        if self.telemetry is not None:
+            t0_us = self.telemetry.tracer.now_us()
+            if not hasattr(self, "_cow_mark"):
+                self._cow_mark = self._fork_mark = 0
+        tokens_before = self._tokens_outstanding() \
+            if self.telemetry is not None else 0
         self._admit()
         if self.backend == "paged":
             self._grow_pages()
@@ -251,7 +323,20 @@ class ContinuousBatcher:
                     self.last_tok[s] = int(tok[s])
                     self.pos[s] += 1
         self.steps += 1
-        return self._retire()
+        done = self._retire()
+        if self.telemetry is not None:
+            n_tokens = (self._tokens_outstanding()
+                        + sum(len(r.out_tokens) for r in done)
+                        - tokens_before)
+            self._emit_step(t0_us, n_tokens, len(done))
+        return done
+
+    def _tokens_outstanding(self) -> int:
+        """Generated tokens held by not-yet-retired requests (active or
+        queued — preemption re-queues with tokens kept, so the per-step
+        delta against this sum counts each token exactly once)."""
+        return (sum(len(r.out_tokens) for r in self.active if r is not None)
+                + sum(len(r.out_tokens) for r in self.queue))
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
         finished = []

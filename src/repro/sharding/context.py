@@ -213,7 +213,36 @@ class TreePlan:
 
         gathered = jax.tree.map(copy_leaf, params, self.compute_specs,
                                 is_leaf=lambda x: _IS_SPEC(x))
+        # telemetry: real bytes materialized by this gather (the rollout /
+        # merged-generation copies) — counted on the process-global
+        # registry so the frozen plan needs no telemetry handle threaded
+        from repro.obs.metrics import global_registry
+        global_registry().counter(
+            "sharding_gather_copy_bytes_total",
+            "bytes materialized by TreePlan.gather_copy (ZeRO-3 rollout "
+            "gathers)").inc(
+            sum(getattr(x, "nbytes", 0) for x in jax.tree.leaves(gathered)))
         return gathered, True
+
+    def gathered_bytes(self, params) -> int:
+        """Global bytes this plan all-gathers per step at ZeRO-3: the
+        leaves whose state spec differs from the compute target. Tree and
+        layer gather modes move the same total per step — layer mode just
+        stages it one scan period at a time (DESIGN.md §3.7) — so one
+        figure serves both; the RLHF trainer multiplies it into the
+        ``sharding_step_gathered_bytes_total`` counter per update."""
+        if self.strat.zero_stage < 3 or \
+                self.compute_specs is self.param_specs:
+            return 0
+        total = 0
+
+        def add(x, s, c):
+            nonlocal total
+            if s != c:
+                total += getattr(x, "nbytes", 0)
+
+        jax.tree.map(add, params, self.param_specs, self.compute_specs)
+        return total
 
     # (per-device byte *accounting* lives in core.strategies —
     # ``traced_zero_scales`` / ``_tree_fraction`` — so the simulator and

@@ -1,5 +1,5 @@
 """Step functions — the units the launcher jits / lowers, and the phases of
-the RLHF pipeline (DESIGN.md §4):
+the RLHF pipeline (DESIGN.md §5):
 
   * ``train_step``    — PPO actor update (clipped ratio vs old_logp, KL vs
                         ref_logp) + optional MTP CE + MoE aux loss.
