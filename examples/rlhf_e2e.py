@@ -56,6 +56,15 @@ def main():
                     help="0 = engine default (adapters train at ~10x the "
                          "full-finetune rate: LoRA's B=0 init scales the "
                          "effective step down)")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="MTP self-speculative greedy rollout (bit-identical "
+                         "to vanilla greedy; forces temperature=0, top_k=0 "
+                         "and gives the actor an MTP head)")
+    ap.add_argument("--spec-k", type=int, default=2,
+                    help="draft tokens per speculative step")
+    ap.add_argument("--capture-buckets", default="",
+                    help="comma list of prefill compile-bucket sizes, "
+                         "e.g. 8,16,32")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--metrics-out", default="", metavar="PATH",
                     help="write the run's telemetry JSONL (spans + metrics; "
@@ -73,13 +82,17 @@ def main():
     cfg = dataclasses.replace(
         get_config("llama3_2_3b").smoke(), num_layers=args.layers,
         d_model=args.d_model, d_ff=2 * args.d_model, vocab_size=64,
-        num_heads=4, num_kv_heads=2, head_dim=args.d_model // 4)
+        num_heads=4, num_kv_heads=2, head_dim=args.d_model // 4,
+        mtp_depth=args.spec_k if args.spec_decode else 0)
+    buckets = tuple(int(b) for b in args.capture_buckets.split(",")) \
+        if args.capture_buckets else None
     lr = args.lr or (3e-2 if args.engine == "hydra" else 3e-3)
     rl = RLHFConfig(prompt_len=8, gen_len=16, lr=lr, critic_lr=lr,
                     kl_coef=0.0, top_k=0, engine=args.engine,
                     lora_rank=args.lora_rank,
                     memory_policy=args.memory_policy,
-                    offload=args.offload)
+                    offload=args.offload, spec_decode=args.spec_decode,
+                    spec_k=args.spec_k, capture_buckets=buckets)
     shard = None
     if args.ndp > 1:
         from repro.sharding import ShardedContext

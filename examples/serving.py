@@ -9,10 +9,19 @@ against a global page pool and the example prints reserved-KV pages as
 the pool breathes — the vLLM-style layout where reserved memory tracks
 live tokens instead of worst-case capacity.
 
+``--capture-buckets 8,16,32`` pads prompts (and paged live-slot batches)
+to a compile-bucket ladder so ragged traffic stops recompiling the jitted
+steps; ``--spec-decode`` turns on MTP self-speculative greedy decoding
+(bit-identical greedy output, fewer decode dispatches). Both are the
+DESIGN.md "Fast decode path" features.
+
     PYTHONPATH=src python examples/serving.py [--arch mamba2_370m]
     PYTHONPATH=src python examples/serving.py --backend paged
+    PYTHONPATH=src python examples/serving.py --backend paged \
+        --spec-decode --capture-buckets 8,16,32
 """
 import argparse
+import dataclasses
 import sys
 import time
 
@@ -29,15 +38,29 @@ from repro.models import Model
 from repro.rlhf import Rollout, live_device_bytes
 
 
+def _fast_decode_cfg(args, cfg):
+    """Apply the fast-decode CLI flags: parse the bucket list and give the
+    smoke config an MTP head when speculation is requested."""
+    buckets = tuple(int(b) for b in args.capture_buckets.split(",")) \
+        if args.capture_buckets else None
+    if args.spec_decode and cfg.mtp_depth == 0:
+        cfg = dataclasses.replace(cfg, mtp_depth=args.spec_k)
+    return cfg, buckets
+
+
 def paged_demo(args):
     from repro.serving import ContinuousBatcher
     cfg = get_config(args.arch).smoke()
+    cfg, buckets = _fast_decode_cfg(args, cfg)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    capacity = 24 + args.gen
+    capacity = 24 + args.gen + (args.spec_k if args.spec_decode else 0)
+    temperature, top_k = (0.0, 0) if args.spec_decode else (0.8, 40)
     cb = ContinuousBatcher(model, cfg, params, slots=args.batch,
-                           capacity=capacity, temperature=0.8, top_k=40,
-                           cache_backend="paged", page_size=16)
+                           capacity=capacity, temperature=temperature,
+                           top_k=top_k, cache_backend="paged", page_size=16,
+                           capture_buckets=buckets,
+                           spec_decode=args.spec_decode, spec_k=args.spec_k)
     rng = np.random.RandomState(0)
     n_req = args.batch * args.requests
     for i in range(n_req):
@@ -55,6 +78,8 @@ def paged_demo(args):
                   f"pages {st.pages_in_use:3d}/{st.num_pages}  "
                   f"reserved {cb.pm.reserved_bytes()/2**20:6.2f} MiB  "
                   f"frag {cb.pm.fragmentation_slots():3d} slots")
+    if buckets or args.spec_decode:
+        print("compile cache:", cb.compile_cache.stats())
     dense_bytes = cb.B * capacity * (cb.pm.bytes_per_token or 1)
     print(f"drained in {time.time()-t0:.1f}s | peak "
           f"{st.peak_pages_in_use * cb.pm.page_bytes / 2**20:.2f} MiB paged "
@@ -69,18 +94,29 @@ def main():
     ap.add_argument("--requests", type=int, default=5)
     ap.add_argument("--backend", default="dense",
                     choices=("dense", "paged"))
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="MTP self-speculative greedy decode (forces "
+                         "temperature=0, top_k=0; bit-identical output)")
+    ap.add_argument("--spec-k", type=int, default=2,
+                    help="draft tokens per speculative step")
+    ap.add_argument("--capture-buckets", default="",
+                    help="comma list of compile-bucket sizes, e.g. 8,16,32")
     args = ap.parse_args()
     if args.backend == "paged":
         paged_demo(args)
         return
 
     cfg = get_config(args.arch).smoke()
+    cfg, buckets = _fast_decode_cfg(args, cfg)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     tok = ByteTokenizer()
     prompt_len = 24
+    temperature, top_k = (0.0, 0) if args.spec_decode else (0.8, 40)
     ro = Rollout(model, cfg, capacity=prompt_len + args.gen,
-                 temperature=0.8, top_k=40)
+                 temperature=temperature, top_k=top_k,
+                 capture_buckets=buckets, spec_decode=args.spec_decode,
+                 spec_k=args.spec_k)
     ds = PromptDataset(
         synthetic_instruction_prompts(args.batch * args.requests),
         prompt_len)
@@ -97,6 +133,8 @@ def main():
               f"{args.batch*args.gen/dt:7.0f} tok/s  "
               f"live {live_device_bytes()/2**20:7.1f} MiB")
         del res
+    if buckets or args.spec_decode:
+        print("compile cache:", ro.compile_cache.stats())
 
 
 if __name__ == "__main__":

@@ -223,8 +223,8 @@ class ModelConfig:
         if self.ssm is not None:
             kw["ssm"] = SSMConfig(d_state=16, d_conv=4, expand=2,
                                   head_dim=32, chunk_size=32)
-        if self.mtp_depth:
-            kw["mtp_depth"] = 1
+        # mtp_depth is inherited as-is: depth-k smoke configs exercise the
+        # chained draft path (speculative decode) at CPU scale
         return replace(self, **kw)
 
 

@@ -251,6 +251,35 @@ def attention_decode(params, x, position, cache, cfg: ModelConfig, *,
     return out, {"k": new_k, "v": new_v, "pos": new_pos}
 
 
+def attention_decode_multi(params, x, positions, cache, cfg: ModelConfig, *,
+                           window: int = 0, adapter=None):
+    """T-token decode (speculative-decode verify). x [B,T,D], positions
+    [B,T] absolute (consecutive per row; -1 rows write a dead entry that
+    stays masked). All T K/V entries are scattered first, then every query
+    attends over the updated rolling buffer with per-query position masks —
+    so draft token j IS context for draft token j+1, exactly as if the T
+    tokens had been decoded sequentially. Returns (out [B,T,D], new_cache)."""
+    B, T = x.shape[:2]
+    cap = cache["k"].shape[1]
+    q, k, v = _project_qkv(params, x, cfg, adapter=adapter)
+    sin, cos = rope_tables(positions, cfg.resolved_head_dim(), cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    slots = (positions % cap).astype(jnp.int32)              # [B, T]
+    bi = jnp.arange(B)[:, None]
+    new_k = cache["k"].at[bi, slots].set(k)
+    new_v = cache["v"].at[bi, slots].set(v)
+    new_pos = cache["pos"].at[bi, slots].set(positions.astype(jnp.int32))
+    valid = (new_pos[:, None, :] >= 0) \
+        & (new_pos[:, None, :] <= positions[:, :, None])     # [B, T, cap]
+    if window:
+        valid &= new_pos[:, None, :] > (positions[:, :, None] - window)
+    out = sdpa(q, new_k, new_v, valid[:, None])              # mask [B,1,T,cap]
+    out = out.reshape(B, T, -1)
+    out = out @ params["wo"] + lora_delta(out, (adapter or {}).get("wo"))
+    return out, {"k": new_k, "v": new_v, "pos": new_pos}
+
+
 # ---------------------------------------------------------------------------
 # DeepSeek-V3 Multi-head Latent Attention (MLA)
 # ---------------------------------------------------------------------------

@@ -129,15 +129,29 @@ class Model:
             params["encoder_norm"] = L.init_norm(cfg.d_model, dtype)
         if cfg.mtp_depth:
             mseg = self.segments[-1]
-            params["mtp"] = {
-                "proj": L._init(ks[n_seg + 4], (2 * cfg.d_model, cfg.d_model),
-                                dtype=dtype),
-                "norm_h": L.init_norm(cfg.d_model, dtype),
-                "norm_e": L.init_norm(cfg.d_model, dtype),
-                "layer": self._init_group(
-                    ks[n_seg + 5],
-                    Segment(mseg.kinds[:1], mseg.moe_flags[:1], 1), False, dtype),
-            }
+
+            def mtp_module(pk, lk):
+                return {
+                    "proj": L._init(pk, (2 * cfg.d_model, cfg.d_model),
+                                    dtype=dtype),
+                    "norm_h": L.init_norm(cfg.d_model, dtype),
+                    "norm_e": L.init_norm(cfg.d_model, dtype),
+                    "layer": self._init_group(
+                        lk, Segment(mseg.kinds[:1], mseg.moe_flags[:1], 1),
+                        False, dtype),
+                }
+
+            params["mtp"] = mtp_module(ks[n_seg + 4], ks[n_seg + 5])
+            if cfg.mtp_depth > 1:
+                # depths 2..k stack on a leading axis ("mtp_extra") so the
+                # depth-1 tree — and therefore every existing checkpoint —
+                # is byte-identical; keys fork off the depth-1 stream
+                extras = [
+                    mtp_module(
+                        jax.random.fold_in(ks[n_seg + 4], 1 + j),
+                        jax.random.fold_in(ks[n_seg + 5], 1 + j))
+                    for j in range(cfg.mtp_depth - 1)]
+                params["mtp_extra"] = _stack_groups(extras)
         return params
 
     # -------------------------------------------------------- lora adapters
@@ -374,28 +388,93 @@ class Model:
         vh = (adapter or {}).get("value_head") or params["value_head"]
         return (h.astype(jnp.float32) @ vh["w"] + vh["b"])[..., 0]
 
+    def _mtp_modules(self, params) -> list:
+        """Depth-ordered MTP modules: ``params["mtp"]`` is depth 1; extras
+        (depths 2..k) are unstacked off ``params["mtp_extra"]``'s lead axis."""
+        modules = [params["mtp"]]
+        extra = params.get("mtp_extra")
+        if extra is not None:
+            n = jax.tree.leaves(extra)[0].shape[0]
+            modules += [jax.tree.map(lambda x, j=j: x[j], extra)
+                        for j in range(n)]
+        return modules
+
+    def _mtp_module_fwd(self, module, h_prev, e_next, positions, *, window=0):
+        """One MTP module: combine h^{d-1} with emb(t_{i+d}) and run the
+        module's transformer layer. Returns h^d (pre-final-norm)."""
+        cfg = self.cfg
+        h_in = jnp.concatenate([
+            L.rms_norm(h_prev, module["norm_h"], cfg.norm_eps),
+            L.rms_norm(e_next, module["norm_e"], cfg.norm_eps)], -1)
+        hh = h_in @ module["proj"]
+        seg = self.segments[-1]
+        kind = seg.kinds[0]
+        is_moe = seg.moe_flags[0] and cfg.moe is not None
+        hh, _, _ = self._slot_fwd(module["layer"]["slot0"], hh, positions,
+                                  kind, self._seg_has_ffn(seg, 0), is_moe,
+                                  window=window)
+        return hh
+
     def mtp_logits(self, params, h, tokens):
         """DeepSeek multi-token prediction: predict t_{i+2} from h_i and
         emb(t_{i+1}). Runs on the full (shifted, end-padded) sequence so the
         token grid keeps tiling the mesh (the MoE shard_map path applies);
         returns logits [B, S, V] where index i scores tokens[:, i+2]
         (the last two positions are padding — mask them in the loss)."""
-        cfg = self.cfg
-        mtp = params["mtp"]
         shifted = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
-        e_next = self.embed(params, shifted)
-        h_in = jnp.concatenate([
-            L.rms_norm(h, mtp["norm_h"], cfg.norm_eps),
-            L.rms_norm(e_next, mtp["norm_e"], cfg.norm_eps)], -1)
-        hh = h_in @ mtp["proj"]
-        S = hh.shape[1]
-        positions = jnp.broadcast_to(jnp.arange(S), hh.shape[:2])
-        seg = self.segments[-1]
-        kind = seg.kinds[0]
-        is_moe = seg.moe_flags[0] and cfg.moe is not None
-        hh, _, _ = self._slot_fwd(mtp["layer"]["slot0"], hh, positions, kind,
-                                  self._seg_has_ffn(seg, 0), is_moe, window=0)
+        S = h.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S), h.shape[:2])
+        hh = self._mtp_module_fwd(params["mtp"], h,
+                                  self.embed(params, shifted), positions)
         return self.unembed(params, hh)
+
+    def mtp_chain_logits(self, params, h, tokens, *, window: int = 0):
+        """Depth-k chained MTP (arXiv:2412.19437): module d consumes
+        h^{d-1} and emb(tokens shifted by d) and predicts t_{i+d+1}.
+        Returns a list of logits [B, S, V], one per depth — entry d-1's
+        index i scores tokens[:, i+d+1] (``steps.mtp_loss(offset=d+1)``).
+
+        Depth 1 is bit-identical to :meth:`mtp_logits`. ``window=1`` trains
+        the chain under the identity attention mask (each position sees
+        only itself), which is exactly the function :meth:`mtp_draft`
+        evaluates at decode time — use it to train draft-consistent heads."""
+        S = h.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S), h.shape[:2])
+        out = []
+        h_prev = h
+        for d, module in enumerate(self._mtp_modules(params), start=1):
+            shifted = jnp.pad(tokens[:, d:], ((0, 0), (0, d)))
+            h_prev = self._mtp_module_fwd(module, h_prev,
+                                          self.embed(params, shifted),
+                                          positions, window=window)
+            out.append(self.unembed(params, h_prev))
+        return out
+
+    def mtp_draft(self, params, h_last, first_tok, k_draft: int):
+        """Draft ``k_draft`` greedy tokens from the MTP chain in one shot.
+
+        ``h_last`` [B, D] is the trunk hidden state at position i (the one
+        whose logits produced ``first_tok`` = t_{i+1}); the chain then
+        predicts t_{i+2}, t_{i+3}, ... Each module runs at a single
+        position, where attention degenerates to v(x) — position- and
+        RoPE-independent, equal to the ``window=1`` train-time chain — so
+        drafts are a deterministic function of (h_last, first_tok). Depths
+        beyond the trained ``mtp_depth`` reuse the deepest module. Draft
+        quality only moves the accept rate; verification guarantees
+        greedy-exact output regardless. Returns drafts [B, k_draft] int32."""
+        modules = self._mtp_modules(params)
+        h = h_last[:, None]                               # [B, 1, D]
+        tok = first_tok
+        positions = jnp.zeros(h.shape[:2], jnp.int32)
+        drafts = []
+        for d in range(k_draft):
+            module = modules[min(d, len(modules) - 1)]
+            e = self.embed(params, tok[:, None])
+            h = self._mtp_module_fwd(module, h, e, positions)
+            lg = self.unembed(params, h)[:, 0].astype(jnp.float32)
+            tok = jnp.argmax(lg, -1).astype(jnp.int32)
+            drafts.append(tok)
+        return jnp.stack(drafts, axis=1)
 
     # ------------------------------------------------------------- kv caches
     def init_cache(self, batch: int, capacity: int, dtype) -> list:
@@ -417,21 +496,50 @@ class Model:
         return caches
 
     def prefill(self, params, batch, capacity: int, *, window: int = 0,
-                adapter=None):
+                adapter=None, lengths=None, return_h: bool = False):
         """Process a prompt, returning (last-position logits [B,V], caches).
 
         caches = {"segments": [...], "cross_kv": [...]|None}. Attention /
         MLA caches hold the last ``min(S, capacity)`` positions of a rolling
         buffer; Mamba slots hold (conv_state, ssm_state). Single pass.
-        """
+
+        ``lengths`` [B] (optional) marks per-row valid-token counts under
+        right-padding (the compile-bucket ladder pads prompts to a capture
+        length): logits come from position ``lengths-1`` and padded cache
+        entries are invalidated post-hoc (their "pos" set to -1) — exact
+        because causal attention makes right-padding invisible to earlier
+        positions. Token-input attention/MLA models only (Mamba states
+        cannot be masked after the fact). ``return_h=True`` additionally
+        returns the pre-final-norm trunk hidden at the logits position
+        [B, D] — the state the MTP draft head chains from."""
         h, positions, cross_kv = self._prepare_inputs(params, batch)
         B = h.shape[0]
         init_caches = self.init_cache(B, capacity, h.dtype)
         h_out, aux, filled = self._stack_fwd(
             params, h, positions, window=window, cross_kv=cross_kv,
             init_caches=init_caches, adapter=adapter)
-        logits = self.unembed(params, h_out[:, -1:])[:, 0]
-        return logits, {"segments": filled, "cross_kv": cross_kv}
+        if lengths is None:
+            h_last = h_out[:, -1]
+        else:
+            assert self.cfg.input_mode == "tokens", \
+                "bucketed (lengths-masked) prefill needs token inputs"
+            assert all(k in (ATTN, MLA) for seg in self.segments
+                       for k in seg.kinds), \
+                "bucketed prefill cannot mask Mamba states post-hoc"
+            idx = jnp.maximum(lengths - 1, 0).astype(jnp.int32)
+            h_last = jnp.take_along_axis(
+                h_out, jnp.broadcast_to(idx[:, None, None],
+                                        (B, 1, h_out.shape[-1])), 1)[:, 0]
+            lens = lengths[None, :, None]          # vs pos leaves [G, B, cap]
+            filled = [
+                {k: dict(c, pos=jnp.where(c["pos"] < lens, c["pos"], -1))
+                 for k, c in seg.items()}
+                for seg in filled]
+        logits = self.unembed(params, h_last[:, None])[:, 0]
+        caches = {"segments": filled, "cross_kv": cross_kv}
+        if return_h:
+            return logits, caches, h_last
+        return logits, caches
 
     # ------------------------------------------------------- paged kv caches
     def supports_paged(self) -> bool:
@@ -458,15 +566,18 @@ class Model:
         return pools
 
     def paged_prefill(self, params, batch, pools, block_tables, lengths, *,
-                      adapter=None):
+                      adapter=None, return_h: bool = False):
         """Prefill into paged pools: dense single-pass prompt compute, then
         the per-layer K/V scattered to the sequences' pages (gather/scatter
         prefill). batch["tokens"] [B, S]; block_tables [B, nb] int32;
-        lengths [B] valid-token counts. Returns (last-position logits
-        [B, V], pools)."""
+        lengths [B] valid-token counts — logits come from position
+        ``lengths-1``, so bucket-padded prompts are exact. Returns
+        (last-valid-position logits [B, V], pools[, h_last])."""
         from repro import paged as PG
         S = batch["tokens"].shape[1]
-        logits, caches = self.prefill(params, batch, S, adapter=adapter)
+        logits, caches, h_last = self.prefill(params, batch, S,
+                                              adapter=adapter,
+                                              lengths=lengths, return_h=True)
         new_pools = []
         for si, seg in enumerate(self.segments):
             slot_pools = {}
@@ -478,6 +589,8 @@ class Model:
                     pools[si][f"slot{i}"], filled["k"], filled["v"],
                     block_tables, lengths)
             new_pools.append(slot_pools)
+        if return_h:
+            return logits, new_pools, h_last
         return logits, new_pools
 
     def paged_decode_step(self, params, pools, token, position, block_tables,
@@ -576,3 +689,106 @@ class Model:
         new_caches = dict(caches)
         new_caches["segments"] = new_segments
         return logits, new_caches
+
+    # ------------------------------------------------- speculative decoding
+    def supports_spec_decode(self) -> bool:
+        """The draft/verify path covers token-input attention-only nets
+        (rolling-pos dense caches and paged pools both self-heal rejected
+        drafts by position masking; Mamba/MLA states cannot roll back)."""
+        return (self.cfg.input_mode == "tokens" and self.cfg.mtp_depth > 0
+                and all(k == ATTN for seg in self.segments
+                        for k in seg.kinds))
+
+    def decode_multi(self, params, caches, tokens, positions, *,
+                     window: int = 0, adapter=None):
+        """T-token verify forward over the dense rolling cache. tokens
+        [B, T] int32, positions [B, T] absolute (consecutive per row; a -1
+        row writes only dead entries). Returns (logits [B, T, V],
+        h [B, T, D] pre-final-norm trunk states, caches) — logits[:, j]
+        scores the token at position ``positions[:, j] + 1``. Rejected-draft
+        cache entries need no rollback: their stored positions exceed any
+        later query position, so the mask hides them until the rolling
+        buffer overwrites them (attention-only models)."""
+        cfg = self.cfg
+        assert all(k == ATTN for seg in self.segments for k in seg.kinds), \
+            "decode_multi needs attention-only models"
+        lora = (adapter or {}).get("lora")
+        h = self.embed(params, tokens)
+        new_segments = []
+        for si, seg in enumerate(self.segments):
+            def group_dec(hh, xs, seg=seg):
+                gp, cache, ad = xs
+                new_cache = {}
+                for i in range(len(seg.kinds)):
+                    slot = gp[f"slot{i}"]
+                    sad = (ad or {}).get(f"slot{i}") or {}
+                    x = L.rms_norm(hh, slot["norm1"], cfg.norm_eps)
+                    y, nc = L.attention_decode_multi(
+                        slot["mixer"], x, positions, cache[f"slot{i}"], cfg,
+                        window=window, adapter=sad.get("mixer"))
+                    hh = hh + y
+                    new_cache[f"slot{i}"] = nc
+                    if self._seg_has_ffn(seg, i):
+                        x2 = L.rms_norm(hh, slot["norm2"], cfg.norm_eps)
+                        is_moe = seg.moe_flags[i] and cfg.moe is not None
+                        if is_moe:
+                            y2, _ = MOE.moe_fwd(slot["ffn"], x2, cfg)
+                        else:
+                            y2 = L.mlp_fwd(slot["ffn"], x2, cfg.mlp_gated,
+                                           adapter=sad.get("ffn"))
+                        hh = hh + y2
+                return hh, new_cache
+
+            xs = (params[f"segment{si}"], caches["segments"][si],
+                  lora.get(f"segment{si}") if lora else None)
+            h, seg_cache = jax.lax.scan(group_dec, h, xs)
+            new_segments.append(seg_cache)
+        logits = self.unembed(params, h)
+        new_caches = dict(caches)
+        new_caches["segments"] = new_segments
+        return logits, h, new_caches
+
+    def paged_decode_multi(self, params, pools, tokens, positions,
+                           block_tables, *, adapter=None):
+        """T-token verify forward over paged pools (the paged twin of
+        :meth:`decode_multi`). tokens/positions [B, T]; position -1 entries
+        are dropped writes (idle or finished rows). The page manager must
+        have grown each live row by T logical tokens first
+        (``PageManager.append_tokens``); after acceptance the caller
+        truncates back (``PageManager.truncate``). Returns (logits
+        [B, T, V], h [B, T, D], pools)."""
+        from repro.paged.attention import paged_attention_decode_multi
+        cfg = self.cfg
+        lora = (adapter or {}).get("lora")
+        h = self.embed(params, tokens)
+        new_pools = []
+        for si, seg in enumerate(self.segments):
+            def group_dec(hh, xs, seg=seg):
+                gp, pool, ad = xs
+                new_pool = {}
+                for i in range(len(seg.kinds)):
+                    slot = gp[f"slot{i}"]
+                    sad = (ad or {}).get(f"slot{i}") or {}
+                    x = L.rms_norm(hh, slot["norm1"], cfg.norm_eps)
+                    y, np_ = paged_attention_decode_multi(
+                        slot["mixer"], x, positions, pool[f"slot{i}"],
+                        block_tables, cfg, adapter=sad.get("mixer"))
+                    hh = hh + y
+                    new_pool[f"slot{i}"] = np_
+                    if self._seg_has_ffn(seg, i):
+                        x2 = L.rms_norm(hh, slot["norm2"], cfg.norm_eps)
+                        is_moe = seg.moe_flags[i] and cfg.moe is not None
+                        if is_moe:
+                            y2, _ = MOE.moe_fwd(slot["ffn"], x2, cfg)
+                        else:
+                            y2 = L.mlp_fwd(slot["ffn"], x2, cfg.mlp_gated,
+                                           adapter=sad.get("ffn"))
+                        hh = hh + y2
+                return hh, new_pool
+
+            xs = (params[f"segment{si}"], pools[si],
+                  lora.get(f"segment{si}") if lora else None)
+            h, seg_pool = jax.lax.scan(group_dec, h, xs)
+            new_pools.append(seg_pool)
+        logits = self.unembed(params, h)
+        return logits, h, new_pools

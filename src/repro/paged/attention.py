@@ -57,6 +57,31 @@ def paged_attention_reference(q, pool, block_tables, position):
     return out.reshape(B, H, -1).astype(q.dtype)
 
 
+def paged_attention_reference_multi(q, pool, block_tables, positions):
+    """Multi-query twin of :func:`paged_attention_reference` for the
+    speculative-decode verify step. q [B,T,H,D]; positions [B,T] (per-query
+    last valid logical index; -1 queries see nothing and produce garbage the
+    caller masks) -> [B,T,H,Dv]. Token j of a draft run IS context for
+    token j+1 because validity is per-query ``idx <= positions[:, j]``."""
+    B, T, H, D = q.shape
+    ps = pool["k"].shape[1]
+    K = pool["k"].shape[2]
+    G = H // K
+    k, v = gather_kv(pool, block_tables)                 # [B, S, K, D]
+    S = k.shape[1]
+    idx = jnp.arange(S, dtype=jnp.int32)
+    allocated = jnp.repeat(block_tables >= 0, ps, axis=1)        # [B, S]
+    valid = allocated[:, None, :] \
+        & (idx[None, None, :] <= positions[:, :, None])          # [B, T, S]
+    qg = q.reshape(B, T, K, G, D).astype(jnp.float32)
+    s = jnp.einsum("btkgd,bskd->btkgs", qg,
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("btkgs,bskd->btkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, T, H, -1).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Pallas kernel
 # ---------------------------------------------------------------------------
@@ -181,5 +206,29 @@ def paged_attention_decode(params, x, position, pool, block_tables, cfg, *,
     else:
         out = paged_attention_reference(q[:, 0], pool, block_tables, position)
     out = out.reshape(B, 1, -1)
+    out = out @ params["wo"] + lora_delta(out, (adapter or {}).get("wo"))
+    return out, pool
+
+
+def paged_attention_decode_multi(params, x, positions, pool, block_tables,
+                                 cfg, *, adapter=None):
+    """T-token decode against a paged pool (speculative-decode verify).
+    x [B,T,D]; positions [B,T] logical indices (consecutive per row; -1
+    entries are dropped writes and all-masked queries). Appends all T K/V
+    first, then attends with per-query position masks. Returns
+    (out [B,T,D], new_pool)."""
+    from repro.models import layers as L
+    from repro.models.lora import lora_delta
+    from repro.paged.paged_cache import append_decode_multi
+
+    B, T = x.shape[:2]
+    q, k, v = L._project_qkv(params, x, cfg, adapter=adapter)
+    sin, cos = L.rope_tables(positions, cfg.resolved_head_dim(),
+                             cfg.rope_theta)
+    q = L.apply_rope(q, sin, cos)
+    k = L.apply_rope(k, sin, cos)
+    pool = append_decode_multi(pool, k, v, block_tables, positions)
+    out = paged_attention_reference_multi(q, pool, block_tables, positions)
+    out = out.reshape(B, T, -1)
     out = out @ params["wo"] + lora_delta(out, (adapter or {}).get("wo"))
     return out, pool

@@ -156,6 +156,39 @@ class PageManager:
         seq.length += 1
         return copies
 
+    def append_tokens(self, seq_id: int, n: int) -> List[Tuple[int, int]]:
+        """Extend a sequence by ``n`` logical tokens (speculative decode
+        grows each slot by ``k+1`` before the verify forward). Atomic: the
+        total page need — growth pages plus at most one CoW copy of a
+        shared partial last page — is checked up front, so on exhaustion
+        nothing is allocated. Returns the concatenated CoW copies."""
+        seq = self._seqs[seq_id]
+        need = self.pages_needed(seq.length + n) - len(seq.pages)
+        if seq.length % self.page_size != 0 and \
+                self._refcount[seq.pages[-1]] > 1:
+            need += 1                      # CoW copy of the shared last page
+        if need > len(self._free):
+            raise PagePoolExhausted(
+                f"need {need} pages, {len(self._free)} free")
+        copies: List[Tuple[int, int]] = []
+        for _ in range(n):
+            copies.extend(self.append_token(seq_id))
+        return copies
+
+    def truncate(self, seq_id: int, length: int) -> None:
+        """Shrink a sequence's logical length (drop rejected draft tokens
+        after the accept step). Whole pages past the new length are freed
+        (ref-dropped — a forked sibling may keep them alive); stale tokens
+        in the kept partial last page are masked by position and
+        overwritten by future appends (CoW fires then if it is shared)."""
+        seq = self._seqs[seq_id]
+        assert 0 <= length <= seq.length, (length, seq.length)
+        keep = self.pages_needed(length)
+        for p in seq.pages[keep:]:
+            self._drop_ref(p)
+        del seq.pages[keep:]
+        seq.length = length
+
     def free_seq(self, seq_id: int):
         seq = self._seqs.pop(seq_id)
         for p in seq.pages:

@@ -93,6 +93,30 @@ def append_decode(pool: Dict[str, jax.Array], k_t: jax.Array, v_t: jax.Array,
     }
 
 
+def append_decode_multi(pool: Dict[str, jax.Array], k_t: jax.Array,
+                        v_t: jax.Array, block_tables: jax.Array,
+                        positions: jax.Array) -> Dict[str, jax.Array]:
+    """Write T tokens per sequence at logical indices ``positions``
+    (speculative-decode verify). k_t/v_t [B, T, kvh, hd]; positions [B, T]
+    int32. Entries with position -1 or no allocated page are dropped —
+    identical masking to :func:`append_decode`, vectorised over T."""
+    num_pages, ps = pool["k"].shape[:2]
+    B, T = positions.shape
+    pos = jnp.maximum(positions, 0).astype(jnp.int32)
+    blk = jnp.minimum(pos // ps, block_tables.shape[1] - 1)       # [B, T]
+    page = jnp.take_along_axis(block_tables, blk, axis=1)         # [B, T]
+    slot = pos % ps
+    valid = (page >= 0) & (positions >= 0)
+    page = jnp.where(valid, page, num_pages).reshape(-1)          # OOB drop
+    slot = slot.reshape(-1)
+    flat_k = k_t.reshape(B * T, *k_t.shape[2:])
+    flat_v = v_t.reshape(B * T, *v_t.shape[2:])
+    return {
+        "k": pool["k"].at[page, slot].set(flat_k, mode="drop"),
+        "v": pool["v"].at[page, slot].set(flat_v, mode="drop"),
+    }
+
+
 def gather_kv(pool: Dict[str, jax.Array], block_tables: jax.Array):
     """Materialise per-sequence K/V [B, nb*ps, kvh, hd] (reference path).
     Unallocated blocks gather page 0 — callers mask by position."""

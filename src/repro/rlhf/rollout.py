@@ -6,15 +6,30 @@ buffers per step, which the paper found pathological. Here the cache is
 allocated once at ``capacity`` and every decode step donates it back —
 in-place on TPU, zero allocator churn. This is the JAX-native fix the
 framework adopts as default.
+
+Two decode-speed features from DESIGN.md "Fast decode path" plug in here:
+
+  * ``capture_buckets`` — prompts pad to a compile-bucket ladder rung and
+    the padding is masked exactly via per-row ``lengths``, so PPO batches
+    with ragged prompt lengths stop recompiling the prefill per length.
+  * ``spec_decode`` — MTP self-speculative greedy decoding: draft
+    ``spec_k`` tokens from the model's MTP chain, verify them in ONE
+    batched forward, accept the greedy-consistent prefix. Emitted tokens
+    and logprobs are bit-identical to vanilla greedy decoding (every token
+    is the verify forward's own fp32 argmax; logp is the same
+    ``log_softmax`` gather) — only wall-clock changes. Greedy-only
+    (``temperature == 0``, ``top_k == 0``, no EOS early-exit: the vanilla
+    path feeds zeroed post-EOS tokens through the cache, which speculation
+    cannot reproduce).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Optional, Tuple
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import Model
@@ -41,12 +56,49 @@ def sample_token(key, logits, *, temperature: float = 1.0, top_k: int = 0):
     return tok, jnp.take_along_axis(logp, tok[..., None], -1)[..., 0]
 
 
+def spec_verify_step(model: Model, spec_k: int, verify_fn, params, h_last,
+                     tok, pos, live):
+    """Shared draft/verify/accept core for self-speculative greedy decode
+    (jitted inside backend-specific wrappers here and in the serving
+    scheduler). ``verify_fn(seq [B,T], positions [B,T])`` runs the
+    T = spec_k + 1 token forward and returns (logits [B,T,V], h [B,T,D],
+    state); rows with ``live = False`` get position -1 (dead writes).
+
+    Greedy-exactness: logits[:, j] is the same function of the context a
+    sequential decode would compute at that position (drafts j' <= j are
+    context for query j), so ``argmax(fp32 logits[:, j])`` IS the vanilla
+    greedy token once tokens 0..j-1 of the run are accepted, and the
+    gathered ``log_softmax`` matches ``sample_token``'s logp at top_k=0.
+    The accepted prefix therefore yields ``n_acc + 1`` vanilla-exact
+    (token, logp) pairs per step.
+
+    Returns (greedy [B, k+1], logp [B, k+1], n_acc [B],
+    h_new [B, D] — trunk state at each row's last accepted position —
+    and the backend cache state)."""
+    B = tok.shape[0]
+    drafts = model.mtp_draft(params, h_last, tok, spec_k)        # [B, k]
+    seq = jnp.concatenate([tok[:, None], drafts], axis=1)        # [B, k+1]
+    positions = pos[:, None] + jnp.arange(spec_k + 1, dtype=jnp.int32)[None]
+    positions = jnp.where(live[:, None], positions, -1)
+    logits, h, state = verify_fn(seq, positions)
+    lg32 = logits.astype(jnp.float32)
+    greedy = jnp.argmax(lg32, -1).astype(jnp.int32)
+    logp = jnp.take_along_axis(jax.nn.log_softmax(lg32, -1),
+                               greedy[..., None], -1)[..., 0]
+    acc = jnp.cumprod((greedy[:, :-1] == drafts).astype(jnp.int32), axis=1)
+    n_acc = acc.sum(axis=1).astype(jnp.int32)                    # [B]
+    h_new = h[jnp.arange(B), n_acc]                              # [B, D]
+    return greedy, logp, n_acc, h_new, state
+
+
 class Rollout:
     def __init__(self, model: Model, cfg: ModelConfig, *, capacity: int,
                  temperature: float = 1.0, top_k: int = 0,
                  eos_id: Optional[int] = None, window: int = 0,
                  donate: bool = True, backend: str = "dense",
-                 page_size: int = 16):
+                 page_size: int = 16,
+                 capture_buckets: Optional[Sequence[int]] = None,
+                 spec_decode: bool = False, spec_k: int = 2):
         assert backend in ("dense", "paged"), backend
         self.model, self.cfg = model, cfg
         self.capacity = capacity
@@ -57,13 +109,38 @@ class Rollout:
         self.page_size = page_size
         self.page_manager = None        # populated per generate() when paged
 
+        from repro.serving.buckets import BucketLadder, CompileCache
+        self.compile_cache = CompileCache()
+        self.prefill_ladder = (BucketLadder(capture_buckets)
+                               if capture_buckets else None)
+        self.spec_decode, self.spec_k = spec_decode, spec_k
+        if spec_decode:
+            assert model.supports_spec_decode(), \
+                "spec decode needs a token-input attention-only model " \
+                "with mtp_depth > 0"
+            assert temperature <= 0.0 and top_k == 0, \
+                "spec decode is greedy-only (temperature=0, top_k=0)"
+            assert eos_id is None, \
+                "spec decode has no EOS early-exit (vanilla feeds zeroed " \
+                "post-EOS tokens through the cache); mask EOS downstream"
+            assert window == 0, "spec decode is full-attention"
+        # the verify forward transiently writes up to spec_k positions past
+        # the last needed one; pad the rolling cache so those writes can
+        # never wrap onto live prompt entries
+        cap_eff = capacity + (spec_k if spec_decode else 0)
+        self._cap_eff = cap_eff
+        # the lengths-masked prefill needs token inputs and attention kinds;
+        # plain traffic on exotic models keeps the legacy path
+        self._rich = spec_decode or self.prefill_ladder is not None
+
         if backend == "paged":
             assert model.supports_paged(), \
                 "paged rollout needs an attention-only token model"
             assert window == 0, "paged rollout is full-attention"
 
             def prefill_paged(params, batch, pools, bt, lens):
-                return model.paged_prefill(params, batch, pools, bt, lens)
+                return model.paged_prefill(params, batch, pools, bt, lens,
+                                           return_h=True)
 
             def decode_paged(params, pools, token, position, bt, key, done):
                 logits, pools = model.paged_decode_step(params, pools, token,
@@ -76,10 +153,24 @@ class Rollout:
 
             self._prefill = jax.jit(prefill_paged, donate_argnums=(2,))
             self._decode = jax.jit(decode_paged, donate_argnums=(1,))
+            if spec_decode:
+                def spec_paged(params, pools, h_last, tok, pos, bt, live):
+                    return spec_verify_step(
+                        model, spec_k,
+                        lambda seq, positions: model.paged_decode_multi(
+                            params, pools, seq, positions, bt),
+                        params, h_last, tok, pos, live)
+
+                self._spec = jax.jit(spec_paged, donate_argnums=(1,))
             return
 
-        def prefill(params, batch):
-            return model.prefill(params, batch, capacity, window=window)
+        if self._rich:
+            def prefill(params, batch, lens):
+                return model.prefill(params, batch, cap_eff, window=window,
+                                     lengths=lens, return_h=True)
+        else:
+            def prefill(params, batch):
+                return model.prefill(params, batch, capacity, window=window)
 
         def decode(params, caches, token, position, key, done):
             logits, caches = model.decode_step(params, caches, token,
@@ -92,6 +183,42 @@ class Rollout:
 
         self._prefill = jax.jit(prefill)
         self._decode = jax.jit(decode, donate_argnums=(1,))
+        if spec_decode:
+            def spec_dense(params, caches, h_last, tok, pos, live):
+                return spec_verify_step(
+                    model, spec_k,
+                    lambda seq, positions: model.decode_multi(
+                        params, caches, seq, positions),
+                    params, h_last, tok, pos, live)
+
+            self._spec = jax.jit(spec_dense, donate_argnums=(1,))
+
+    # -- bucketed prefill helpers -------------------------------------------
+    def _bucketed_prompt(self, tokens):
+        """Pad [B, P] prompts up to their capture bucket; returns the
+        padded batch, per-row lengths, and the bucket for key accounting."""
+        B, P = tokens.shape
+        Sb = self.prefill_ladder.fit(P) if self.prefill_ladder else P
+        if Sb != P:
+            tokens = jnp.pad(tokens, ((0, 0), (0, Sb - P)))
+        return {"tokens": tokens}, jnp.full((B,), P, jnp.int32), Sb
+
+    def warmup(self, params, batch_size: int,
+               max_prompt_len: Optional[int] = None) -> None:
+        """Pre-compile the bucketed dense prefill for every ladder rung (the
+        ragged dimension of PPO traffic). Decode/spec shapes are fixed per
+        (batch, capacity) and compile once on first use; the paged pool
+        shape is likewise fixed by ``capacity``, so no paged warmup is
+        needed. Marks the compile cache warmed either way."""
+        if self.prefill_ladder is not None and self.backend == "dense" \
+                and self._rich:
+            for Sb in self.prefill_ladder.up_to(
+                    max_prompt_len or self.capacity):
+                batch = {"tokens": jnp.zeros((batch_size, Sb), jnp.int32)}
+                lens = jnp.zeros((batch_size,), jnp.int32)
+                self._prefill(params, batch, lens)
+                self.compile_cache.warm(("prefill", self.backend, Sb))
+        self.compile_cache.finish_warmup()
 
     def generate(self, params, batch, max_new_tokens: int, key,
                  adapter=None):
@@ -104,7 +231,8 @@ class Rollout:
         zero adapter overhead — and the merged leaves are deleted at the
         phase boundary (the base leaves they alias survive). The merge is
         redone from the frozen base next call, so fp error never
-        accumulates."""
+        accumulates. Spec decode drafts and verifies from the same merged
+        tree (MTP modules included), so hydra output stays greedy-exact."""
         if adapter is not None:
             from repro.models.lora import delete_merged
             merged = self.model.merge_adapter(params, adapter)
@@ -112,13 +240,20 @@ class Rollout:
                 return self.generate(merged, batch, max_new_tokens, key)
             finally:
                 delete_merged(merged, adapter.get("lora"))
+        if self.spec_decode:
+            return self._generate_spec(params, batch, max_new_tokens, key)
         if self.backend == "paged":
             return self._generate_paged(params, batch, max_new_tokens, key)
         tokens = batch["tokens"]
         B, P = tokens.shape
         prefix = (self.cfg.num_prefix_embeddings
                   if self.cfg.input_mode == "embeddings" else 0)
-        logits, caches = self._prefill(params, batch)
+        if self._rich:
+            pbatch, lens, Sb = self._bucketed_prompt(tokens)
+            self.compile_cache.lookup(("prefill", "dense", Sb))
+            logits, caches, _h = self._prefill(params, pbatch, lens)
+        else:
+            logits, caches = self._prefill(params, batch)
         tok, logp0 = sample_token(jax.random.fold_in(key, 0), logits,
                                   temperature=self.temperature,
                                   top_k=self.top_k)
@@ -139,10 +274,13 @@ class Rollout:
     def _finalize(self, tokens, out_toks, out_logp, caches) -> RolloutResult:
         """Shared generation epilogue: stack outputs, mask everything after
         (and including the pad after) EOS, free the caches deterministically
-        (phase-boundary hygiene)."""
+        (phase-boundary hygiene). Accepts per-step lists or pre-stacked
+        [B, N] arrays."""
         B, P = tokens.shape
-        gen = jnp.stack(out_toks, axis=1)                  # [B, N]
-        gen_logp = jnp.stack(out_logp, axis=1)
+        gen = jnp.stack(out_toks, axis=1) if isinstance(out_toks, list) \
+            else out_toks                                  # [B, N]
+        gen_logp = jnp.stack(out_logp, axis=1) if isinstance(out_logp, list) \
+            else out_logp
         full = jnp.concatenate([tokens, gen], axis=1)
         logp = jnp.concatenate([jnp.zeros((B, P)), gen_logp], axis=1)
         mask = jnp.concatenate(
@@ -179,8 +317,9 @@ class Rollout:
         pools = self.model.init_paged_pools(B * nb, ps, dtype)
         seq_ids = list(range(B))
         bt = jnp.asarray(pm.block_table_array(seq_ids, nb))
-        logits, pools = self._prefill(params, batch, pools, bt,
-                                      jnp.full((B,), P, jnp.int32))
+        pbatch, lens, Sb = self._bucketed_prompt(tokens)
+        self.compile_cache.lookup(("prefill", "paged", Sb))
+        logits, pools, _h = self._prefill(params, pbatch, pools, bt, lens)
         tok, logp0 = sample_token(jax.random.fold_in(key, 0), logits,
                                   temperature=self.temperature,
                                   top_k=self.top_k)
@@ -204,3 +343,90 @@ class Rollout:
             pm.free_seq(b)
         self.page_manager = pm
         return self._finalize(tokens, out_toks, out_logp, pools)
+
+    def _generate_spec(self, params, batch, max_new_tokens: int, key):
+        """Self-speculative greedy generation (dense or paged backend).
+
+        Per step: draft ``spec_k`` tokens per row from the MTP chain, run
+        ONE (spec_k+1)-token verify forward, accept the greedy-consistent
+        prefix — ``n_acc + 1`` tokens and logps, all bit-identical to the
+        vanilla greedy stream. Rows that reach ``max_new_tokens`` early get
+        position -1 (dead writes) until the batch drains; emission counts
+        are per-row host state, so rows advance at their own accept rate."""
+        tokens = batch["tokens"]
+        B, P = tokens.shape
+        k1 = self.spec_k + 1
+        stats = self.spec_stats = {"steps": 0, "drafted": 0, "accepted": 0}
+        pbatch, lens, Sb = self._bucketed_prompt(tokens)
+        self.compile_cache.lookup(("prefill", self.backend, Sb))
+        pm = None
+        if self.backend == "paged":
+            from repro.paged import PageManager, pool_token_bytes
+            ps = self.page_size
+            # pool sized by capacity (not P + max_new): one pool shape per
+            # Rollout, so ragged PPO batches never recompile the decode
+            nb = -(-self._cap_eff // ps)
+            dtype = jax.tree.leaves(params)[0].dtype
+            pm = PageManager(
+                B * nb, ps,
+                bytes_per_token=pool_token_bytes(self.cfg, dtype)
+                * self.cfg.num_layers)
+            for b in range(B):
+                pm.allocate(b, P)
+            pools = self.model.init_paged_pools(B * nb, ps, dtype)
+            seq_ids = list(range(B))
+            bt = jnp.asarray(pm.block_table_array(seq_ids, nb))
+            logits, state, h_last = self._prefill(params, pbatch, pools, bt,
+                                                  lens)
+        else:
+            logits, state, h_last = self._prefill(params, pbatch, lens)
+        tok0, logp0 = sample_token(jax.random.fold_in(key, 0), logits,
+                                   temperature=self.temperature,
+                                   top_k=self.top_k)
+        gen = np.zeros((B, max_new_tokens), np.int32)
+        gen_lp = np.zeros((B, max_new_tokens), np.float32)
+        gen[:, 0] = np.asarray(tok0)
+        gen_lp[:, 0] = np.asarray(logp0)
+        n_em = np.ones(B, np.int64)         # tokens emitted per row
+        last_tok = np.asarray(tok0, np.int32).copy()
+        while (n_em < max_new_tokens).any():
+            live = n_em < max_new_tokens
+            pos = P + n_em - 1              # position of each row's last_tok
+            pos_in = np.where(live, pos, -1).astype(np.int32)
+            if pm is not None:
+                for b in np.nonzero(live)[0]:
+                    pm.append_tokens(int(b), k1)
+                bt = jnp.asarray(pm.block_table_array(seq_ids, nb))
+                self.compile_cache.lookup(("spec", "paged", B, k1))
+                greedy, lp, n_acc, h_last, state = self._spec(
+                    params, state, h_last, jnp.asarray(last_tok),
+                    jnp.asarray(pos_in), bt, jnp.asarray(live))
+            else:
+                self.compile_cache.lookup(("spec", "dense", B, k1))
+                greedy, lp, n_acc, h_last, state = self._spec(
+                    params, state, h_last, jnp.asarray(last_tok),
+                    jnp.asarray(pos_in), jnp.asarray(live))
+            greedy = np.asarray(greedy)
+            lp_np = np.asarray(lp)
+            n_acc_np = np.asarray(n_acc)
+            stats["steps"] += 1
+            stats["drafted"] += self.spec_k * int(live.sum())
+            stats["accepted"] += int(n_acc_np[live].sum())
+            for b in np.nonzero(live)[0]:
+                take = min(int(n_acc_np[b]) + 1,
+                           max_new_tokens - int(n_em[b]))
+                e = int(n_em[b])
+                gen[b, e:e + take] = greedy[b, :take]
+                gen_lp[b, e:e + take] = lp_np[b, :take]
+                n_em[b] += take
+                last_tok[b] = greedy[b, take - 1]
+                if pm is not None:
+                    # drop page claims for rejected/untaken draft positions;
+                    # logical length == position of the row's last token
+                    pm.truncate(int(b), P + int(n_em[b]) - 1)
+        if pm is not None:
+            for b in range(B):
+                pm.free_seq(b)
+            self.page_manager = pm
+        return self._finalize(tokens, jnp.asarray(gen),
+                              jnp.asarray(gen_lp), state)

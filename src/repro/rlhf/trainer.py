@@ -33,7 +33,7 @@ import dataclasses
 import gc
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -303,6 +303,13 @@ class RLHFConfig:
     # deliberately uses non-divisible batches so state shards but batches
     # replicate and the arithmetic stays exactly single-device.
     batch_shard: str = "throughput"
+    # fast decode path (DESIGN.md "Fast decode path"): MTP self-speculative
+    # greedy rollout — bit-identical tokens/logps to vanilla greedy, fewer
+    # decode dispatches. Forces temperature=0 / top_k=0 for the rollout.
+    spec_decode: bool = False
+    spec_k: int = 2
+    # compile-bucket ladder for ragged prompt lengths (None = off)
+    capture_buckets: Optional[Sequence[int]] = None
 
 
 class RLHFTrainer:
@@ -348,9 +355,12 @@ class RLHFTrainer:
             self._init_hydra(actor_cfg, rl, key)
         else:
             self._init_separate(actor_cfg, critic_cfg, rl, key)
-        self.rollout = Rollout(self.actor, actor_cfg,
-                               capacity=rl.prompt_len + rl.gen_len,
-                               temperature=rl.temperature, top_k=rl.top_k)
+        self.rollout = Rollout(
+            self.actor, actor_cfg, capacity=rl.prompt_len + rl.gen_len,
+            temperature=0.0 if rl.spec_decode else rl.temperature,
+            top_k=0 if rl.spec_decode else rl.top_k,
+            spec_decode=rl.spec_decode, spec_k=rl.spec_k,
+            capture_buckets=rl.capture_buckets)
         self.offload = self.offload_lot = None
         if rl.offload != "none":
             self._init_offload(rl)

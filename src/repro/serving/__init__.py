@@ -1,3 +1,4 @@
+from repro.serving.buckets import BucketLadder, CompileCache
 from repro.serving.scheduler import ContinuousBatcher, Request
 
-__all__ = ["ContinuousBatcher", "Request"]
+__all__ = ["BucketLadder", "CompileCache", "ContinuousBatcher", "Request"]

@@ -1,0 +1,104 @@
+"""Compile-bucket ladder + compile-cache accounting for the decode path.
+
+JAX recompiles a jitted function silently for every new input shape, so a
+serving loop fed ragged traffic (arbitrary prompt lengths, varying live
+slot counts) pays a fresh XLA compile per distinct shape. The fix is the
+capture-list idiom of GPU serving engines (aphrodite/vLLM pre-capture
+graphs for ``_BATCH_SIZES_TO_CAPTURE``), translated to JAX: pick every
+dynamic extent from a small sorted *bucket ladder*, pad the inputs up to
+the bucket, and mask the padding (right-padded prompts via per-row
+``lengths``; idle slots via ``position = -1``). The compiled-program set is
+then bounded by the ladder, and an explicit warmup pass compiles every
+bucket before traffic arrives.
+
+XLA's own compile cache is invisible from Python, so :class:`CompileCache`
+tracks the key set *we* present to jit — ``(kind, backend, bucket...)`` —
+and counts hits/misses; a miss after warmup is a ``recompile`` (a shape
+escaped the ladder) and shows up in traces and the metrics registry.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional, Sequence, Tuple
+
+Key = Tuple  # (kind, backend, *static extents)
+
+# aphrodite's _BATCH_SIZES_TO_CAPTURE idiom: dense low end, then powers of
+# two — covers both live-slot counts and (scaled up) prompt lengths
+DEFAULT_CAPTURE = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048)
+
+
+class BucketLadder:
+    """Sorted capture list; ``fit(n)`` returns the smallest bucket >= n.
+
+    Values above the top bucket fall through to their exact size — the
+    call still works, it just compiles its own program (and the compile
+    cache reports it as a post-warmup miss, i.e. a recompile)."""
+
+    def __init__(self, buckets: Iterable[int]):
+        self.buckets = tuple(sorted({int(b) for b in buckets if int(b) > 0}))
+        assert self.buckets, "empty bucket ladder"
+
+    def fit(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return n
+
+    def up_to(self, n: int) -> Tuple[int, ...]:
+        """The ladder rungs <= n plus, when n overflows every rung, n
+        itself — the shapes a warmup pass should capture for extent n."""
+        rungs = tuple(b for b in self.buckets if b <= n)
+        if not rungs or rungs[-1] < n:
+            rungs += (self.fit(n),)
+        return rungs
+
+    @classmethod
+    def default(cls, cap: Optional[int] = None) -> "BucketLadder":
+        buckets: Sequence[int] = DEFAULT_CAPTURE
+        if cap is not None:
+            buckets = [b for b in DEFAULT_CAPTURE if b <= cap] or [cap]
+            if buckets[-1] < cap:
+                buckets.append(cap)
+        return cls(buckets)
+
+
+class CompileCache:
+    """Shadow of the jit program cache, keyed on the static extents we
+    control. ``lookup(key)`` returns True on a hit; the first sighting of a
+    key is a miss (XLA compiled a new program for it). Misses recorded
+    after ``finish_warmup()`` additionally count as recompiles — the
+    metric a correctly-sized ladder drives to zero."""
+
+    def __init__(self):
+        self._keys: set = set()
+        self.hits = 0
+        self.misses = 0
+        self.recompiles = 0
+        self.warmed = False
+
+    def warm(self, key: Key) -> None:
+        """Register a key during warmup capture (not a hit, not a miss)."""
+        self._keys.add(key)
+
+    def finish_warmup(self) -> None:
+        self.warmed = True
+
+    def lookup(self, key: Key) -> bool:
+        if key in self._keys:
+            self.hits += 1
+            return True
+        self._keys.add(key)
+        self.misses += 1
+        if self.warmed:
+            self.recompiles += 1
+        return False
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 1.0
+
+    def stats(self) -> Dict[str, float]:
+        return {"hits": self.hits, "misses": self.misses,
+                "recompiles": self.recompiles, "hit_rate": self.hit_rate,
+                "keys": len(self._keys)}

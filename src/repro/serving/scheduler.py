@@ -16,13 +16,29 @@ Two cache layouts behind one admit/decode/retire loop:
 
 One jitted decode step serves all active slots either way; idle slots
 decode into garbage that is masked out.
+
+Two decode-path speed features ride on top (DESIGN.md "Fast decode path"):
+
+  * ``capture_buckets`` — a compile-bucket ladder (``serving.buckets``):
+    prompts pad to the smallest capture length >= P (masked exactly via
+    per-row ``lengths``), paged decode batches pad to a live-slot bucket
+    (idle rows carry ``position = -1`` and write nothing), and an explicit
+    warmup pass at construction compiles every bucket before traffic
+    arrives. The compile cache tracks hits/misses/recompiles per
+    ``(kind, backend, bucket)`` key and feeds ``serving_*`` metrics.
+  * ``spec_decode`` — MTP self-speculative greedy decoding: draft
+    ``spec_k`` tokens per slot from the model's MTP chain, verify all
+    drafts in ONE batched forward, accept the greedy-consistent prefix.
+    Output is bit-identical to vanilla greedy decoding by construction
+    (every emitted token is the verify forward's own argmax); drafts only
+    move the accept rate. Greedy-only (``temperature == 0, top_k == 0``).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Deque, List, Optional
+from typing import Deque, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +46,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import Model
-from repro.rlhf.rollout import sample_token
+from repro.rlhf.rollout import sample_token, spec_verify_step
+from repro.serving.buckets import BucketLadder, CompileCache
 
 
 @dataclasses.dataclass
@@ -50,7 +67,10 @@ class ContinuousBatcher:
                  temperature: float = 1.0, top_k: int = 0,
                  eos_id: Optional[int] = None, seed: int = 0,
                  cache_backend: str = "dense", page_size: int = 16,
-                 num_pages: Optional[int] = None, telemetry=None):
+                 num_pages: Optional[int] = None, telemetry=None,
+                 capture_buckets: Optional[Sequence[int]] = None,
+                 spec_decode: bool = False, spec_k: int = 2,
+                 warmup: bool = True):
         assert cache_backend in ("dense", "paged"), cache_backend
         self.telemetry = telemetry          # obs.RunTelemetry | None
         self.model, self.cfg, self.params = model, cfg, params
@@ -66,6 +86,28 @@ class ContinuousBatcher:
         self._next_rid = 0
         cache_dtype = jax.tree.leaves(params)[0].dtype
 
+        # compile-bucket ladder + compile-cache accounting ------------------
+        self.compile_cache = CompileCache()
+        self.prefill_ladder = (BucketLadder(capture_buckets)
+                               if capture_buckets else None)
+        self.slot_ladder = None
+        if capture_buckets and cache_backend == "paged":
+            # live-slot buckets: ladder rungs clipped to the slot count
+            # (dense rows cannot be subset — its decode stays full-B)
+            self.slot_ladder = BucketLadder(
+                [min(b, slots) for b in capture_buckets] + [slots])
+
+        # speculative decoding ----------------------------------------------
+        self.spec_decode = spec_decode
+        self.spec_k = spec_k
+        if spec_decode:
+            assert model.supports_spec_decode(), \
+                "spec decode needs a token-input attention-only model " \
+                "with mtp_depth > 0"
+            assert temperature <= 0.0 and top_k == 0, \
+                "spec decode is greedy-only (temperature=0, top_k=0)"
+            self.h_last = jnp.zeros((slots, cfg.d_model), cache_dtype)
+
         if cache_backend == "dense":
             self.caches = model.init_cache(slots, capacity, cache_dtype)
             self.caches = {"segments": self.caches, "cross_kv": None}
@@ -78,8 +120,28 @@ class ContinuousBatcher:
                 return t, caches
 
             self._decode = jax.jit(decode, donate_argnums=(1,))
-            self._prefill = jax.jit(
-                lambda params, batch: model.prefill(params, batch, capacity))
+            # the lengths-masked prefill needs token inputs and attention
+            # kinds; plain traffic on exotic models keeps the legacy path
+            self._rich_prefill = self.prefill_ladder is not None or \
+                spec_decode
+            if self._rich_prefill:
+                self._prefill = jax.jit(
+                    lambda params, batch, lens: model.prefill(
+                        params, batch, capacity, lengths=lens, return_h=True))
+            else:
+                self._prefill = jax.jit(
+                    lambda params, batch: model.prefill(params, batch,
+                                                        capacity))
+
+            if spec_decode:
+                def spec_step(params, caches, h_last, tok, pos, live):
+                    return spec_verify_step(
+                        model, spec_k,
+                        lambda seq, positions: model.decode_multi(
+                            params, caches, seq, positions),
+                        params, h_last, tok, pos, live)
+
+                self._spec = jax.jit(spec_step, donate_argnums=(1,))
         else:
             from repro.paged import PageManager, pool_token_bytes
             self.page_size = page_size
@@ -107,8 +169,84 @@ class ContinuousBatcher:
             self._decode = jax.jit(decode, donate_argnums=(1,))
             self._prefill = jax.jit(
                 lambda params, batch, pools, bt, lens: model.paged_prefill(
-                    params, batch, pools, bt, lens),
+                    params, batch, pools, bt, lens, return_h=True),
                 donate_argnums=(2,))
+
+            if spec_decode:
+                def spec_step(params, pools, h_last, tok, pos, bt, live):
+                    return spec_verify_step(
+                        model, spec_k,
+                        lambda seq, positions: model.paged_decode_multi(
+                            params, pools, seq, positions, bt),
+                        params, h_last, tok, pos, live)
+
+                self._spec = jax.jit(spec_step, donate_argnums=(1,))
+
+        if warmup and self.prefill_ladder is not None:
+            self.warmup()
+
+    # -- warmup capture ------------------------------------------------------
+    def warmup(self, max_prompt_len: Optional[int] = None) -> None:
+        """Compile every ladder bucket before traffic arrives. Runs real
+        calls on the live caches with only dead writes (``lengths = 0``,
+        ``position = -1``), so it must precede admission — which it does:
+        construction is the one moment both backends are guaranteed empty.
+        After this, any post-warmup compile-cache miss is a recompile."""
+        cc = self.compile_cache
+        if self.prefill_ladder is not None:
+            for Sb in self.prefill_ladder.up_to(
+                    max_prompt_len or self.capacity):
+                batch = {"tokens": jnp.zeros((1, Sb), jnp.int32)}
+                lens = jnp.zeros((1,), jnp.int32)
+                if self.backend == "dense":
+                    self._prefill(self.params, batch, lens)
+                else:
+                    bt = jnp.full((1, self.max_blocks), -1, jnp.int32)
+                    _, self.pools, _ = self._prefill(
+                        self.params, batch, self.pools, bt, lens)
+                cc.warm(("prefill", self.backend, Sb))
+        for nb in (self.slot_ladder.up_to(self.B)
+                   if self.slot_ladder is not None else (self.B,)):
+            tok = jnp.zeros((nb,), jnp.int32)
+            pos = jnp.full((nb,), -1, jnp.int32)
+            live = jnp.zeros((nb,), bool)
+            self.key, k = jax.random.split(self.key)
+            if self.backend == "dense":
+                if nb != self.B:
+                    continue                    # dense decode is full-B only
+                if self.spec_decode:
+                    *_, self.caches = self._spec(
+                        self.params, self.caches, self.h_last, tok, pos,
+                        live)
+                    cc.warm(self._decode_key(nb))
+                else:
+                    _, self.caches = self._decode(
+                        self.params, self.caches, tok, pos, k, live)
+                    cc.warm(self._decode_key(nb))
+            else:
+                bt = jnp.full((nb, self.max_blocks), -1, jnp.int32)
+                if self.spec_decode:
+                    h = jnp.zeros((nb, self.cfg.d_model),
+                                  self.h_last.dtype)
+                    *_, self.pools = self._spec(
+                        self.params, self.pools, h, tok, pos, bt, live)
+                else:
+                    _, self.pools = self._decode(
+                        self.params, self.pools, tok, pos, bt, k, live)
+                cc.warm(self._decode_key(nb))
+        cc.finish_warmup()
+
+    def _decode_key(self, nb: int):
+        kind = "spec" if self.spec_decode else "decode"
+        extents = (nb, self.spec_k + 1) if self.spec_decode else (nb,)
+        return (kind, self.backend) + extents
+
+    def _record_key(self, key) -> None:
+        hit = self.compile_cache.lookup(key)
+        if self.telemetry is not None and not hit:
+            self.telemetry.tracer.instant(
+                f"compile:{':'.join(str(k) for k in key)}", "serving",
+                recompile=self.compile_cache.warmed)
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int) -> Request:
         prompt = np.asarray(prompt, np.int32)
@@ -128,9 +266,12 @@ class ContinuousBatcher:
         return req
 
     # -- paged helpers -------------------------------------------------------
+    def _block_tables_for(self, sids: Sequence[Optional[int]]) -> jnp.ndarray:
+        return jnp.asarray(self.pm.block_table_array(sids, self.max_blocks))
+
     def _slot_block_tables(self) -> jnp.ndarray:
         sids = [r.rid if r is not None else None for r in self.active]
-        return jnp.asarray(self.pm.block_table_array(sids, self.max_blocks))
+        return self._block_tables_for(sids)
 
     def _apply_copies(self, copies):
         """Perform CoW page copies on every layer pool."""
@@ -178,26 +319,39 @@ class ContinuousBatcher:
                 full = np.concatenate(
                     [req.prompt, np.asarray(req.out_tokens, np.int32)])
                 P = len(full)
+                # pad the prompt up to its capture bucket; the per-row
+                # ``lengths`` makes the padding exactly invisible
+                Sb = self.prefill_ladder.fit(P) if self.prefill_ladder \
+                    else P
+                padded = np.zeros(Sb, np.int32)
+                padded[:P] = full
+                lens = jnp.full((1,), P, jnp.int32)
                 if self.backend == "paged":
                     # gate admission on pages for the prefill + first decode
                     if not self.pm.can_allocate(P + 1):
                         break
                     self.queue.popleft()
                     self.pm.allocate(req.rid, P)
-                    bt_row = jnp.asarray(self.pm.block_table_array(
-                        [req.rid], self.max_blocks))
-                    lg, self.pools = self._prefill(
-                        self.params, {"tokens": jnp.asarray(full)[None]},
-                        self.pools, bt_row,
-                        jnp.full((1,), P, jnp.int32))
+                    bt_row = self._block_tables_for([req.rid])
+                    lg, self.pools, h1 = self._prefill(
+                        self.params, {"tokens": jnp.asarray(padded)[None]},
+                        self.pools, bt_row, lens)
                 else:
                     self.queue.popleft()
-                    lg, caches1 = self._prefill(
-                        self.params, {"tokens": jnp.asarray(full)[None]})
+                    if self._rich_prefill:
+                        lg, caches1, h1 = self._prefill(
+                            self.params,
+                            {"tokens": jnp.asarray(padded)[None]}, lens)
+                    else:
+                        lg, caches1 = self._prefill(
+                            self.params,
+                            {"tokens": jnp.asarray(padded)[None]})
+                        h1 = None
                     # write slot s of the pool from the batch-of-1 prefill
                     self.caches["segments"] = jax.tree.map(
                         lambda pool, new: pool.at[:, s:s + 1].set(new),
                         self.caches["segments"], caches1["segments"])
+                self._record_key(("prefill", self.backend, Sb))
                 self.key, k = jax.random.split(self.key)
                 tok, _ = sample_token(k, lg, temperature=self.temperature,
                                       top_k=self.top_k)
@@ -205,6 +359,8 @@ class ContinuousBatcher:
                 self.pos[s] = P
                 self.last_tok[s] = int(tok[0])
                 req.out_tokens.append(int(tok[0]))
+                if self.spec_decode:
+                    self.h_last = self.h_last.at[s].set(h1[0])
                 if self.telemetry is not None:
                     reg = self.telemetry.registry
                     reg.counter("serving_admissions_total",
@@ -233,9 +389,10 @@ class ContinuousBatcher:
                 self.active[s] = None           # slot freed
         return done
 
-    def _grow_pages(self):
-        """Claim the page each live slot's next token will write; preempt
-        the youngest request when the pool is dry."""
+    def _grow_pages(self, n: int = 1):
+        """Claim the page(s) each live slot's next ``n`` tokens will write
+        (spec decode grows by ``spec_k + 1`` before the verify forward);
+        preempt the youngest request when the pool is dry."""
         from repro.paged import PagePoolExhausted
         for s in range(self.B):
             req = self.active[s]
@@ -243,21 +400,150 @@ class ContinuousBatcher:
                 continue
             while True:
                 try:
-                    self._apply_copies(self.pm.append_token(req.rid))
+                    self._apply_copies(self.pm.append_tokens(req.rid, n))
                     break
                 except PagePoolExhausted:
                     if not self._preempt_youngest(protect=s):
                         raise
 
+    # -- decode flavours -----------------------------------------------------
+    def _append_emitted(self, s: int, emitted_toks) -> int:
+        """Append a run of emitted tokens to slot ``s``'s request, stopping
+        at EOS or the request's token budget. Returns the count actually
+        taken (== position advance). Any truncation here retires the slot
+        this very step, so the cache's extra draft entries — masked by
+        position until overwritten — are never observed."""
+        req = self.active[s]
+        taken = 0
+        for tokv in emitted_toks:
+            req.out_tokens.append(int(tokv))
+            taken += 1
+            if (self.eos_id is not None and int(tokv) == self.eos_id) or \
+                    len(req.out_tokens) >= req.max_new_tokens:
+                break
+        self.pos[s] += taken
+        self.last_tok[s] = req.out_tokens[-1]
+        return taken
+
+    def _vanilla_decode(self, live_slots: List[int]) -> None:
+        self.key, k = jax.random.split(self.key)
+        if self.backend == "paged" and self.slot_ladder is not None:
+            # gather live rows into a slot bucket; pad rows are idle
+            # (position -1 -> dropped writes, masked sampling)
+            nb = self.slot_ladder.fit(len(live_slots))
+            tok_in = np.zeros(nb, np.int64)
+            pos_in = np.full(nb, -1, np.int64)
+            tok_in[:len(live_slots)] = self.last_tok[live_slots]
+            pos_in[:len(live_slots)] = self.pos[live_slots]
+            sids = [self.active[s].rid for s in live_slots]
+            sids += [None] * (nb - len(live_slots))
+            live_v = jnp.asarray(np.arange(nb) < len(live_slots))
+            self._record_key(self._decode_key(nb))
+            tok, self.pools = self._decode(
+                self.params, self.pools, jnp.asarray(tok_in, jnp.int32),
+                jnp.asarray(pos_in, jnp.int32), self._block_tables_for(sids),
+                k, live_v)
+            tok = np.asarray(tok)
+            for j, s in enumerate(live_slots):
+                self._append_emitted(s, [tok[j]])
+            return
+        live = np.array([r is not None for r in self.active])
+        tok_in = jnp.asarray(self.last_tok, jnp.int32)
+        pos_in = jnp.asarray(self.pos, jnp.int32)
+        self._record_key(self._decode_key(self.B))
+        if self.backend == "paged":
+            pos_in = jnp.where(jnp.asarray(live), pos_in, -1)
+            tok, self.pools = self._decode(
+                self.params, self.pools, tok_in, pos_in,
+                self._slot_block_tables(), k, jnp.asarray(live))
+        else:
+            tok, self.caches = self._decode(
+                self.params, self.caches, tok_in, pos_in, k,
+                jnp.asarray(live))
+        tok = np.asarray(tok)
+        for s in live_slots:
+            self._append_emitted(s, [tok[s]])
+
+    def _spec_decode_step(self, live_slots: List[int]) -> None:
+        """Draft + one batched verify + accept for all live slots."""
+        n_live = len(live_slots)
+        if self.backend == "paged" and self.slot_ladder is not None:
+            nb = self.slot_ladder.fit(n_live)
+        elif self.backend == "paged":
+            nb = self.B
+        else:
+            nb = self.B
+        if self.backend == "paged":
+            tok_in = np.zeros(nb, np.int64)
+            pos_in = np.full(nb, -1, np.int64)
+            tok_in[:n_live] = self.last_tok[live_slots]
+            pos_in[:n_live] = self.pos[live_slots]
+            sids = [self.active[s].rid for s in live_slots]
+            sids += [None] * (nb - n_live)
+            live_v = jnp.asarray(np.arange(nb) < n_live)
+            h_in = self.h_last[np.asarray(live_slots, np.int32)]
+            if nb > n_live:
+                h_in = jnp.concatenate(
+                    [h_in, jnp.zeros((nb - n_live,) + h_in.shape[1:],
+                                     h_in.dtype)])
+            self._record_key(self._decode_key(nb))
+            greedy, _lp, n_acc, h_new, self.pools = self._spec(
+                self.params, self.pools, h_in,
+                jnp.asarray(tok_in, jnp.int32), jnp.asarray(pos_in, jnp.int32),
+                self._block_tables_for(sids), live_v)
+            rows = range(n_live)
+        else:
+            live = np.array([r is not None for r in self.active])
+            pos_in = np.where(live, self.pos, -1)
+            self._record_key(self._decode_key(nb))
+            greedy, _lp, n_acc, h_new, self.caches = self._spec(
+                self.params, self.caches, self.h_last,
+                jnp.asarray(self.last_tok, jnp.int32),
+                jnp.asarray(pos_in, jnp.int32), jnp.asarray(live))
+            rows = live_slots
+        greedy = np.asarray(greedy)
+        n_acc_np = np.asarray(n_acc)
+        reg = self.telemetry.registry if self.telemetry is not None else None
+        for j, s in zip(rows, live_slots):
+            pos_before = int(self.pos[s])
+            take = int(n_acc_np[j]) + 1
+            taken = self._append_emitted(s, greedy[j, :take])
+            if self.backend == "paged":
+                # drop the page claim for rejected (and untaken) drafts
+                self.pm.truncate(self.active[s].rid, pos_before + taken)
+            if reg is not None:
+                reg.histogram(
+                    "serving_specdec_accepted_len",
+                    "accepted draft-prefix length per slot step").observe(
+                    int(n_acc_np[j]))
+                rejected = self.spec_k - int(n_acc_np[j])
+                if rejected:
+                    reg.counter(
+                        "serving_specdec_drafts_rejected_total",
+                        "draft tokens rejected by the verify step").inc(
+                        rejected)
+        # live rows of h_new are the trunk state at each slot's new last
+        # accepted position; stale rows are refreshed at admission
+        if self.backend == "paged":
+            self.h_last = self.h_last.at[
+                np.asarray(live_slots, np.int32)].set(h_new[:n_live])
+        else:
+            self.h_last = h_new
+
     def _emit_step(self, t0_us: float, n_tokens: int, n_done: int) -> None:
         """One ``serve_step`` span + the backend occupancy/throughput
-        metrics, all read from state the step already maintains."""
+        metrics, all read from state the step already maintains.
+        ``n_tokens`` is a delta of per-request token counts, so bucket
+        padding and idle decode rows can never inflate tokens/s — only
+        tokens appended to live (admitted, non-padded) requests count."""
         tel = self.telemetry
         tr = tel.tracer
         dur_us = tr.now_us() - t0_us
+        cc = self.compile_cache
         args = {"tokens": n_tokens, "retired": n_done,
                 "queued": len(self.queue),
                 "active": sum(r is not None for r in self.active),
+                "recompiles": cc.recompiles,
                 "kv_reserved_bytes": self.kv_reserved_bytes()}
         reg = tel.registry
         if n_tokens:
@@ -268,6 +554,12 @@ class ContinuousBatcher:
             reg.gauge("serving_tokens_per_s",
                       "decode throughput of the last step").set(
                 n_tokens / (dur_us * 1e-6))
+        reg.gauge("serving_compile_cache_hit_rate",
+                  "compile-cache hit rate over all jit keys").set(
+            cc.hit_rate)
+        rec = reg.counter("serving_recompiles_total",
+                          "post-warmup compile-cache misses (bucket escapes)")
+        rec.inc(cc.recompiles - rec.value())
         if self.backend == "paged":
             st = self.pm.stats
             args.update(pages_in_use=st.pages_in_use,
@@ -301,27 +593,15 @@ class ContinuousBatcher:
             if self.telemetry is not None else 0
         self._admit()
         if self.backend == "paged":
-            self._grow_pages()
-        live = np.array([r is not None for r in self.active])
-        if live.any():
-            self.key, k = jax.random.split(self.key)
-            tok_in = jnp.asarray(self.last_tok, jnp.int32)
-            pos_in = jnp.asarray(self.pos, jnp.int32)
-            if self.backend == "paged":
-                pos_in = jnp.where(jnp.asarray(live), pos_in, -1)
-                tok, self.pools = self._decode(
-                    self.params, self.pools, tok_in, pos_in,
-                    self._slot_block_tables(), k, jnp.asarray(live))
+            # spec decode writes up to k+1 tokens per slot this step
+            self._grow_pages(self.spec_k + 1 if self.spec_decode else 1)
+        # recompute after growth: preemption may have evicted a slot
+        live_slots = [s for s, r in enumerate(self.active) if r is not None]
+        if live_slots:
+            if self.spec_decode:
+                self._spec_decode_step(live_slots)
             else:
-                tok, self.caches = self._decode(
-                    self.params, self.caches, tok_in, pos_in, k,
-                    jnp.asarray(live))
-            tok = np.asarray(tok)
-            for s, req in enumerate(self.active):
-                if req is not None:
-                    req.out_tokens.append(int(tok[s]))
-                    self.last_tok[s] = int(tok[s])
-                    self.pos[s] += 1
+                self._vanilla_decode(live_slots)
         self.steps += 1
         done = self._retire()
         if self.telemetry is not None:

@@ -100,7 +100,10 @@ def param_pspecs(cfg: ModelConfig, mesh: Mesh,
 
     def spec_for(path: Tuple[str, ...], leaf) -> P:
         shape = leaf.shape
-        stacked = any(k.startswith("segment") or k == "encoder" for k in path)
+        # mtp_extra stacks MTP modules for depths 2..k on a leading axis,
+        # exactly like scanned segments — strip it and apply name rules
+        stacked = any(k.startswith("segment") or k in ("encoder", "mtp_extra")
+                      for k in path)
         lead = (None,) if stacked else ()
         if stacked:
             shape = shape[1:]

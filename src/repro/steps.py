@@ -87,14 +87,28 @@ def critic_loss(values, batch, *, clip_eps: float = 0.2):
     return loss, {"vf_loss": loss}
 
 
-def mtp_loss(logits, tokens, mask):
-    """MTP CE: logits[:, i] scores tokens[:, i+2] (full-length logits,
-    last two positions are padding)."""
+def mtp_loss(logits, tokens, mask, *, offset: int = 2):
+    """MTP CE: logits[:, i] scores tokens[:, i+offset] (full-length logits,
+    the last ``offset`` positions are padding). Depth-d logits of the
+    chained head use ``offset = d + 1``; the default 2 is depth 1."""
     S = tokens.shape[1]
-    tgt_full = jnp.pad(tokens[:, 2:], ((0, 0), (0, 2)))
-    nll = -_full_seq_logp(logits, tgt_full)[:, :S - 2]
-    m = mask[:, 2:].astype(jnp.float32)
+    tgt_full = jnp.pad(tokens[:, offset:], ((0, 0), (0, offset)))
+    nll = -_full_seq_logp(logits, tgt_full)[:, :S - offset]
+    m = mask[:, offset:].astype(jnp.float32)
     return jnp.sum(nll * m) / jnp.maximum(m.sum(), 1.0)
+
+
+def mtp_chain_loss(model, params, h, batch):
+    """Mean CE over the depth-k MTP chain (depth 1 reproduces the old
+    single-module loss bit-for-bit). ``params`` may be a base tree (hydra)
+    — the chain always runs adapter-free, like the trunk aux loss."""
+    lgs = model.mtp_chain_logits(params, h, batch["tokens"])
+    losses = [mtp_loss(lg, batch["tokens"], batch["loss_mask"], offset=d + 1)
+              for d, lg in enumerate(lgs, start=1)]
+    total = losses[0]
+    for extra in losses[1:]:
+        total = total + extra
+    return total / len(losses)
 
 
 def lm_loss(logits, tokens, mask, *, prefix: int = 0):
@@ -220,8 +234,7 @@ def make_train_step(model: Model, cfg: ModelConfig, *, lr: float = 3e-5,
             loss, metrics = ppo_actor_loss(logits, batch, prefix=prefix,
                                            kl_coef=kl_coef)
         if cfg.mtp_depth and kind != "critic":
-            mtp_lg = model.mtp_logits(params, h, batch["tokens"])
-            mtp = mtp_loss(mtp_lg, batch["tokens"], batch["loss_mask"])
+            mtp = mtp_chain_loss(model, params, h, batch)
             loss = loss + 0.1 * mtp
             metrics["mtp_loss"] = mtp
         return loss + aux, metrics
@@ -312,8 +325,7 @@ def make_lora_train_step(model: Model, cfg: ModelConfig, *, lr: float = 3e-5,
             loss, metrics = ppo_actor_loss(logits, batch, prefix=prefix,
                                            kl_coef=kl_coef)
         if cfg.mtp_depth and kind != "critic":
-            mtp_lg = model.mtp_logits(base_params, h, batch["tokens"])
-            mtp = mtp_loss(mtp_lg, batch["tokens"], batch["loss_mask"])
+            mtp = mtp_chain_loss(model, base_params, h, batch)
             loss = loss + 0.1 * mtp
             metrics["mtp_loss"] = mtp
         return loss + aux, metrics

@@ -1,0 +1,384 @@
+"""Fast decode path: compile-bucket ladder + MTP self-speculative decoding.
+
+Covers (DESIGN.md "Fast decode path"):
+  * depth-k MTP plumbing — ``mtp_depth > 1`` init/load compatibility,
+    chained draft logits, the depth-1 tree staying bit-identical;
+  * multi-token cache primitives — ``decode_multi`` vs a sequential
+    ``decode_step`` oracle, paged multi-append vs single-append;
+  * greedy bit-identity of speculative decoding vs vanilla on the dense
+    AND paged backends, standalone and through the hydra merged-adapter
+    rollout and the continuous batcher (incl. EOS truncation);
+  * the bucket ladder — identical outputs across bucket boundaries with
+    zero post-warmup recompiles, and exactness of lengths-masked prefill;
+  * ``PageManager.append_tokens`` atomicity and ``truncate``.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.paged import PageManager, PagePoolExhausted
+from repro.rlhf.rollout import Rollout
+from repro.serving import BucketLadder, CompileCache, ContinuousBatcher
+
+
+def tiny_cfg(**kw):
+    base = dict(num_layers=2, d_model=64, d_ff=128, vocab_size=64,
+                num_heads=4, num_kv_heads=2, head_dim=16, mtp_depth=3)
+    base.update(kw)
+    return dataclasses.replace(get_config("llama3_2_3b").smoke(), **base)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_cfg()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _trees_equal(a, b):
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# --------------------------------------------------------------- mtp depth-k
+def test_smoke_config_keeps_mtp_depth():
+    """The smoke() depth-1 clamp is gone: depth-k survives to CPU scale."""
+    cfg = dataclasses.replace(get_config("deepseek_v3_671b"),
+                              mtp_depth=3).smoke()
+    assert cfg.mtp_depth == 3
+
+
+def test_depth_k_init_and_depth1_compat(setup):
+    cfg, model, params = setup
+    extra = params["mtp_extra"]
+    assert jax.tree.leaves(extra)[0].shape[0] == cfg.mtp_depth - 1
+    # depth-1 model from the same seed: no extras, identical shared tree
+    m1 = Model(dataclasses.replace(cfg, mtp_depth=1))
+    p1 = m1.init(jax.random.PRNGKey(0))
+    assert "mtp_extra" not in p1
+    assert _trees_equal(p1["mtp"], params["mtp"])
+    assert _trees_equal(p1["segment0"], params["segment0"])
+
+
+def test_chain_logits_depth1_matches_mtp_logits(setup):
+    cfg, model, params = setup
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0,
+                                          cfg.vocab_size)}
+    _, _, h = model.forward(params, batch)
+    chain = model.mtp_chain_logits(params, h, batch["tokens"])
+    assert len(chain) == cfg.mtp_depth
+    single = model.mtp_logits(params, h, batch["tokens"])
+    np.testing.assert_array_equal(np.asarray(chain[0]), np.asarray(single))
+
+
+def test_depth_k_params_shard(setup):
+    """mtp_extra's stacked-depth lead axis is stripped like a segment
+    stack, so every depth-k leaf gets a spec that divides its shape."""
+    cfg, model, params = setup
+    from repro.sharding import ShardingStrategy, param_pspecs
+    from tests.test_sharding import MESHES, _validate
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = param_pspecs(cfg, MESHES[0], ShardingStrategy(zero_stage=3),
+                         shapes)
+    assert "mtp_extra" in specs
+    _validate(specs, shapes, MESHES[0])
+
+
+# -------------------------------------------------- multi-token cache verify
+def test_decode_multi_matches_sequential(setup):
+    cfg, model, params = setup
+    B, P, T, cap = 2, 6, 4, 32
+    key = jax.random.PRNGKey(2)
+    prompts = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
+    toks = jax.random.randint(jax.random.fold_in(key, 1), (B, T), 0,
+                              cfg.vocab_size)
+    _, caches = model.prefill(params, {"tokens": prompts}, cap)
+    seq_caches = jax.tree.map(lambda x: x, caches)
+    seq_logits = []
+    for t in range(T):
+        lg, seq_caches = model.decode_step(
+            params, seq_caches, toks[:, t], jnp.full((B,), P + t, jnp.int32))
+        seq_logits.append(lg)
+    seq_logits = jnp.stack(seq_logits, 1)
+    positions = P + jnp.arange(T, dtype=jnp.int32)[None] \
+        + jnp.zeros((B, 1), jnp.int32)
+    multi_logits, h, _ = model.decode_multi(params, caches, toks, positions)
+    np.testing.assert_allclose(np.asarray(multi_logits),
+                               np.asarray(seq_logits), rtol=2e-5, atol=2e-5)
+    assert h.shape == (B, T, cfg.d_model)
+
+
+def test_paged_append_multi_matches_sequential():
+    from repro.paged import paged_cache as PC
+    cfg = tiny_cfg()
+    ps, num_pages = 4, 12
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim()
+    key = jax.random.PRNGKey(3)
+    B, T = 2, 3
+    pool = {"k": jax.random.normal(key, (num_pages, ps, kvh, hd)),
+            "v": jax.random.normal(jax.random.fold_in(key, 1),
+                                   (num_pages, ps, kvh, hd))}
+    k_t = jax.random.normal(jax.random.fold_in(key, 2), (B, T, kvh, hd))
+    v_t = jax.random.normal(jax.random.fold_in(key, 3), (B, T, kvh, hd))
+    bt = jnp.asarray([[0, 1, 2], [3, 4, -1]], jnp.int32)
+    positions = jnp.asarray([[5, 6, 7], [2, 3, -1]], jnp.int32)  # -1 = dead
+    multi = PC.append_decode_multi(pool, k_t, v_t, bt, positions)
+    seq = pool
+    for t in range(T):
+        seq = PC.append_decode(seq, k_t[:, t], v_t[:, t], bt,
+                               positions[:, t])
+    for name in ("k", "v"):
+        np.testing.assert_array_equal(np.asarray(multi[name]),
+                                      np.asarray(seq[name]))
+
+
+def test_prefill_lengths_masking_exact(setup):
+    """Bucket-padded prefill == unpadded prefill: same logits, and the
+    caches produce the same continuation."""
+    cfg, model, params = setup
+    B, P, pad, cap = 2, 7, 9, 32
+    prompts = jax.random.randint(jax.random.PRNGKey(4), (B, P), 0,
+                                 cfg.vocab_size)
+    lg_ref, c_ref = model.prefill(params, {"tokens": prompts}, cap)
+    padded = jnp.pad(prompts, ((0, 0), (0, pad)))
+    lg_b, c_b, h_b = model.prefill(params, {"tokens": padded}, cap,
+                                   lengths=jnp.full((B,), P, jnp.int32),
+                                   return_h=True)
+    np.testing.assert_allclose(np.asarray(lg_ref), np.asarray(lg_b),
+                               rtol=1e-6, atol=1e-6)
+    nxt = jnp.argmax(lg_ref, -1).astype(jnp.int32)
+    pos = jnp.full((B,), P, jnp.int32)
+    lg1_ref, _ = model.decode_step(params, c_ref, nxt, pos)
+    lg1_b, _ = model.decode_step(params, c_b, nxt, pos)
+    np.testing.assert_allclose(np.asarray(lg1_ref), np.asarray(lg1_b),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------- rollout bit-identity
+@pytest.mark.parametrize("backend", ["dense", "paged"])
+def test_rollout_specdec_bit_identical(setup, backend):
+    cfg, model, params = setup
+    key = jax.random.PRNGKey(5)
+    prompts = jax.random.randint(jax.random.PRNGKey(6), (3, 9), 0,
+                                 cfg.vocab_size)
+    batch, cap, gen = {"tokens": prompts}, 9 + 14, 14
+    van = Rollout(model, cfg, capacity=cap, temperature=0.0, top_k=0,
+                  backend=backend, page_size=4)
+    ref = van.generate(params, batch, gen, key)
+    spec = Rollout(model, cfg, capacity=cap, temperature=0.0, top_k=0,
+                   backend=backend, page_size=4, spec_decode=True, spec_k=3)
+    out = spec.generate(params, batch, gen, key)
+    np.testing.assert_array_equal(np.asarray(ref.tokens),
+                                  np.asarray(out.tokens))
+    np.testing.assert_allclose(np.asarray(ref.logp), np.asarray(out.logp),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ref.mask), np.asarray(out.mask))
+    if backend == "paged":
+        assert spec.page_manager.stats.pages_in_use == 0
+        spec.page_manager.check_invariants()
+
+
+def test_rollout_specdec_hydra_merged(setup):
+    """Spec decode through the hydra merged-weight path: drafts and verify
+    both use the merged tree, so output matches vanilla merged greedy."""
+    cfg, model, params = setup
+    from tests.test_hydra import randomized_adapter
+    adapter = randomized_adapter(model, params, 4, jax.random.PRNGKey(7))
+    key = jax.random.PRNGKey(8)
+    prompts = jax.random.randint(jax.random.PRNGKey(9), (2, 8), 0,
+                                 cfg.vocab_size)
+    batch, cap, gen = {"tokens": prompts}, 8 + 12, 12
+    van = Rollout(model, cfg, capacity=cap, temperature=0.0, top_k=0)
+    ref = van.generate(params, batch, gen, key, adapter=adapter)
+    spec = Rollout(model, cfg, capacity=cap, temperature=0.0, top_k=0,
+                   spec_decode=True, spec_k=2)
+    out = spec.generate(params, batch, gen, key, adapter=adapter)
+    np.testing.assert_array_equal(np.asarray(ref.tokens),
+                                  np.asarray(out.tokens))
+    np.testing.assert_allclose(np.asarray(ref.logp), np.asarray(out.logp),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_rollout_spec_k_beyond_trained_depth(setup):
+    """spec_k > mtp_depth reuses the deepest module; still greedy-exact."""
+    cfg, model, params = setup
+    key = jax.random.PRNGKey(10)
+    prompts = jax.random.randint(jax.random.PRNGKey(11), (2, 6), 0,
+                                 cfg.vocab_size)
+    batch, cap, gen = {"tokens": prompts}, 6 + 10, 10
+    ref = Rollout(model, cfg, capacity=cap, temperature=0.0,
+                  top_k=0).generate(params, batch, gen, key)
+    out = Rollout(model, cfg, capacity=cap, temperature=0.0, top_k=0,
+                  spec_decode=True,
+                  spec_k=cfg.mtp_depth + 2).generate(params, batch, gen, key)
+    np.testing.assert_array_equal(np.asarray(ref.tokens),
+                                  np.asarray(out.tokens))
+
+
+# ------------------------------------------------------- batcher bit-identity
+def _run_batcher(model, cfg, params, prompts, gens, **kw):
+    cb = ContinuousBatcher(model, cfg, params, slots=3, capacity=64,
+                           temperature=0.0, seed=7, **kw)
+    for p, g in zip(prompts, gens):
+        cb.submit(p, g)
+    done = cb.run_until_drained()
+    return {r.rid: r.out_tokens for r in done}, cb
+
+
+@pytest.mark.parametrize("backend", ["dense", "paged"])
+def test_batcher_specdec_bit_identical(setup, backend):
+    cfg, model, params = setup
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab_size, size=n)
+               for n in (5, 9, 12, 7, 3)]
+    gens = [11, 8, 13, 11, 9]
+    kw = dict(cache_backend=backend, page_size=8, eos_id=5)
+    ref, _ = _run_batcher(model, cfg, params, prompts, gens, **kw)
+    out, cb = _run_batcher(model, cfg, params, prompts, gens,
+                           spec_decode=True, spec_k=3,
+                           capture_buckets=(4, 8, 16, 32), **kw)
+    assert ref == out
+    if backend == "paged":
+        cb.pm.check_invariants()
+        assert cb.pm.stats.pages_in_use == 0
+
+
+def test_batcher_spec_preemption(setup):
+    """Spec decode under page pressure: grow-by-k+1 triggers preemption,
+    output still matches vanilla."""
+    cfg, model, params = setup
+    rng = np.random.RandomState(1)
+    prompts = [rng.randint(0, cfg.vocab_size, size=8) for _ in range(4)]
+    gens = [14] * 4
+    kw = dict(cache_backend="paged", page_size=8, num_pages=9)
+    ref, _ = _run_batcher(model, cfg, params, prompts, gens, **kw)
+    out, cb = _run_batcher(model, cfg, params, prompts, gens,
+                           spec_decode=True, spec_k=2, **kw)
+    assert ref == out
+    cb.pm.check_invariants()
+
+
+# ------------------------------------------------------------- bucket ladder
+def test_bucket_ladder_fit():
+    lad = BucketLadder((4, 8, 16))
+    assert [lad.fit(n) for n in (1, 4, 5, 8, 16, 17)] == [4, 4, 8, 8, 16, 17]
+    assert lad.up_to(16) == (4, 8, 16)
+    assert lad.up_to(20) == (4, 8, 16, 20)
+    assert BucketLadder.default(24).buckets[-1] == 24
+
+
+def test_compile_cache_recompile_accounting():
+    cc = CompileCache()
+    cc.warm(("decode", "dense", 4))
+    cc.finish_warmup()
+    assert cc.lookup(("decode", "dense", 4)) and cc.recompiles == 0
+    assert not cc.lookup(("decode", "dense", 5))
+    assert cc.recompiles == 1 and cc.hits == 1
+
+
+@pytest.mark.parametrize("backend", ["dense", "paged"])
+def test_bucket_boundary_identical_and_no_recompiles(setup, backend):
+    """Prompts at b-1 / b / b+1 around a bucket edge: outputs identical to
+    the unbucketed batcher and zero post-warmup recompiles."""
+    cfg, model, params = setup
+    rng = np.random.RandomState(2)
+    prompts = [rng.randint(0, cfg.vocab_size, size=n) for n in (7, 8, 9)]
+    gens = [10, 10, 10]
+    kw = dict(cache_backend=backend, page_size=8)
+    ref, _ = _run_batcher(model, cfg, params, prompts, gens, **kw)
+    out, cb = _run_batcher(model, cfg, params, prompts, gens,
+                           capture_buckets=(4, 8, 16, 32), **kw)
+    assert ref == out
+    st = cb.compile_cache.stats()
+    assert st["recompiles"] == 0
+    assert st["hit_rate"] == 1.0          # every traffic shape was captured
+
+
+def test_rollout_bucketed_prefill_identical(setup):
+    """Ragged prompt lengths through a bucketed Rollout reuse ladder
+    shapes and reproduce the unbucketed stream (greedy)."""
+    cfg, model, params = setup
+    cap = 16 + 10
+    van = Rollout(model, cfg, capacity=cap, temperature=0.0, top_k=0)
+    bkt = Rollout(model, cfg, capacity=cap, temperature=0.0, top_k=0,
+                  capture_buckets=(8, 16))
+    bkt.warmup(params, 2, 16)
+    for P in (5, 7, 8, 11):
+        prompts = jax.random.randint(jax.random.fold_in(
+            jax.random.PRNGKey(12), P), (2, P), 0, cfg.vocab_size)
+        key = jax.random.PRNGKey(13)
+        r0 = van.generate(params, {"tokens": prompts}, 10, key)
+        r1 = bkt.generate(params, {"tokens": prompts}, 10, key)
+        np.testing.assert_array_equal(np.asarray(r0.tokens),
+                                      np.asarray(r1.tokens))
+    assert bkt.compile_cache.recompiles == 0
+
+
+# ------------------------------------------------------- page manager growth
+def test_append_tokens_matches_single_appends():
+    a, b = PageManager(16, 4), PageManager(16, 4)
+    for pm in (a, b):
+        pm.allocate(0, 6)
+    copies_multi = a.append_tokens(0, 7)
+    copies_single = []
+    for _ in range(7):
+        copies_single.extend(b.append_token(0))
+    assert copies_multi == copies_single
+    assert a.seq_len(0) == b.seq_len(0) == 13
+    assert a.block_table(0) == b.block_table(0)
+    a.check_invariants()
+
+
+def test_append_tokens_atomic_on_exhaustion():
+    pm = PageManager(3, 4)
+    pm.allocate(0, 4)                     # 1 page used, 2 free
+    before = (pm.seq_len(0), pm.block_table(0), pm.num_free_pages)
+    with pytest.raises(PagePoolExhausted):
+        pm.append_tokens(0, 12)           # needs 3 pages, only 2 free
+    assert (pm.seq_len(0), pm.block_table(0), pm.num_free_pages) == before
+    pm.check_invariants()
+
+
+def test_append_tokens_atomic_with_cow():
+    """A shared partial last page adds one CoW page to the atomic check."""
+    pm = PageManager(3, 4)
+    pm.allocate(0, 6)                     # 2 pages (last partial), 1 free
+    pm.fork(0, 1)
+    before = pm.num_free_pages
+    with pytest.raises(PagePoolExhausted):
+        pm.append_tokens(0, 3)            # CoW copy + growth page = 2 > 1
+    assert pm.num_free_pages == before
+    copies = pm.append_tokens(0, 1)       # CoW alone fits
+    assert len(copies) == 1
+    pm.check_invariants()
+
+
+def test_truncate_frees_whole_pages():
+    pm = PageManager(8, 4)
+    pm.allocate(0, 3)
+    pm.append_tokens(0, 7)                # length 10 -> 3 pages
+    assert len(pm.block_table(0)) == 3
+    pm.truncate(0, 5)
+    assert pm.seq_len(0) == 5 and len(pm.block_table(0)) == 2
+    pm.truncate(0, 0)
+    assert pm.block_table(0) == []
+    pm.check_invariants()
+
+
+def test_truncate_respects_forked_pages():
+    pm = PageManager(8, 4)
+    pm.allocate(0, 8)                     # 2 full pages
+    pm.fork(0, 1)
+    pm.truncate(0, 4)                     # drops parent's ref on page 2
+    assert len(pm.block_table(1)) == 2    # child keeps it alive
+    pm.free_seq(0)
+    pm.free_seq(1)
+    assert pm.stats.pages_in_use == 0
+    pm.check_invariants()
