@@ -9,7 +9,8 @@ CSV rows (and the detailed tables beneath).
   generation — naive (HF-style growing cache) vs framework static cache
   paged      — dense [B, capacity] vs paged KV cache on ragged requests
   decode     — fast decode path: compile-bucket ladder + MTP speculation
-  obs        — runtime telemetry: phase spans, sim-vs-measured, overhead
+  obs        — runtime telemetry: phase spans, sim-vs-measured, overhead,
+               per-owner HBM attribution + flight-recorder dump (PR 8)
   zero       — mesh-sharded ZeRO RLHF smoke on 8 forced host devices
   kernels    — wall-time microbenches of the XLA flash twin vs dense sdpa
   roofline   — summary of roofline_baseline.json if present
@@ -21,7 +22,10 @@ Every run writes one ``BENCH_<name>.json`` per benchmark into ``--out-dir``
 benchmark registers via ``_gate`` are regression-gated: with
 ``--check-baseline``, any gated metric that regresses >10% against the
 committed ``benchmarks/baselines/BENCH_<name>.json`` fails the run —
-the perf trajectory is recorded, not just asserted once.
+the perf trajectory is recorded, not just asserted once. Each run also
+appends the gated metrics as one git-sha-stamped line to
+``benchmarks/history/HISTORY_<name>.jsonl`` (``--history-dir``) — the
+cross-run trend ``launch/report.py --trend`` renders.
 """
 from __future__ import annotations
 
@@ -39,6 +43,9 @@ _CURRENT = [None]                   # benchmark currently executing
 # with --emit-trace: name -> Chrome-trace dict, written as TRACE_<name>.json
 TRACES: dict = {}
 _EMIT_TRACE = [False]
+# extra JSON artifacts a bench wants preserved next to its BENCH_ file
+# (attribution tables, flight-recorder dumps): filename -> obj
+ARTIFACTS: dict = {}
 
 
 def _result(name=None):
@@ -52,6 +59,12 @@ def _trace(chrome: dict) -> None:
     one, e.g. bench_obs's full per-phase run trace)."""
     if _EMIT_TRACE[0] and _CURRENT[0]:
         TRACES[_CURRENT[0]] = chrome
+
+
+def _artifact(filename: str, obj) -> None:
+    """Register an extra JSON artifact (flight dump, attribution tables)
+    for ``write_results`` to persist into ``--out-dir``."""
+    ARTIFACTS[filename] = obj
 
 
 def _csv(name, us, derived=""):
@@ -80,6 +93,43 @@ def write_results(out_dir: str) -> None:
         with open(path, "w") as f:
             json.dump(chrome, f)
         print(f"[bench] wrote {path}")
+    for fname, obj in ARTIFACTS.items():
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            json.dump(obj, f, indent=1, default=str)
+        print(f"[bench] wrote {path}")
+
+
+def _git_sha() -> str:
+    try:
+        import subprocess
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def append_history(history_dir: str) -> None:
+    """Append one timestamped, git-sha-stamped JSONL line per completed
+    benchmark to ``HISTORY_<name>.jsonl`` — the cross-run trajectory that
+    ``launch/report.py --trend`` renders. Append-only by design: the
+    BENCH_ files are one run's snapshot; the history is the trend."""
+    os.makedirs(history_dir, exist_ok=True)
+    t = time.time()
+    iso = time.strftime("%Y-%m-%dT%H:%M:%S", time.gmtime(t))
+    sha = _git_sha()
+    for name, rec in RESULTS.items():
+        if not rec["gated"]:
+            continue            # nothing trend-worthy was registered
+        line = {"t": t, "iso": iso, "sha": sha, "bench": name,
+                "gated": {k: v["value"] for k, v in rec["gated"].items()}}
+        path = os.path.join(history_dir, f"HISTORY_{name}.jsonl")
+        with open(path, "a") as f:
+            f.write(json.dumps(line) + "\n")
+        print(f"[bench] history += {path} ({sha})")
 
 
 def check_baseline(baseline_dir: str, tol: float = 0.10) -> int:
@@ -709,7 +759,12 @@ def bench_obs():
     Chrome trace with >= one span per canonical runtime phase carrying the
     measured peak bytes AND the traced simulator's prediction, a JSONL that
     ``launch/report.py`` renders with zero recomputation, and a telemetry
-    tax <= 2% of wall time (tracer self-accounting)."""
+    tax <= 2% of wall time (tracer self-accounting). PR 8 extends the
+    acceptance to the attribution observatory: every phase span's owner
+    table must sum (with the unattributed residue) EXACTLY to the
+    measured live bytes, the residue must stay <= 10% of live at every
+    boundary, and a forced low watermark must produce a valid
+    flight-recorder dump naming the top owners."""
     import dataclasses
     import tempfile
 
@@ -718,7 +773,7 @@ def bench_obs():
     from repro.configs import get_config
     from repro.core.phases import RUNTIME_RLHF_PHASE_SEQUENCE
     from repro.launch.report import render
-    from repro.obs import RunTelemetry
+    from repro.obs import FlightRecorder, RunTelemetry
     from repro.rlhf import RLHFConfig, RLHFTrainer
     from repro.rlhf.reward import make_target_token_reward
     from repro.sharding import ShardedContext
@@ -733,7 +788,13 @@ def bench_obs():
                     kl_coef=0.0, top_k=0, engine="hydra", lora_rank=16,
                     offload="all")
     shard = ShardedContext.create(1, zero_stage=3)
-    tel = RunTelemetry.create(engine="hydra", offload="all", zero_stage=3)
+    # forced watermark: on CPU the recorder calibrates capacity from its
+    # first check (step-1 mid-rollout peak, merged weights live), so 0.9
+    # deterministically breaches at step 2's rollout sample — the
+    # memory-rich point — after a full iteration of phase history
+    fl = FlightRecorder(watermark=0.9, ring=128)
+    tel = RunTelemetry.create(engine="hydra", offload="all", zero_stage=3,
+                              flight=fl)
     tr = RLHFTrainer(cfg, cfg, rl, jax.random.PRNGKey(0),
                      reward_fn=make_target_token_reward(7), shard=shard,
                      telemetry=tel)
@@ -763,6 +824,69 @@ def bench_obs():
     n_off = sum(1 for sp in tel.tracer.spans if sp.cat == "offload")
     assert n_off > 0, "offload=all run emitted no offload spans"
 
+    # -- attribution observatory acceptance --------------------------------
+    # exactness: at every boundary, sum(owner table) + residue must equal
+    # the measured live bytes EXACTLY (the snapshot walk IS the
+    # measurement — one jax.live_arrays() pass classifies and totals)
+    phase_spans = [sp for sp in tel.tracer.spans if sp.cat == "phase"]
+    worst_resid = 0.0
+    attrib_tables = {}
+    for sp in phase_spans:
+        a = sp.args
+        assert "attrib" in a, f"{sp.name}: no owner table on phase span"
+        total = sum(a["attrib"].values()) + a["attrib_unattributed"]
+        assert total == a["measured_bytes"], \
+            (sp.name, total, a["measured_bytes"])
+        resid = a["attrib_unattributed"] / max(a["measured_bytes"], 1)
+        worst_resid = max(worst_resid, resid)
+        attrib_tables[sp.name] = {"owners": a["attrib"],
+                                  "unattributed": a["attrib_unattributed"],
+                                  "measured_bytes": a["measured_bytes"],
+                                  "sim_delta": a.get("attrib_sim_delta")}
+    n_sim_owner = sum(1 for sp in phase_spans
+                      if "attrib_sim_delta" in sp.args)
+    # the mid-phase samples sit at the phase PEAKS (hydra rollout decode:
+    # merged weights + ZeRO gather copies live) — exactness and the <=10%
+    # residue bound must hold there too, not just at boundary troughs
+    n_samples = 0
+    for ev in tel.tracer.instants:
+        a = ev["args"]
+        if ev["cat"] != "phase" or "attrib" not in a:
+            continue
+        n_samples += 1
+        total = sum(a["attrib"].values()) + a["attrib_unattributed"]
+        assert total == a["measured_bytes"], (ev["name"], total)
+        resid = a["attrib_unattributed"] / max(a["measured_bytes"], 1)
+        worst_resid = max(worst_resid, resid)
+    assert n_samples > 0, "no mid-phase attribution samples recorded"
+    print(f"attribution: {len(phase_spans)} spans + {n_samples} peak "
+          f"samples exact (sum owners + residue == measured), worst "
+          f"residue {100*worst_resid:.2f}% of live, {n_sim_owner} spans "
+          f"carry per-owner sim deltas")
+    assert worst_resid <= 0.10, \
+        f"unattributed residue {100*worst_resid:.1f}% > 10% of live"
+    assert n_sim_owner > 0, "no span joined the sim's per-owner ledger"
+
+    # forced watermark must have produced a valid forensic dump
+    assert fl.dumps, "forced watermark=0.25 produced no flight dump"
+    dump = fl.dumps[0]
+    assert dump["schema"] == "flight-recorder/v1" and \
+        dump["trigger"] == "watermark", dump["trigger"]
+    top3 = dump["owners_ranked"][:3]
+    assert len(top3) >= 3 and all(dump["owners"][o] > 0 for o in top3), top3
+    assert dump["top_buffers"] and dump["phase_history"], \
+        "dump missing top_buffers/phase_history forensics"
+    print(f"flight dump: trigger={dump['trigger']} top owners {top3}")
+    _artifact("FLIGHT_obs.json", dump)
+    _artifact("ATTRIB_obs.json", attrib_tables)
+
+    # per-jitted-program compiled-memory accounting joined the registry
+    n_compiled = sum(
+        1 for m in tel.registry.snapshot()
+        if m["name"].startswith("compiled_") and m["name"].endswith("_bytes"))
+    print(f"compiled-memory gauges: {n_compiled}")
+    assert n_compiled > 0, "no compiled_*_bytes program accounting recorded"
+
     # Chrome-trace schema: loadable JSON, required keys per event type
     chrome = tel.tracer.chrome_trace()
     chrome = json.loads(json.dumps(chrome))        # round-trip
@@ -789,11 +913,15 @@ def bench_obs():
     print(f"-> telemetry self-time {tel.tracer.self_time_s*1e3:.2f} ms "
           f"of {wall:.2f} s wall = {ov_pct:.3f}% (acceptance: <=2%)")
     assert ov_pct <= 2.0, f"telemetry overhead {ov_pct:.2f}% > 2%"
+    # the 2% gate now covers the attribution walk too: snapshot() charges
+    # its walk time to tracer.self_time_s
     _gate("telemetry_overhead_pct", ov_pct, "lower")
     _gate("phase_spans_per_iteration", n_phase / 2, "higher")
+    _gate("attrib_unattributed_pct", 100 * worst_resid, "lower")
     _csv("obs", (time.time() - t0) * 1e6,
          f"phase_spans={n_phase};offload_spans={n_off};"
-         f"overhead_pct={ov_pct:.3f}")
+         f"overhead_pct={ov_pct:.3f};"
+         f"attrib_unattributed_pct={100*worst_resid:.2f}")
 
 
 def bench_grpo():
@@ -949,6 +1077,7 @@ BENCHES = {
 
 _DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "results")
 _DEFAULT_BASELINES = os.path.join(os.path.dirname(__file__), "baselines")
+_DEFAULT_HISTORY = os.path.join(os.path.dirname(__file__), "history")
 
 
 def main() -> None:
@@ -963,6 +1092,10 @@ def main() -> None:
     ap.add_argument("--emit-trace", action="store_true",
                     help="write a Chrome-trace TRACE_<name>.json sibling "
                          "next to every BENCH_<name>.json")
+    ap.add_argument("--history-dir", default=_DEFAULT_HISTORY,
+                    help="append one git-sha-stamped JSONL line per bench "
+                         "to HISTORY_<name>.jsonl here (render with "
+                         "launch/report.py --trend); '' disables")
     args = ap.parse_args()
     _EMIT_TRACE[0] = args.emit_trace
     print("name,us_per_call,derived")
@@ -987,6 +1120,8 @@ def main() -> None:
         # a failing bench must not lose the results of the ones that
         # completed — that is exactly when the artifacts matter
         write_results(args.out_dir)
+        if args.history_dir:
+            append_history(args.history_dir)
     if args.check_baseline:
         failures = check_baseline(args.baseline_dir)
         if failures:

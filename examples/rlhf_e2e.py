@@ -71,13 +71,26 @@ def main():
                          "render with python -m repro.launch.report)")
     ap.add_argument("--trace-out", default="", metavar="PATH",
                     help="write a Chrome-trace JSON (Perfetto-loadable)")
+    ap.add_argument("--watermark", type=float, default=0.0,
+                    metavar="FRACTION",
+                    help="arm the OOM flight recorder: dump a forensic "
+                         "owner/buffer bundle when live bytes cross this "
+                         "fraction of capacity (or on RESOURCE_EXHAUSTED); "
+                         "0 disables")
+    ap.add_argument("--attrib-out", default="", metavar="PATH",
+                    help="write the per-phase owner attribution tables + "
+                         "any flight-recorder dumps as JSON (render dumps "
+                         "with python -m repro.launch.report --flight)")
     args = ap.parse_args()
     telemetry = None
-    if args.metrics_out or args.trace_out:
-        from repro.obs import RunTelemetry
+    if args.metrics_out or args.trace_out or args.watermark \
+            or args.attrib_out:
+        from repro.obs import FlightRecorder, RunTelemetry
+        flight = FlightRecorder(watermark=args.watermark) \
+            if args.watermark else None
         telemetry = RunTelemetry.create(
             engine=args.engine, offload=args.offload,
-            memory_policy=args.memory_policy)
+            memory_policy=args.memory_policy, flight=flight)
 
     cfg = dataclasses.replace(
         get_config("llama3_2_3b").smoke(), num_layers=args.layers,
@@ -149,6 +162,26 @@ def main():
         for p in (args.metrics_out, args.trace_out):
             if p:
                 print("telemetry:", p)
+    if args.attrib_out and telemetry is not None \
+            and telemetry.attribution is not None:
+        import json
+        phases = {}
+        for sp in telemetry.tracer.spans:
+            if sp.cat == "phase" and "attrib" in sp.args:
+                phases[sp.name] = {
+                    "owners": sp.args["attrib"],
+                    "unattributed": sp.args["attrib_unattributed"],
+                    "measured_bytes": sp.args["measured_bytes"],
+                    "sim_delta": sp.args.get("attrib_sim_delta")}
+        fl = telemetry.flight
+        bundle = {"schema": "attribution/v1", "engine": args.engine,
+                  "offload": args.offload,
+                  "final": telemetry.attribution.snapshot().to_record(),
+                  "phases": phases,
+                  "flight_dumps": list(fl.dumps) if fl is not None else []}
+        with open(args.attrib_out, "w") as f:
+            json.dump(bundle, f, indent=1, default=str)
+        print("attribution:", args.attrib_out)
 
 
 if __name__ == "__main__":

@@ -56,11 +56,19 @@ def paged_demo(args):
     params = model.init(jax.random.PRNGKey(0))
     capacity = 24 + args.gen + (args.spec_k if args.spec_decode else 0)
     temperature, top_k = (0.0, 0) if args.spec_decode else (0.8, 40)
+    telemetry = None
+    if args.watermark or args.attrib_out:
+        from repro.obs import FlightRecorder, RunTelemetry
+        flight = FlightRecorder(watermark=args.watermark) \
+            if args.watermark else None
+        telemetry = RunTelemetry.create(run="serving", arch=args.arch,
+                                        backend="paged", flight=flight)
     cb = ContinuousBatcher(model, cfg, params, slots=args.batch,
                            capacity=capacity, temperature=temperature,
                            top_k=top_k, cache_backend="paged", page_size=16,
                            capture_buckets=buckets,
-                           spec_decode=args.spec_decode, spec_k=args.spec_k)
+                           spec_decode=args.spec_decode, spec_k=args.spec_k,
+                           telemetry=telemetry)
     rng = np.random.RandomState(0)
     n_req = args.batch * args.requests
     for i in range(n_req):
@@ -84,6 +92,20 @@ def paged_demo(args):
     print(f"drained in {time.time()-t0:.1f}s | peak "
           f"{st.peak_pages_in_use * cb.pm.page_bytes / 2**20:.2f} MiB paged "
           f"vs {dense_bytes/2**20:.2f} MiB dense [B, capacity]")
+    if args.attrib_out and telemetry is not None \
+            and telemetry.attribution is not None:
+        import json
+        fl = telemetry.flight
+        bundle = {"schema": "attribution/v1", "source": "serving",
+                  "arch": args.arch,
+                  "final": telemetry.attribution.snapshot().to_record(),
+                  "compiled_memory": {":".join(str(k) for k in key): stats
+                                      for key, stats in
+                                      cb.compiled_memory.items()},
+                  "flight_dumps": list(fl.dumps) if fl is not None else []}
+        with open(args.attrib_out, "w") as f:
+            json.dump(bundle, f, indent=1, default=str)
+        print("attribution:", args.attrib_out)
 
 
 def main():
@@ -101,7 +123,19 @@ def main():
                     help="draft tokens per speculative step")
     ap.add_argument("--capture-buckets", default="",
                     help="comma list of compile-bucket sizes, e.g. 8,16,32")
+    ap.add_argument("--watermark", type=float, default=0.0,
+                    metavar="FRACTION",
+                    help="arm the OOM flight recorder (paged backend): "
+                         "dump owners/buffers when live bytes cross this "
+                         "fraction of capacity; 0 disables")
+    ap.add_argument("--attrib-out", default="", metavar="PATH",
+                    help="write the serving attribution snapshot + "
+                         "compiled-memory table + flight dumps as JSON "
+                         "(paged backend)")
     args = ap.parse_args()
+    if (args.watermark or args.attrib_out) and args.backend != "paged":
+        print("note: --watermark/--attrib-out instrument the paged "
+              "batcher; ignored for --backend dense")
     if args.backend == "paged":
         paged_demo(args)
         return

@@ -63,6 +63,10 @@ class PhaseRecord:
     frag_end: int
     host_bytes: int = 0            # parked on host at phase end (offload)
     alloc_peak: int = 0            # peak live bytes *within* this phase
+    # device-resident persistent groups -> modelled bytes at the boundary
+    # record — the simulator's per-state ledger the runtime attribution
+    # engine diffs its measured owner table against (per-owner sim deltas)
+    state_bytes_end: Dict[str, int] = field(default_factory=dict)
 
 
 @dataclass
@@ -227,7 +231,9 @@ def run_iteration(plans, persistent: PersistentBuffers,
             records.append(PhaseRecord(
                 ph.name, ph.kind, alloc.reserved, alloc.allocated,
                 alloc.stats.peak_reserved, alloc.fragmentation(),
-                host_bytes=parked_now, alloc_peak=alloc_peak))
+                host_bytes=parked_now, alloc_peak=alloc_peak,
+                state_bytes_end={n: state_bytes[n] for n in resident
+                                 if state_bytes[n] > 0}))
             # boundary, offload half 2: fetch the next phase's groups (the
             # runtime issues these as async device_puts at the same point)
             for n in nxt - frozenset(resident):

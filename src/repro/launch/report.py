@@ -119,6 +119,141 @@ def timeline(samples: List[dict], *, track: str = "memory",
     return "\n".join(grid)
 
 
+def attribution_table(events: List[dict], *, key: str = "attrib") -> str:
+    """Owner x phase matrix in MiB, read from the LAST span of each phase
+    name (the steady-state iteration). ``key="attrib"`` renders measured
+    per-owner bytes plus the unattributed residue row;
+    ``key="attrib_sim_delta"`` renders the signed measured-minus-sim
+    per-owner deltas instead."""
+    cols: Dict[str, dict] = {}
+    order: List[str] = []
+    for ev in events:
+        if ev.get("type") != "span" or ev.get("cat") != "phase":
+            continue
+        args = ev.get("args", {})
+        if key not in args:
+            continue
+        name = ev["name"]
+        if name not in cols:
+            order.append(name)
+        tab = dict(args[key])
+        if key == "attrib":
+            tab["(unattributed)"] = args.get("attrib_unattributed", 0)
+        cols[name] = tab
+    if not cols:
+        return f"(no per-owner '{key}' tables in file)"
+    # rows sorted by the owner's largest (absolute) cell, residue last
+    peak: Dict[str, int] = {}
+    for tab in cols.values():
+        for k, v in tab.items():
+            peak[k] = max(peak.get(k, 0), abs(int(v)))
+    names = sorted((k for k in peak if k != "(unattributed)"),
+                   key=lambda k: -peak[k])
+    if "(unattributed)" in peak:
+        names.append("(unattributed)")
+    w = max(9, *(len(p) for p in order))
+    signed = key != "attrib"
+    hdr = f"{'owner':18s} " + " ".join(f"{p:>{w}s}" for p in order)
+    out = [hdr, "-" * len(hdr)]
+    for k in names:
+        cells = []
+        for p in order:
+            v = cols[p].get(k)
+            if v is None:
+                cells.append(f"{'-':>{w}s}")
+            elif signed:
+                cells.append(f"{v / _MIB:>+{w}.2f}")
+            else:
+                cells.append(f"{v / _MIB:>{w}.2f}")
+        out.append(f"{k:18s} " + " ".join(cells))
+    return "\n".join(out)
+
+
+def flight_summary(dump: dict) -> str:
+    """Human rendering of one flight-recorder dump bundle
+    (``repro.obs.flight`` schema ``flight-recorder/v1``)."""
+    cap = dump.get("capacity_bytes") or 0
+    live = dump.get("live_bytes", 0)
+    head = f"flight recorder dump — trigger: {dump.get('trigger', '?')}" \
+           f" (source: {dump.get('source') or '?'}"
+    if dump.get("phase"):
+        head += f", phase: {dump['phase']}"
+    out = [head + ")",
+           f"  live {live / _MIB:.2f} MiB / capacity {cap / _MIB:.2f} MiB"
+           f" (watermark {dump.get('watermark', 0):.0%})"]
+    if dump.get("error"):
+        out.append(f"  error: {dump['error'][:200]}")
+    owners = dump.get("owners", {})
+    if owners:
+        out.append("  owners:")
+        ranked = dump.get("owners_ranked") or \
+            sorted(owners, key=owners.get, reverse=True)
+        for k in ranked:
+            out.append(f"    {k:20s} {owners[k] / _MIB:9.2f} MiB "
+                       f"{owners[k] / max(live, 1):6.1%}")
+    un = dump.get("unattributed", 0)
+    out.append(f"    {'(unattributed)':20s} {un / _MIB:9.2f} MiB "
+               f"{un / max(live, 1):6.1%}")
+    tb = dump.get("top_buffers", [])
+    if tb:
+        out.append(f"  top {len(tb)} live buffers:")
+        for b in tb:
+            line = (f"    {b.get('nbytes', 0) / _MIB:9.2f} MiB "
+                    f"{str(b.get('dtype', '?')):>10s} "
+                    f"{str(b.get('shape', '?')):16s} "
+                    f"{b.get('owner', '?')}")
+            if b.get("path"):
+                line += f" @{b['path']}"
+            out.append(line)
+    ph = dump.get("phase_history", [])
+    if ph:
+        out.append(f"  phase history ({len(ph)} boundaries, oldest first):")
+        for p in ph[-10:]:
+            out.append(f"    {str(p.get('phase', '?')):16s} "
+                       f"live {p.get('live_bytes', 0) / _MIB:9.2f} MiB  "
+                       f"host {(p.get('host_bytes') or 0) / _MIB:9.2f} MiB")
+    out.append(f"  ring: {len(dump.get('ring', []))} context events")
+    return "\n".join(out)
+
+
+def trend_table(path: str, *, last: int = 20) -> str:
+    """Cross-run trajectory of one bench's gated metrics, read from a
+    ``benchmarks/history/HISTORY_<name>.jsonl`` file (one line per run,
+    appended by ``benchmarks.run``)."""
+    rows: List[dict] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    if not rows:
+        return "(empty history file)"
+    rows = rows[-last:]
+    keys: List[str] = []
+    for r in rows:
+        for k in r.get("gated", {}):
+            if k not in keys:
+                keys.append(k)
+    w = {k: max(len(k), 10) for k in keys}
+    hdr = f"{'when':>16s} {'sha':>9s} " + \
+        " ".join(f"{k:>{w[k]}s}" for k in keys)
+    out = [f"bench history: {rows[-1].get('bench', '?')} "
+           f"(last {len(rows)} runs)", hdr, "-" * len(hdr)]
+    for r in rows:
+        cells = []
+        for k in keys:
+            v = r.get("gated", {}).get(k)
+            if v is None:
+                cells.append(f"{'-':>{w[k]}s}")
+            elif isinstance(v, (int, float)):
+                cells.append(f"{v:>{w[k]}.4g}")
+            else:
+                cells.append(f"{str(v)[:w[k]]:>{w[k]}s}")
+        out.append(f"{str(r.get('iso', ''))[:16]:>16s} "
+                   f"{str(r.get('sha', '-')):>9s} " + " ".join(cells))
+    return "\n".join(out)
+
+
 def metric_lines(metrics: List[dict]) -> str:
     out = []
     for m in metrics:
@@ -145,8 +280,15 @@ def render(path: str, *, width: int = 64, show_metrics: bool = False) -> str:
                                    sorted(run_meta.items())))
     n_off = sum(1 for e in events if e.get("cat") == "offload")
     n_srv = sum(1 for e in events if e.get("cat") == "serving")
-    out += ["", phase_table(events), "",
-            "live device memory (MiB) over the run:",
+    out += ["", phase_table(events)]
+    attr = attribution_table(events)
+    if not attr.startswith("(no"):
+        out += ["", "per-owner attribution (MiB, last span per phase):",
+                attr]
+        sd = attribution_table(events, key="attrib_sim_delta")
+        if not sd.startswith("(no"):
+            out += ["", "per-owner sim delta (measured - sim, MiB):", sd]
+    out += ["", "live device memory (MiB) over the run:",
             timeline(samples, width=width)]
     host = [s for s in samples if s.get("track") == "memory"
             and s.get("values", {}).get("host_mib")]
@@ -162,14 +304,35 @@ def render(path: str, *, width: int = 64, show_metrics: bool = False) -> str:
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("jsonl", help="run telemetry JSONL "
-                                  "(RunTelemetry.write_jsonl output)")
+    ap.add_argument("jsonl", nargs="?",
+                    help="run telemetry JSONL "
+                         "(RunTelemetry.write_jsonl output)")
     ap.add_argument("--width", type=int, default=64,
                     help="timeline width in columns")
     ap.add_argument("--metrics", action="store_true",
                     help="also print the final metrics snapshot")
+    ap.add_argument("--trend", metavar="HISTORY_JSONL",
+                    help="render a benchmarks/history/HISTORY_<name>.jsonl "
+                         "cross-run trajectory")
+    ap.add_argument("--flight", metavar="DUMP_JSON",
+                    help="render a flight-recorder dump bundle")
     args = ap.parse_args()
-    print(render(args.jsonl, width=args.width, show_metrics=args.metrics))
+    shown = False
+    if args.trend:
+        print(trend_table(args.trend))
+        shown = True
+    if args.flight:
+        with open(args.flight) as f:
+            print(flight_summary(json.load(f)))
+        shown = True
+    if args.jsonl:
+        if shown:
+            print()
+        print(render(args.jsonl, width=args.width,
+                     show_metrics=args.metrics))
+    elif not shown:
+        ap.error("nothing to render: give a run JSONL, --trend, "
+                 "or --flight")
 
 
 if __name__ == "__main__":

@@ -24,12 +24,18 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional
 
+from repro.obs.attribution import (AttributionSnapshot, MemoryAttributor,
+                                   compiled_memory_stats,
+                                   record_compiled_memory)
+from repro.obs.flight import FlightRecorder
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                global_registry, set_global_registry)
 from repro.obs.tracer import Span, SpanTracer
 
-__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry", "RunTelemetry",
-           "Span", "SpanTracer", "global_registry", "set_global_registry"]
+__all__ = ["AttributionSnapshot", "Counter", "FlightRecorder", "Gauge",
+           "Histogram", "MemoryAttributor", "MetricsRegistry", "RunTelemetry",
+           "Span", "SpanTracer", "compiled_memory_stats", "global_registry",
+           "record_compiled_memory", "set_global_registry"]
 
 
 @dataclass
@@ -47,14 +53,22 @@ class RunTelemetry:
     tracer: SpanTracer = field(default_factory=SpanTracer)
     sim_delta: bool = True
     meta: Dict[str, Any] = field(default_factory=dict)
+    # Optional memory-attribution engine; instrumented subsystems create
+    # one lazily (and register their owner trees) when absent.
+    attribution: Optional[MemoryAttributor] = None
+    # Optional OOM flight recorder; shared by every subsystem on the run.
+    flight: Optional[FlightRecorder] = None
 
     @classmethod
     def create(cls, *, sim_delta: bool = True, jax_annotate: bool = False,
                registry: Optional[MetricsRegistry] = None,
+               attribution: Optional[MemoryAttributor] = None,
+               flight: Optional[FlightRecorder] = None,
                **meta) -> "RunTelemetry":
         return cls(registry=registry or MetricsRegistry(),
                    tracer=SpanTracer(jax_annotate=jax_annotate),
-                   sim_delta=sim_delta, meta=dict(meta))
+                   sim_delta=sim_delta, meta=dict(meta),
+                   attribution=attribution, flight=flight)
 
     # ------------------------------------------------------------- export
     def write_jsonl(self, path: str) -> str:

@@ -1,0 +1,214 @@
+"""Per-buffer HBM ownership attribution (``repro.obs.attribution``).
+
+The sim-vs-measured delta on a phase span (PR 6) says *how far* the run
+diverged from the allocator simulator; it cannot say *which subsystem owns
+the divergent bytes*. This module closes that gap: a
+:class:`MemoryAttributor` holds a registry of **owner trees** — named
+getters over the long-lived pytrees of a run (frozen trunk, per-role
+adapters/value heads, optimizer states, paged KV pools, rollout/experience
+buffers, the merged rollout weights while they exist) — and
+:meth:`MemoryAttributor.snapshot` classifies every array in
+``jax.live_arrays()`` by **buffer identity** into an owner -> bytes table.
+
+Exactness contract: the snapshot walks the live set ONCE and derives the
+total, the per-owner bytes and the unattributed residue from that single
+walk, so
+
+    sum(owners.values()) + unattributed == total_bytes      (always, exactly)
+
+and ``PhaseMemoryManager`` uses ``total_bytes`` *as* the phase record's
+live bytes whenever an attributor is attached — the per-owner table on a
+phase span therefore sums to the span's ``measured_bytes`` to the byte.
+
+Owner getters are re-read on every snapshot because donated train steps
+rewrite the state arrays each iteration; a getter returning ``None`` (a
+buffer group that does not exist right now, e.g. the merged rollout tree
+outside the rollout phase) contributes nothing. When one array appears in
+two owner trees (aliases: the hydra reference IS the base trunk), the
+first-registered owner wins — registration order is priority order.
+
+Snapshots store only metadata (bytes, shape, dtype, owner, tree path) and
+never retain array references, so an attributor can never extend a
+buffer's lifetime — telemetry stays a pure observer.
+
+The second half of the file is per-jitted-program compiled-memory
+accounting: :func:`compiled_memory_stats` reads XLA's
+``memory_analysis()`` (temp/argument/output/code bytes) off a compiled
+program and :func:`record_compiled_memory` feeds it into a metrics
+registry, keyed by program name — ``serving.ContinuousBatcher`` joins
+these entries with its ``CompileCache`` keys so every bucket rung (and
+any post-warmup recompile) carries its compiled-memory cost.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+__all__ = ["AttributionSnapshot", "MemoryAttributor",
+           "compiled_memory_stats", "record_compiled_memory"]
+
+
+@dataclass
+class AttributionSnapshot:
+    """One classification pass over ``jax.live_arrays()``.
+
+    ``owners`` maps owner name -> live *device* bytes (host-memory-kind
+    arrays are excluded, mirroring ``rlhf.live_device_bytes``);
+    ``host_owners`` is the same table for host-kind arrays (parked state).
+    ``total_bytes`` is the device total of the same walk, so the exactness
+    identity in the module docstring holds by construction."""
+    owners: Dict[str, int] = field(default_factory=dict)
+    unattributed: int = 0
+    total_bytes: int = 0
+    host_owners: Dict[str, int] = field(default_factory=dict)
+    host_unattributed: int = 0
+    # [{nbytes, shape, dtype, owner, path}] — metadata only, no array refs
+    top_buffers: List[dict] = field(default_factory=list)
+    n_arrays: int = 0
+    walk_s: float = 0.0
+
+    def ranked(self) -> List[str]:
+        """Owner names by live device bytes, descending (nonzero only)."""
+        return [k for k, v in sorted(self.owners.items(),
+                                     key=lambda kv: -kv[1]) if v > 0]
+
+    def table(self) -> Dict[str, int]:
+        """Nonzero owner -> bytes (the dict that rides phase-span args)."""
+        return {k: v for k, v in self.owners.items() if v}
+
+    def to_record(self) -> dict:
+        return {"owners": self.table(), "unattributed": self.unattributed,
+                "total_bytes": self.total_bytes,
+                "host_owners": dict(self.host_owners),
+                "top_buffers": list(self.top_buffers),
+                "n_arrays": self.n_arrays}
+
+
+class MemoryAttributor:
+    """Registry of named owner-tree getters + the live-set classifier."""
+
+    def __init__(self, *, top_k: int = 10):
+        self.top_k = top_k
+        self._getters: Dict[str, Callable[[], Any]] = {}
+
+    # ------------------------------------------------------------ registry
+    def register(self, name: str, getter: Callable[[], Any]) -> None:
+        """Register an owner. ``getter`` is called at every snapshot and
+        returns the owner's current pytree (or None when the owner holds
+        nothing right now). Re-registering a name replaces its getter but
+        keeps its original priority slot."""
+        self._getters[name] = getter
+
+    def register_tree(self, name: str, tree: Any) -> None:
+        """Convenience for owners whose tree object never gets replaced
+        (e.g. a serving param tree)."""
+        self.register(name, lambda: tree)
+
+    def owners(self):
+        return tuple(self._getters)
+
+    # ------------------------------------------------------------ snapshot
+    def _identity_map(self) -> Dict[int, tuple]:
+        """id(array) -> (owner, path) over all registered owner trees.
+        First registration wins on aliases."""
+        import jax
+        ident: Dict[int, tuple] = {}
+        for name, get in self._getters.items():
+            try:
+                tree = get()
+            except Exception:
+                tree = None
+            if tree is None:
+                continue
+            for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+                if getattr(leaf, "nbytes", 0):
+                    ident.setdefault(
+                        id(leaf), (name, jax.tree_util.keystr(path)))
+        return ident
+
+    def snapshot(self) -> AttributionSnapshot:
+        """Classify the current live set. One walk; see module docstring
+        for the exactness contract. The wall cost is returned in
+        ``walk_s`` so callers can charge it to the telemetry self-time
+        (the attribution pass counts against the <=2% overhead gate)."""
+        import jax
+
+        from repro.kernels import compat
+        t0 = time.perf_counter()
+        host_kind = compat.host_memory_kind()
+        ident = self._identity_map()
+        snap = AttributionSnapshot(
+            owners={name: 0 for name in self._getters})
+        sizes: List[tuple] = []
+        for a in jax.live_arrays():
+            nb = getattr(a, "nbytes", 0)
+            who = ident.get(id(a))
+            on_host = host_kind is not None and \
+                getattr(a.sharding, "memory_kind", None) == host_kind
+            if on_host:
+                if who is not None:
+                    snap.host_owners[who[0]] = \
+                        snap.host_owners.get(who[0], 0) + nb
+                else:
+                    snap.host_unattributed += nb
+                continue
+            snap.n_arrays += 1
+            snap.total_bytes += nb
+            if who is not None:
+                snap.owners[who[0]] += nb
+            else:
+                snap.unattributed += nb
+            # metadata only — never keep the array itself alive
+            sizes.append((nb, str(getattr(a, "shape", ())),
+                          str(getattr(a, "dtype", "?")), who))
+        sizes.sort(key=lambda r: -r[0])
+        snap.top_buffers = [
+            {"nbytes": nb, "shape": shape, "dtype": dtype,
+             "owner": who[0] if who else "(unattributed)",
+             "path": who[1] if who else ""}
+            for nb, shape, dtype, who in sizes[:self.top_k]]
+        snap.walk_s = time.perf_counter() - t0
+        return snap
+
+
+# --------------------------------------------------- compiled-memory stats
+def compiled_memory_stats(compiled) -> Optional[Dict[str, int]]:
+    """temp/argument/output/generated-code bytes of a compiled XLA
+    program, or None when the backend exposes no ``memory_analysis()``."""
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "generated_code_bytes": int(ma.generated_code_size_in_bytes),
+        }
+    except Exception:
+        return None
+
+
+def record_compiled_memory(registry, program: str, fn, *args,
+                           **kwargs) -> Optional[Dict[str, int]]:
+    """Lower+compile ``fn`` for ``args`` and feed its compiled-memory
+    stats into ``registry`` as gauges labelled ``program=...``.
+
+    Lowering only traces — it never executes the program — so this is a
+    pure observer; it is one-time setup cost (like the simulator replay)
+    and is deliberately NOT charged to the tracer's self-time. Returns the
+    stats dict, or None when the function cannot be lowered (e.g. the
+    pre-jitted ZeRO two-program steps) or the backend has no
+    ``memory_analysis``."""
+    try:
+        compiled = fn.lower(*args, **kwargs).compile()
+    except Exception:
+        return None
+    stats = compiled_memory_stats(compiled)
+    if stats is None:
+        return None
+    for key, val in stats.items():
+        registry.gauge(
+            f"compiled_{key}",
+            "per-jitted-program compiled-memory accounting "
+            "(XLA memory_analysis)").set(val, program=program)
+    return stats

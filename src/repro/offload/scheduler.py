@@ -129,6 +129,12 @@ class OffloadExecutor:
                         "cumulative host->device fetch traffic").inc(fetched)
         reg.gauge("offload_host_bytes",
                   "bytes currently parked on host").set(st.parked_bytes)
+        # flight-recorder context: a forensic dump replays the recent
+        # park/fetch traffic leading up to the breach
+        fl = getattr(tel, "flight", None)
+        if fl is not None:
+            fl.note("offload", op=name, parked_bytes=parked,
+                    fetched_bytes=fetched, host_bytes=st.parked_bytes)
 
     def _marks(self):
         st = self.lot.stats

@@ -141,6 +141,11 @@ class PhaseMemoryManager:
     records: List[dict] = field(default_factory=list)
     offload: Optional[Any] = None      # offload.OffloadExecutor
     telemetry: Optional[Any] = None    # obs.RunTelemetry
+    # obs.MemoryAttributor: when attached, every record classifies the
+    # live set by owner in ONE walk — the record's live_bytes IS the
+    # snapshot total, so the per-owner table on a phase span sums (with
+    # the unattributed residue) to measured_bytes exactly
+    attributor: Optional[Any] = None
     # runtime phase -> {"sim_bytes", "sim_peak_bytes"} from the traced
     # simulator (attached lazily by RLHFTrainer when sim_delta is on)
     sim_phase_bytes: Dict[str, dict] = field(default_factory=dict)
@@ -154,13 +159,26 @@ class PhaseMemoryManager:
         self._phase_peak = 0                     # mid-phase sample peak
         self._pcie_mark = 0                      # lot traffic at phase start
         self._iter_n = 0
+        self._last_snap = None                   # most recent attribution
 
     def _record(self, phase: str, kind: str, **extra) -> dict:
-        live = live_device_bytes()
+        snap = None
+        if self.attributor is not None:
+            snap = self.attributor.snapshot()
+            self._last_snap = snap
+            live = snap.total_bytes
+            # device and host totals come from the snapshot's single walk
+            host = snap.host_unattributed + sum(snap.host_owners.values())
+            if self.telemetry is not None:
+                # the classification pass is telemetry work: charge it to
+                # self-time so the <=2% overhead gate covers attribution
+                self.telemetry.tracer.self_time_s += snap.walk_s
+        else:
+            live = live_device_bytes()
+            host = live_host_bytes()
         # host-side accounting: memory-kind parks are live jax arrays
         # (live_host_bytes) AND lot entries; numpy-fallback parks are lot
         # entries only — max() merges without double counting
-        host = live_host_bytes()
         if self.offload is not None:
             host = max(host, self.offload.lot.parked_bytes())
         rec = {"phase": phase, "kind": kind,
@@ -169,9 +187,25 @@ class PhaseMemoryManager:
                                          if jax.device_count() > 1 else live),
                "host_bytes": host,
                "t": time.time()}
+        if snap is not None:
+            rec["attrib"] = snap.table()
+            rec["attrib_unattributed"] = snap.unattributed
         rec.update(extra)
         self.records.append(rec)
         return rec
+
+    def _snapshot_for_dump(self):
+        """Lazy snapshot source for the flight recorder: reuse the one the
+        triggering record just took (same live set) instead of re-walking."""
+        if self._last_snap is not None:
+            return self._last_snap
+        if self.attributor is not None:
+            return self.attributor.snapshot()
+        return None
+
+    def _flight(self):
+        return getattr(self.telemetry, "flight", None) \
+            if self.telemetry is not None else None
 
     # ----------------------------------------------------------- telemetry
     def _pcie_total(self) -> int:
@@ -212,10 +246,21 @@ class PhaseMemoryManager:
                 "measured_bytes_per_device": rec["live_bytes_per_device"],
                 "host_bytes": rec["host_bytes"],
                 "pcie_bytes": pcie_now - self._pcie_mark}
+        if "attrib" in rec:
+            args["attrib"] = rec["attrib"]
+            args["attrib_unattributed"] = rec["attrib_unattributed"]
         sim = self.sim_phase_bytes.get(phase)
         if sim is not None:
             args.update(sim)
             args["sim_delta_bytes"] = rec["live_bytes"] - sim["sim_bytes"]
+            # per-owner sim deltas: measured owner table vs the simulator's
+            # per-state ledger at this phase's boundary record. Restricted
+            # to the sim's group names — both sides use the same taxonomy
+            sim_owners = sim.get("sim_owner_bytes")
+            if sim_owners and "attrib" in rec:
+                args["attrib_sim_delta"] = {
+                    k: rec["attrib"].get(k, 0) - v
+                    for k, v in sim_owners.items()}
         tr.complete(phase, "phase", t0, now - t0, **args)
         tr.sample("memory", {"device_mib": rec["live_bytes"] / 2**20,
                              "host_mib": rec["host_bytes"] / 2**20},
@@ -231,6 +276,10 @@ class PhaseMemoryManager:
             rec["host_bytes"], phase=phase)
         reg.histogram("rlhf_phase_seconds", "wall time per phase").observe(
             (now - t0) / 1e6, phase=phase)
+        for owner, b in rec.get("attrib", {}).items():
+            reg.gauge("rlhf_owner_live_bytes",
+                      "live device bytes by owner at phase end").set(
+                b, owner=owner, phase=phase)
         self._phase_t0 = now
         self._phase_peak = 0
         self._pcie_mark = pcie_now
@@ -243,11 +292,19 @@ class PhaseMemoryManager:
         self._phase_peak = max(self._phase_peak, rec["live_bytes"])
         if self.telemetry is not None:
             tr = self.telemetry.tracer
+            extra = {k: rec[k] for k in ("attrib", "attrib_unattributed")
+                     if k in rec}
             tr.instant(f"{phase}:sample", cat="phase",
                        measured_bytes=rec["live_bytes"],
-                       host_bytes=rec["host_bytes"])
+                       host_bytes=rec["host_bytes"], **extra)
             tr.sample("memory", {"device_mib": rec["live_bytes"] / 2**20,
                                  "host_mib": rec["host_bytes"] / 2**20})
+        fl = self._flight()
+        if fl is not None:
+            fl.note("sample", phase=phase, live_bytes=rec["live_bytes"],
+                    host_bytes=rec["host_bytes"])
+            fl.check(rec["live_bytes"], snapshot_fn=self._snapshot_for_dump,
+                     phase=phase, source="rlhf")
 
     def boundary(self, phase: str, kind: str, *drop):
         for tree in drop:
@@ -264,6 +321,15 @@ class PhaseMemoryManager:
         rec = self._record(phase, kind)
         if self.telemetry is not None:
             self._emit_phase_span(phase, kind, rec)
+        fl = self._flight()
+        if fl is not None:
+            # checked before the fetch: the record is the post-hygiene,
+            # pre-fetch trough — the same point the simulator records
+            fl.note("phase", phase=phase, kind=kind,
+                    live_bytes=rec["live_bytes"],
+                    host_bytes=rec["host_bytes"])
+            fl.check(rec["live_bytes"], snapshot_fn=self._snapshot_for_dump,
+                     phase=phase, source="rlhf")
         if self.offload is not None:
             self.offload.fetch_for_boundary(phase)
 
@@ -364,6 +430,48 @@ class RLHFTrainer:
         self.offload = self.offload_lot = None
         if rl.offload != "none":
             self._init_offload(rl)
+        # phase-scoped buffer trees the attribution engine reads through
+        # (merged rollout weights, rollout outputs, experience) — set and
+        # cleared by _gen/make_experience/train_step
+        self._live_buffers: Dict[str, Any] = {}
+        self._compiled_recorded: set = set()
+        if telemetry is not None:
+            self._init_attribution(telemetry)
+
+    # --------------------------------------------------------- attribution
+    def _init_attribution(self, telemetry) -> None:
+        """Create (or adopt) the run's MemoryAttributor and register this
+        trainer's owner trees. Registration order is priority order on
+        aliased arrays: the hydra trunk goes FIRST so the reference (which
+        IS the base) and the merged-rollout leaves that alias non-adapted
+        trunk arrays attribute to ``base_params``; the ``merged_rollout``
+        owner then claims only the freshly merged copies."""
+        from repro.obs import MemoryAttributor
+        at = telemetry.attribution
+        if at is None:
+            at = telemetry.attribution = MemoryAttributor()
+        if self.rl.engine == "hydra":
+            at.register("base_params", lambda: self.base_params)
+            at.register("reward_params", lambda: self.reward_adapter)
+        else:
+            at.register("ref_params", lambda: self.ref_params)
+            at.register("reward_params", lambda: self.reward_params)
+        at.register("actor_params", lambda: self.actor_state["params"])
+        at.register("actor_opt", lambda: self.actor_state["opt"])
+        at.register("critic_params", lambda: self.critic_state["params"])
+        at.register("critic_opt", lambda: self.critic_state["opt"])
+        # the ZeRO-3 rollout gather copies register BEFORE merged_rollout:
+        # the merged tree's non-adapted leaves alias the gathered trunk,
+        # and they are gather traffic, not freshly merged weights
+        at.register("zero_gather",
+                    lambda: self._live_buffers.get("zero_gather"))
+        at.register("merged_rollout",
+                    lambda: self._live_buffers.get("merged_rollout"))
+        at.register("rollout_buffers",
+                    lambda: self._live_buffers.get("rollout"))
+        at.register("experience",
+                    lambda: self._live_buffers.get("experience"))
+        self.memory.attributor = at
 
     # ------------------------------------------------------------- sharding
     def per_device_state_bytes(self) -> int:
@@ -588,10 +696,12 @@ class RLHFTrainer:
             p, owned = self.actor_state["params"], False
             if self.actor_plan is not None:
                 p, owned = self.actor_plan.gather_copy(p)
+                self._live_buffers["zero_gather"] = {"actor": p}
             try:
                 return self.rollout.generate(p, {"tokens": prompts},
                                              self.rl.gen_len, key)
             finally:
+                self._live_buffers.pop("zero_gather", None)
                 if owned:
                     delete_tree(p)
 
@@ -689,7 +799,17 @@ class RLHFTrainer:
                 base, owned_b = base_plan.gather_copy(self.base_params)
                 adapter, owned_a = a_plan.gather_copy(
                     self.actor_state["params"])
+                # the gather copies are live Python-held trees for the
+                # whole generation — own them in the attribution table
+                # (the merged tree's non-adapted leaves alias ``base``)
+                self._live_buffers["zero_gather"] = {
+                    "base": base, "adapter": adapter}
             merged = self.actor.merge_adapter(base, adapter)
+            # visible to the attribution engine for the duration of the
+            # phase (the mid-phase rollout_decode sample sees it); the
+            # non-adapted leaves alias the live trunk and attribute to
+            # base_params (it registered first)
+            self._live_buffers["merged_rollout"] = merged
             if self.offload is not None:
                 self.offload.rollout_merged()
             try:
@@ -707,6 +827,8 @@ class RLHFTrainer:
                 # stage 3 owned=False — merged aliases the LIVE base, and
                 # only the freshly-merged leaves may die).
                 delete_merged(merged, adapter.get("lora"))
+                self._live_buffers.pop("merged_rollout", None)
+                self._live_buffers.pop("zero_gather", None)
                 if owned_a:
                     delete_tree(adapter)
                 if owned_b:
@@ -798,12 +920,62 @@ class RLHFTrainer:
                 cur["sim_bytes"] = rec.allocated_end
                 cur["sim_peak_bytes"] = max(cur["sim_peak_bytes"],
                                             rec.alloc_peak)
+                # the simulator's per-state ledger at this boundary — the
+                # sim side of the per-owner measured-vs-sim diff (for a
+                # collapsed rollout, the last sub-phase record wins, same
+                # as sim_bytes)
+                if rec.state_bytes_end:
+                    cur["sim_owner_bytes"] = dict(rec.state_bytes_end)
             self.memory.sim_phase_bytes = sim
         except Exception as e:                        # pragma: no cover
             import warnings
             warnings.warn(f"telemetry: simulator prediction unavailable "
                           f"({e!r}); phase spans carry measured bytes only",
                           stacklevel=2)
+
+    def _maybe_record_compiled(self, program: str, fn, *args) -> None:
+        """Per-jitted-program compiled-memory accounting: feed XLA's
+        ``memory_analysis()`` temp/arg/output bytes for ``program`` into
+        the metrics registry, once. Lowering only traces (never executes),
+        so like the simulator replay this is one-time setup excluded from
+        the tracer's self-time. Pre-jitted ZeRO steps (two programs with
+        an eager re-shard between) expose no ``.lower`` and are skipped."""
+        if self.telemetry is None or program in self._compiled_recorded:
+            return
+        self._compiled_recorded.add(program)
+        if not hasattr(fn, "lower"):
+            return
+        from repro.obs import record_compiled_memory
+        record_compiled_memory(self.telemetry.registry, program, fn, *args)
+
+    def _record_compiled_programs(self, batch) -> None:
+        """Compiled-memory stats for the four scoring programs (lazy, at
+        the first make_experience — the args are the real batch)."""
+        if self.telemetry is None or "score_old_logp" in \
+                self._compiled_recorded:
+            return
+        rec = self._maybe_record_compiled
+        try:
+            if self.rl.engine == "hydra":
+                rec("score_old_logp", self._jit_logp, self.base_params,
+                    self.actor_state["params"], batch)
+                rec("score_ref", self._jit_ref_logp, self.base_params, batch)
+                rec("score_values", self._jit_values, self.base_params,
+                    self.critic_state["params"], batch)
+                if self.reward_fn is None:
+                    rec("score_reward", self._jit_reward, self.base_params,
+                        self.reward_adapter, batch)
+            else:
+                rec("score_old_logp", self._jit_logp,
+                    self.actor_state["params"], batch)
+                rec("score_ref", self._jit_logp, self.ref_params, batch)
+                rec("score_values", self._jit_values,
+                    self.critic_state["params"], batch)
+                if self.reward_fn is None:
+                    rec("score_reward", self._jit_reward,
+                        self.reward_params, batch)
+        except Exception:                             # pragma: no cover
+            pass
 
     def _role_gather_bytes(self) -> Dict[str, int]:
         """Analytic ZeRO-3 all-gather bytes per update program (cached):
@@ -851,9 +1023,12 @@ class RLHFTrainer:
         order the offload plan prefetches against)."""
         mm = self.memory
         ro = self._gen(prompts, key)
+        self._live_buffers["rollout"] = {
+            "tokens": ro.tokens, "logp": ro.logp, "mask": ro.mask}
         mm.boundary("rollout", "inference")
 
         batch = self._shard_batch({"tokens": ro.tokens})
+        self._record_compiled_programs(batch)
         if self.reward_fn is not None:
             terminal = self.reward_fn(ro.tokens, ro.mask)
         else:
@@ -884,15 +1059,40 @@ class RLHFTrainer:
         return exp
 
     def train_step(self, prompts: jax.Array, key) -> Dict[str, float]:
-        """One full PPO iteration (all seven phases)."""
+        """One full PPO iteration (all seven phases). A caught XLA
+        ``RESOURCE_EXHAUSTED`` is captured by the flight recorder (owner
+        table + top buffers at the moment of death) and re-raised — the
+        recorder observes, it never swallows."""
+        try:
+            return self._train_step_inner(prompts, key)
+        except Exception as e:
+            fl = self.memory._flight()
+            if fl is not None and fl.is_oom(e):
+                at = self.memory.attributor
+                fl.record_oom(
+                    e, snapshot_fn=(at.snapshot if at is not None else None),
+                    live_bytes=live_device_bytes(), source="rlhf")
+            raise
+
+    def _train_step_inner(self, prompts: jax.Array, key) -> Dict[str, float]:
         if self.telemetry is not None:
             if self.telemetry.sim_delta and not self._sim_attached:
                 self._sim_attached = True
                 self._attach_sim_predictions(int(prompts.shape[0]))
             self.memory.iteration_start()
         exp = self.make_experience(prompts, key)
+        # the copy (same arrays) keeps popped members attributed to the
+        # experience owner for the rest of the iteration
+        self._live_buffers["experience"] = dict(exp)
         mean_reward = float(exp.pop("mean_reward"))
         old_values = exp.pop("old_values")
+        if self.rl.engine == "hydra":
+            self._maybe_record_compiled("train_actor", self._jit_actor_step,
+                                        self.actor_state, self.base_params,
+                                        exp)
+        else:
+            self._maybe_record_compiled("train_actor", self._jit_actor_step,
+                                        self.actor_state, exp)
         metrics = {}
         for _ in range(self.rl.ppo_epochs):
             m = self._actor_update(exp)
@@ -900,11 +1100,20 @@ class RLHFTrainer:
             self._count_gather("train_actor")
         self.memory.boundary("train_actor", "training")
         cbatch = dict(exp, old_values=old_values)
+        if self.rl.engine == "hydra":
+            self._maybe_record_compiled("train_critic", self._jit_critic_step,
+                                        self.critic_state, self.base_params,
+                                        cbatch)
+        else:
+            self._maybe_record_compiled("train_critic", self._jit_critic_step,
+                                        self.critic_state, cbatch)
         for _ in range(self.rl.ppo_epochs):
             mc = self._critic_update(cbatch)
             metrics.update({k: float(v) for k, v in mc.items()})
             self._count_gather("train_critic")
         self.memory.boundary("train_critic", "training", exp, cbatch)
+        self._live_buffers.pop("rollout", None)
+        self._live_buffers.pop("experience", None)
         metrics["mean_reward"] = mean_reward
         if self.telemetry is not None:
             self.memory.iteration_end(mean_reward=mean_reward)

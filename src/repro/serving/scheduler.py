@@ -73,6 +73,22 @@ class ContinuousBatcher:
                  warmup: bool = True):
         assert cache_backend in ("dense", "paged"), cache_backend
         self.telemetry = telemetry          # obs.RunTelemetry | None
+        # memory observatory: owner registration for the attribution
+        # engine, the run's flight recorder, and per-jit-program
+        # compiled-memory stats joined to CompileCache keys
+        self.flight = getattr(telemetry, "flight", None)
+        self.attributor = None
+        self.compiled_memory: dict = {}
+        if telemetry is not None:
+            from repro.obs import MemoryAttributor
+            at = telemetry.attribution
+            if at is None:
+                at = telemetry.attribution = MemoryAttributor()
+            at.register("serving_params", lambda: self.params)
+            at.register("kv_cache", lambda: getattr(self, "caches", None))
+            at.register("kv_pool", lambda: getattr(self, "pools", None))
+            at.register("spec_state", lambda: getattr(self, "h_last", None))
+            self.attributor = at
         self.model, self.cfg, self.params = model, cfg, params
         self.B, self.capacity = slots, capacity
         self.temperature, self.top_k, self.eos_id = temperature, top_k, eos_id
@@ -200,11 +216,18 @@ class ContinuousBatcher:
                 lens = jnp.zeros((1,), jnp.int32)
                 if self.backend == "dense":
                     self._prefill(self.params, batch, lens)
+                    cc.warm(("prefill", self.backend, Sb))
+                    self._note_compiled(("prefill", self.backend, Sb),
+                                        self._prefill, self.params, batch,
+                                        lens)
                 else:
                     bt = jnp.full((1, self.max_blocks), -1, jnp.int32)
                     _, self.pools, _ = self._prefill(
                         self.params, batch, self.pools, bt, lens)
-                cc.warm(("prefill", self.backend, Sb))
+                    cc.warm(("prefill", self.backend, Sb))
+                    self._note_compiled(("prefill", self.backend, Sb),
+                                        self._prefill, self.params, batch,
+                                        self.pools, bt, lens)
         for nb in (self.slot_ladder.up_to(self.B)
                    if self.slot_ladder is not None else (self.B,)):
             tok = jnp.zeros((nb,), jnp.int32)
@@ -219,10 +242,16 @@ class ContinuousBatcher:
                         self.params, self.caches, self.h_last, tok, pos,
                         live)
                     cc.warm(self._decode_key(nb))
+                    self._note_compiled(self._decode_key(nb), self._spec,
+                                        self.params, self.caches,
+                                        self.h_last, tok, pos, live)
                 else:
                     _, self.caches = self._decode(
                         self.params, self.caches, tok, pos, k, live)
                     cc.warm(self._decode_key(nb))
+                    self._note_compiled(self._decode_key(nb), self._decode,
+                                        self.params, self.caches, tok, pos,
+                                        k, live)
             else:
                 bt = jnp.full((nb, self.max_blocks), -1, jnp.int32)
                 if self.spec_decode:
@@ -230,10 +259,17 @@ class ContinuousBatcher:
                                   self.h_last.dtype)
                     *_, self.pools = self._spec(
                         self.params, self.pools, h, tok, pos, bt, live)
+                    cc.warm(self._decode_key(nb))
+                    self._note_compiled(self._decode_key(nb), self._spec,
+                                        self.params, self.pools, h, tok,
+                                        pos, bt, live)
                 else:
                     _, self.pools = self._decode(
                         self.params, self.pools, tok, pos, bt, k, live)
-                cc.warm(self._decode_key(nb))
+                    cc.warm(self._decode_key(nb))
+                    self._note_compiled(self._decode_key(nb), self._decode,
+                                        self.params, self.pools, tok, pos,
+                                        bt, k, live)
         cc.finish_warmup()
 
     def _decode_key(self, nb: int):
@@ -241,12 +277,30 @@ class ContinuousBatcher:
         extents = (nb, self.spec_k + 1) if self.spec_decode else (nb,)
         return (kind, self.backend) + extents
 
-    def _record_key(self, key) -> None:
+    def _note_compiled(self, key, fn, *args) -> None:
+        """Join this CompileCache key with its program's compiled-memory
+        stats (XLA ``memory_analysis``): temp/arg/output bytes land in the
+        registry under ``program=<key>`` and in ``self.compiled_memory``
+        — so every bucket rung, and any post-warmup recompile, carries
+        its memory cost. Lowering only traces; no execution."""
+        if self.telemetry is None or key in self.compiled_memory:
+            return
+        from repro.obs import record_compiled_memory
+        stats = record_compiled_memory(
+            self.telemetry.registry, ":".join(str(k) for k in key),
+            fn, *args)
+        if stats is not None:
+            self.compiled_memory[key] = stats
+
+    def _record_key(self, key, fn=None, *args) -> None:
         hit = self.compile_cache.lookup(key)
         if self.telemetry is not None and not hit:
             self.telemetry.tracer.instant(
                 f"compile:{':'.join(str(k) for k in key)}", "serving",
                 recompile=self.compile_cache.warmed)
+            # a post-warmup miss is a recompile: account its memory too
+            if fn is not None:
+                self._note_compiled(key, fn, *args)
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int) -> Request:
         prompt = np.asarray(prompt, np.int32)
@@ -351,7 +405,16 @@ class ContinuousBatcher:
                     self.caches["segments"] = jax.tree.map(
                         lambda pool, new: pool.at[:, s:s + 1].set(new),
                         self.caches["segments"], caches1["segments"])
-                self._record_key(("prefill", self.backend, Sb))
+                pk = ("prefill", self.backend, Sb)
+                pb = {"tokens": jnp.asarray(padded)[None]}
+                if self.backend == "paged":
+                    self._record_key(pk, self._prefill, self.params, pb,
+                                     self.pools, bt_row, lens)
+                elif self._rich_prefill:
+                    self._record_key(pk, self._prefill, self.params, pb,
+                                     lens)
+                else:
+                    self._record_key(pk, self._prefill, self.params, pb)
                 self.key, k = jax.random.split(self.key)
                 tok, _ = sample_token(k, lg, temperature=self.temperature,
                                       top_k=self.top_k)
@@ -583,7 +646,34 @@ class ContinuousBatcher:
 
     def step(self) -> List[Request]:
         """Admit, one decode step for all live slots, retire. Returns the
-        requests completed this step."""
+        requests completed this step. With a flight recorder attached the
+        step is watermark-checked, and a caught ``RESOURCE_EXHAUSTED``
+        is captured (owner table, top buffers, recent serve steps) before
+        the re-raise."""
+        try:
+            done = self._step_inner()
+        except Exception as e:
+            fl = self.flight
+            if fl is not None and fl.is_oom(e):
+                from repro.rlhf.trainer import live_device_bytes
+                at = self.attributor
+                fl.record_oom(
+                    e, snapshot_fn=(at.snapshot if at is not None else None),
+                    live_bytes=live_device_bytes(), source="serving")
+            raise
+        if self.flight is not None:
+            from repro.rlhf.trainer import live_device_bytes
+            live = live_device_bytes()
+            self.flight.note("serve_step", step=self.steps,
+                             live_bytes=live, queued=len(self.queue),
+                             kv_reserved_bytes=self.kv_reserved_bytes())
+            at = self.attributor
+            self.flight.check(
+                live, snapshot_fn=(at.snapshot if at is not None else None),
+                source="serving")
+        return done
+
+    def _step_inner(self) -> List[Request]:
         t0_us = None
         if self.telemetry is not None:
             t0_us = self.telemetry.tracer.now_us()
