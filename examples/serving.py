@@ -15,10 +15,17 @@ steps; ``--spec-decode`` turns on MTP self-speculative greedy decoding
 (bit-identical greedy output, fewer decode dispatches). Both are the
 DESIGN.md "Fast decode path" features.
 
+``--prefix-cache`` shares one system prompt across all requests so later
+arrivals hash-hit its KV pages instead of re-prefilling them;
+``--tenants gold,silver,bronze`` splits traffic across tenants under
+weighted round-robin admission with anti-starvation aging.
+
     PYTHONPATH=src python examples/serving.py [--arch mamba2_370m]
     PYTHONPATH=src python examples/serving.py --backend paged
     PYTHONPATH=src python examples/serving.py --backend paged \
         --spec-decode --capture-buckets 8,16,32
+    PYTHONPATH=src python examples/serving.py --backend paged \
+        --prefix-cache --tenants gold,silver,bronze
 """
 import argparse
 import dataclasses
@@ -63,18 +70,27 @@ def paged_demo(args):
             if args.watermark else None
         telemetry = RunTelemetry.create(run="serving", arch=args.arch,
                                         backend="paged", flight=flight)
+    tenants = [t for t in args.tenants.split(",") if t] or ["default"]
+    weights = {t: float(len(tenants) - i) for i, t in enumerate(tenants)}
     cb = ContinuousBatcher(model, cfg, params, slots=args.batch,
                            capacity=capacity, temperature=temperature,
                            top_k=top_k, cache_backend="paged", page_size=16,
                            capture_buckets=buckets,
                            spec_decode=args.spec_decode, spec_k=args.spec_k,
-                           telemetry=telemetry)
+                           prefix_cache=args.prefix_cache,
+                           tenant_weights=weights, telemetry=telemetry)
     rng = np.random.RandomState(0)
     n_req = args.batch * args.requests
+    # with --prefix-cache every request shares one 16-token system prompt,
+    # so only the first prefills it; the rest hash-hit and ride its pages
+    system = rng.randint(0, cfg.vocab_size, size=16)
     for i in range(n_req):
         # ragged: every request decodes a different number of tokens
-        cb.submit(rng.randint(0, cfg.vocab_size, size=24),
-                  int(rng.randint(args.gen // 4, args.gen)))
+        tail = rng.randint(0, cfg.vocab_size, size=8)
+        prompt = np.concatenate([system, tail]) if args.prefix_cache \
+            else rng.randint(0, cfg.vocab_size, size=24)
+        cb.submit(prompt, int(rng.randint(args.gen // 4, args.gen)),
+                  tenant=tenants[i % len(tenants)])
     print(f"serving {cfg.name} [paged] | pool {cb.pm.num_pages} pages "
           f"x {cb.pm.page_size} tokens")
     done, t0 = 0, time.time()
@@ -88,6 +104,10 @@ def paged_demo(args):
                   f"frag {cb.pm.fragmentation_slots():3d} slots")
     if buckets or args.spec_decode:
         print("compile cache:", cb.compile_cache.stats())
+    if args.prefix_cache:
+        print(f"prefix cache: hit rate {cb.prefix_hit_rate():.3f} "
+              f"({cb.pm.stats.n_prefix_hits} page hits, "
+              f"{cb.pm.stats.n_prefix_evictions} evictions)")
     dense_bytes = cb.B * capacity * (cb.pm.bytes_per_token or 1)
     print(f"drained in {time.time()-t0:.1f}s | peak "
           f"{st.peak_pages_in_use * cb.pm.page_bytes / 2**20:.2f} MiB paged "
@@ -123,6 +143,14 @@ def main():
                     help="draft tokens per speculative step")
     ap.add_argument("--capture-buckets", default="",
                     help="comma list of compile-bucket sizes, e.g. 8,16,32")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="cross-request prefix caching (paged backend): "
+                         "requests share one system prompt and hash-hit "
+                         "its KV pages instead of re-prefilling")
+    ap.add_argument("--tenants", default="",
+                    help="comma list of tenant names for weighted "
+                         "round-robin admission, e.g. gold,silver,bronze "
+                         "(first listed gets the highest weight)")
     ap.add_argument("--watermark", type=float, default=0.0,
                     metavar="FRACTION",
                     help="arm the OOM flight recorder (paged backend): "

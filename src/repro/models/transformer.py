@@ -593,6 +593,39 @@ class Model:
             return logits, new_pools, h_last
         return logits, new_pools
 
+    def paged_prefill_suffix(self, params, batch, pools, block_tables,
+                             start, lengths, *, adapter=None,
+                             return_h: bool = False):
+        """Prefill only the *suffix* of a prompt whose prefix KV already
+        sits in the pool (cross-request prefix cache hit). batch["tokens"]
+        [B, Sb] holds ``prompt[start:]`` right-padded to the suffix bucket;
+        ``start`` [B] is the per-row count of cached prefix tokens and
+        ``lengths`` [B] the full prompt length. Suffix K/V is appended to
+        the pool first and attention gathers from the pool (the
+        :meth:`paged_decode_multi` layout), so a query at position p sees
+        cached prefix entries (idx < start) and earlier suffix entries
+        through one and the same mask — a cold run (start = 0) and a warm
+        run compute the identical per-position function. Returns
+        (last-prompt-position logits [B, V], pools[, h_last])."""
+        tokens = batch["tokens"]
+        B, Sb = tokens.shape
+        j = jnp.arange(Sb, dtype=jnp.int32)[None, :]
+        pos = start[:, None].astype(jnp.int32) + j
+        positions = jnp.where(pos < lengths[:, None], pos, -1)
+        logits_all, h_all, new_pools = self.paged_decode_multi(
+            params, pools, tokens, positions, block_tables, adapter=adapter)
+        idx = jnp.clip(lengths - start - 1, 0, Sb - 1).astype(jnp.int32)
+        logits = jnp.take_along_axis(
+            logits_all, jnp.broadcast_to(idx[:, None, None],
+                                         (B, 1, logits_all.shape[-1])),
+            1)[:, 0]
+        if return_h:
+            h_last = jnp.take_along_axis(
+                h_all, jnp.broadcast_to(idx[:, None, None],
+                                        (B, 1, h_all.shape[-1])), 1)[:, 0]
+            return logits, new_pools, h_last
+        return logits, new_pools
+
     def paged_decode_step(self, params, pools, token, position, block_tables,
                           *, use_kernel: bool = False, adapter=None):
         """One-token decode over paged pools. token/position [B] (position

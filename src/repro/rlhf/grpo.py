@@ -31,6 +31,8 @@ class GRPOConfig:
     temperature: float = 1.0
     top_k: int = 0
     memory_policy: str = "after_inference"
+    rollout_backend: str = "dense"   # "paged": G samples fork ONE shared
+    page_size: int = 16              # prompt prefill (CoW page sharing)
 
 
 class GRPOTrainer:
@@ -50,7 +52,9 @@ class GRPOTrainer:
         self.ref_params = jax.tree.map(jnp.copy, self.actor_state["params"])
         self.rollout = Rollout(self.actor, actor_cfg,
                                capacity=rl.prompt_len + rl.gen_len,
-                               temperature=rl.temperature, top_k=rl.top_k)
+                               temperature=rl.temperature, top_k=rl.top_k,
+                               backend=rl.rollout_backend,
+                               page_size=rl.page_size)
         self.memory = PhaseMemoryManager(policy=rl.memory_policy)
         self._jit_step = jax.jit(self.actor_step, donate_argnums=(0,))
         self._jit_logp = jax.jit(self._token_logp)
@@ -62,12 +66,15 @@ class GRPOTrainer:
                             _prefix_len(self.actor_cfg))
 
     def train_step(self, prompts: jax.Array, key) -> Dict[str, float]:
-        """prompts [B, P]; each prompt is expanded to a group of G."""
+        """prompts [B, P]; each prompt is expanded to a group of G. On the
+        paged rollout backend the G samples fork one shared prompt prefill
+        (CoW page sharing) — same sampled stream as the dense repeat, with
+        the prompt prefilled once per unique prompt."""
         G = self.rl.group_size
         B = prompts.shape[0]
-        grouped = jnp.repeat(prompts, G, axis=0)          # [B*G, P]
         ro = self.rollout.generate(self.actor_state["params"],
-                                   {"tokens": grouped}, self.rl.gen_len, key)
+                                   {"tokens": prompts}, self.rl.gen_len, key,
+                                   group_size=G)          # [B*G, ...]
         self.memory.boundary("rollout", "inference")
 
         batch = {"tokens": ro.tokens}

@@ -221,7 +221,7 @@ class Rollout:
         self.compile_cache.finish_warmup()
 
     def generate(self, params, batch, max_new_tokens: int, key,
-                 adapter=None):
+                 adapter=None, group_size: int = 1):
         """batch: prompt inputs (see Model input modes). Python loop over
         steps — the realistic serving pattern, and the phase the paper's
         §3.1 traces.
@@ -232,18 +232,36 @@ class Rollout:
         phase boundary (the base leaves they alias survive). The merge is
         redone from the frozen base next call, so fp error never
         accumulates. Spec decode drafts and verifies from the same merged
-        tree (MTP modules included), so hydra output stays greedy-exact."""
+        tree (MTP modules included), so hydra output stays greedy-exact.
+
+        ``group_size = G > 1`` (GRPO / best-of-N) expands every prompt to
+        a group of G samples, returning ``[B*G, ...]`` results ordered as
+        ``jnp.repeat`` would produce. On the paged backend the group
+        *forks one shared prompt prefill*: the prompt is prefilled once
+        per unique prompt and the G samples share its pages copy-on-write
+        — same sampling stream as the repeat path (the prefill logits are
+        replicated row-wise before sampling), at 1/G of the prefill
+        compute and shared prompt KV."""
         if adapter is not None:
             from repro.models.lora import delete_merged
             merged = self.model.merge_adapter(params, adapter)
             try:
-                return self.generate(merged, batch, max_new_tokens, key)
+                return self.generate(merged, batch, max_new_tokens, key,
+                                     group_size=group_size)
             finally:
                 delete_merged(merged, adapter.get("lora"))
+        if group_size > 1 and not (self.backend == "paged"
+                                   and not self.spec_decode):
+            # dense/spec paths have no page sharing to exploit: expand up
+            # front (identical results, G times the prefill)
+            batch = dict(batch, tokens=jnp.repeat(batch["tokens"],
+                                                  group_size, axis=0))
+            group_size = 1
         if self.spec_decode:
             return self._generate_spec(params, batch, max_new_tokens, key)
         if self.backend == "paged":
-            return self._generate_paged(params, batch, max_new_tokens, key)
+            return self._generate_paged(params, batch, max_new_tokens, key,
+                                        group_size=group_size)
         tokens = batch["tokens"]
         B, P = tokens.shape
         prefix = (self.cfg.num_prefix_embeddings
@@ -295,43 +313,77 @@ class Rollout:
                      caches)
         return RolloutResult(tokens=full, logp=logp, mask=mask, prompt_len=P)
 
-    def _generate_paged(self, params, batch, max_new_tokens: int, key):
+    def _generate_paged(self, params, batch, max_new_tokens: int, key,
+                        group_size: int = 1):
         """Paged generation phase: identical sampling stream to the dense
         path (same logits, same keys), but KV lives in a page pool that
         grows by one page per sequence only when a page boundary is
         crossed. ``self.page_manager`` afterwards holds the alloc/free
-        event stream for the memory simulator."""
+        event stream for the memory simulator.
+
+        With ``group_size = G > 1`` each prompt row is prefilled ONCE and
+        forked into G sequences sharing the prompt pages copy-on-write
+        (``PageManager.fork``); the prefill logits are replicated to the
+        ``B*G`` sampling rows, so the emitted stream is exactly what
+        ``jnp.repeat(prompts, G)`` through the unshared path would give."""
         from repro.paged import PageManager, pool_token_bytes
 
         tokens = batch["tokens"]
         B, P = tokens.shape
+        G = group_size
+        BG = B * G
         ps = self.page_size
         nb = -(-(P + max_new_tokens) // ps)
         dtype = jax.tree.leaves(params)[0].dtype
+        if G == 1:
+            num_pages = B * nb
+        else:
+            # shared prompt pages once per unique prompt, plus each group
+            # member's own growth: pages past the shared full-page prefix
+            # (a partial prompt page is CoW-copied on first append)
+            num_pages = B * (-(-P // ps)) + BG * (nb - P // ps)
         pm = PageManager(
-            B * nb, ps,
+            num_pages, ps,
             bytes_per_token=pool_token_bytes(self.cfg, dtype)
             * self.cfg.num_layers)
         for b in range(B):
-            pm.allocate(b, P)
-        pools = self.model.init_paged_pools(B * nb, ps, dtype)
-        seq_ids = list(range(B))
-        bt = jnp.asarray(pm.block_table_array(seq_ids, nb))
+            pm.allocate(b * G, P)           # group parent row
+        pools = self.model.init_paged_pools(num_pages, ps, dtype)
+        bt = jnp.asarray(pm.block_table_array(
+            [b * G for b in range(B)], nb))
         pbatch, lens, Sb = self._bucketed_prompt(tokens)
         self.compile_cache.lookup(("prefill", "paged", Sb))
         logits, pools, _h = self._prefill(params, pbatch, pools, bt, lens)
+        if G > 1:
+            for b in range(B):
+                for g in range(1, G):
+                    pm.fork(b * G, b * G + g)
+            logits = jnp.repeat(logits, G, axis=0)
+            tokens = jnp.repeat(tokens, G, axis=0)
+        seq_ids = list(range(BG))
         tok, logp0 = sample_token(jax.random.fold_in(key, 0), logits,
                                   temperature=self.temperature,
                                   top_k=self.top_k)
         tok = tok.astype(jnp.int32)
-        done = jnp.zeros((B,), bool)
+        done = jnp.zeros((BG,), bool)
         out_toks = [tok]
         out_logp = [logp0]
         for t in range(1, max_new_tokens):
-            for b in range(B):
-                pm.append_token(b)          # page for index P + t - 1
+            copies = []
+            for b in seq_ids:
+                copies += pm.append_token(b)   # page for index P + t - 1
+            if copies:
+                # CoW of a shared partial prompt page: mirror the copies
+                # on every layer pool before the decode writes past them
+                from repro.paged import copy_pages
+                src = [s for s, _ in copies]
+                dst = [d for _, d in copies]
+                pools = [
+                    {k2: jax.vmap(copy_pages, in_axes=(0, None, None))(
+                        pool, src, dst) for k2, pool in seg.items()}
+                    for seg in pools]
             bt = jnp.asarray(pm.block_table_array(seq_ids, nb))
-            pos = jnp.full((B,), P + t - 1, jnp.int32)
+            pos = jnp.full((BG,), P + t - 1, jnp.int32)
             k = jax.random.fold_in(key, t)
             tok, lp, pools = self._decode(params, pools, tok, pos, bt, k,
                                           done)
@@ -339,7 +391,7 @@ class Rollout:
                 done = done | (out_toks[-1] == self.eos_id)
             out_toks.append(tok)
             out_logp.append(lp)
-        for b in range(B):
+        for b in seq_ids:
             pm.free_seq(b)
         self.page_manager = pm
         return self._finalize(tokens, out_toks, out_logp, pools)

@@ -32,13 +32,32 @@ Two decode-path speed features ride on top (DESIGN.md "Fast decode path"):
     Output is bit-identical to vanilla greedy decoding by construction
     (every emitted token is the verify forward's own argmax); drafts only
     move the accept rate. Greedy-only (``temperature == 0, top_k == 0``).
+
+Multi-tenant serving features (paged backend):
+
+  * ``prefix_cache`` — cross-request prefix sharing: committed prompt
+    pages are content-hash indexed in the ``PageManager`` and a new
+    request whose prompt shares the prefix reuses them with a refcount
+    bump, prefilling only the *suffix* (bucketed on suffix length). With
+    the cache on, **every** prefill — cold included — runs through
+    ``Model.paged_prefill_suffix``, so a hash hit is bit-identical to a
+    cold prefill by construction. ``update_params`` bumps the pool's
+    weight version and invalidates every cached prefix, so RLHF weight
+    updates never serve stale KV.
+  * per-tenant fairness — requests carry a ``tenant`` label; admission
+    runs weighted round-robin over per-tenant FIFO queues using virtual
+    time (``vtime += cost / weight``) with an anti-starvation aging term,
+    so a heavy tenant cannot starve a light one and every queued request
+    is admitted in bounded time. Preemption picks the victim holding the
+    most *exclusively owned* pages (shared prefix pages survive their
+    victim and keep serving siblings).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
-from typing import Deque, List, Optional, Sequence
+from collections import OrderedDict, deque
+from typing import Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -59,6 +78,9 @@ class Request:
     done: bool = False
     n_preempted: int = 0
     t_submit: float = 0.0        # wall time at submit(); admission latency
+    tenant: str = "default"
+    step_submit: int = 0         # batcher step at submit(); aging clock
+    n_cached_tokens: int = 0     # prompt tokens served from the prefix cache
 
 
 class ContinuousBatcher:
@@ -70,8 +92,12 @@ class ContinuousBatcher:
                  num_pages: Optional[int] = None, telemetry=None,
                  capture_buckets: Optional[Sequence[int]] = None,
                  spec_decode: bool = False, spec_k: int = 2,
-                 warmup: bool = True):
+                 warmup: bool = True, prefix_cache: bool = False,
+                 tenant_weights: Optional[Dict[str, float]] = None,
+                 aging: float = 1.0):
         assert cache_backend in ("dense", "paged"), cache_backend
+        assert not (prefix_cache and cache_backend != "paged"), \
+            "prefix caching needs the paged backend"
         self.telemetry = telemetry          # obs.RunTelemetry | None
         # memory observatory: owner registration for the attribution
         # engine, the run's flight recorder, and per-jit-program
@@ -93,7 +119,15 @@ class ContinuousBatcher:
         self.B, self.capacity = slots, capacity
         self.temperature, self.top_k, self.eos_id = temperature, top_k, eos_id
         self.backend = cache_backend
-        self.queue: Deque[Request] = deque()
+        self.prefix_cache = prefix_cache
+        # per-tenant FIFO queues under weighted round-robin admission;
+        # single-tenant traffic degenerates to the old global FIFO
+        self.queues: "OrderedDict[str, Deque[Request]]" = OrderedDict()
+        self.tenant_weights: Dict[str, float] = dict(tenant_weights or {})
+        self.aging = aging
+        self._vtime: Dict[str, float] = {}
+        self._prefix_tokens_hit = 0
+        self._prefix_tokens_total = 0
         self.active: List[Optional[Request]] = [None] * slots
         self.pos = np.zeros(slots, np.int64)        # next absolute position
         self.last_tok = np.zeros(slots, np.int64)
@@ -187,6 +221,16 @@ class ContinuousBatcher:
                 lambda params, batch, pools, bt, lens: model.paged_prefill(
                     params, batch, pools, bt, lens, return_h=True),
                 donate_argnums=(2,))
+            if prefix_cache:
+                # with the cache on, ALL prefills (cold included) run the
+                # suffix program — hash hits are bit-identical to cold
+                # prefills because they are the same computation
+                self._prefill_suffix = jax.jit(
+                    lambda params, batch, pools, bt, start, lens:
+                        model.paged_prefill_suffix(
+                            params, batch, pools, bt, start, lens,
+                            return_h=True),
+                    donate_argnums=(2,))
 
             if spec_decode:
                 def spec_step(params, pools, h_last, tok, pos, bt, live):
@@ -220,6 +264,15 @@ class ContinuousBatcher:
                     self._note_compiled(("prefill", self.backend, Sb),
                                         self._prefill, self.params, batch,
                                         lens)
+                elif self.prefix_cache:
+                    bt = jnp.full((1, self.max_blocks), -1, jnp.int32)
+                    start = jnp.zeros((1,), jnp.int32)
+                    _, self.pools, _ = self._prefill_suffix(
+                        self.params, batch, self.pools, bt, start, lens)
+                    cc.warm(("prefill", self.backend, Sb))
+                    self._note_compiled(("prefill", self.backend, Sb),
+                                        self._prefill_suffix, self.params,
+                                        batch, self.pools, bt, start, lens)
                 else:
                     bt = jnp.full((1, self.max_blocks), -1, jnp.int32)
                     _, self.pools, _ = self._prefill(
@@ -302,7 +355,8 @@ class ContinuousBatcher:
             if fn is not None:
                 self._note_compiled(key, fn, *args)
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> Request:
+    def submit(self, prompt: np.ndarray, max_new_tokens: int,
+               tenant: str = "default") -> Request:
         prompt = np.asarray(prompt, np.int32)
         if self.backend == "paged" and \
                 len(prompt) + max_new_tokens > self.capacity:
@@ -311,13 +365,36 @@ class ContinuousBatcher:
                 f"request needs {len(prompt) + max_new_tokens} tokens, "
                 f"capacity is {self.capacity}")
         req = Request(self._next_rid, prompt, max_new_tokens,
-                      t_submit=time.perf_counter())
+                      t_submit=time.perf_counter(), tenant=tenant,
+                      step_submit=self.steps)
         self._next_rid += 1
-        self.queue.append(req)
+        q = self.queues.get(tenant)
+        if q is None:
+            q = self.queues[tenant] = deque()
+        if not q:
+            # a tenant going from idle to backlogged re-enters at the
+            # current service frontier: it must not bank idle time and
+            # then monopolise admission catching up
+            floor = min((self._vtime.get(t, 0.0)
+                         for t, tq in self.queues.items() if tq and t != tenant),
+                        default=self._vtime.get(tenant, 0.0))
+            self._vtime[tenant] = max(self._vtime.get(tenant, 0.0), floor)
+        q.append(req)
         if self.telemetry is not None:
             self.telemetry.registry.counter(
                 "serving_requests_total", "requests submitted").inc()
         return req
+
+    @property
+    def queue(self) -> List[Request]:
+        """Flat view of all queued requests (oldest first), across tenants."""
+        out = [r for q in self.queues.values() for r in q]
+        out.sort(key=lambda r: r.rid)
+        return out
+
+    @property
+    def n_queued(self) -> int:
+        return sum(len(q) for q in self.queues.values())
 
     # -- paged helpers -------------------------------------------------------
     def _block_tables_for(self, sids: Sequence[Optional[int]]) -> jnp.ndarray:
@@ -340,19 +417,28 @@ class ContinuousBatcher:
             for seg in self.pools]
 
     def _preempt_youngest(self, *, protect: Optional[int] = None) -> bool:
-        """Free the youngest active request's pages and re-queue it;
-        re-admission recomputes its prompt *plus* generated-so-far prefill
-        (``prompt`` itself is never mutated, so repeated preemption cannot
-        duplicate tokens). Returns False if no victim is available."""
+        """Free a victim request's pages and re-queue it; re-admission
+        recomputes its prompt *plus* generated-so-far prefill (``prompt``
+        itself is never mutated, so repeated preemption cannot duplicate
+        tokens). The victim is the youngest active request; with the
+        prefix cache on, ties in actual reclaim matter — the victim is
+        the one holding the most *exclusively owned* pages (refcount 1),
+        since shared prefix pages survive preemption and free nothing.
+        Returns False if no victim is available."""
         victims = [s for s, r in enumerate(self.active)
                    if r is not None and s != protect]
         if not victims:
             return False
-        s = max(victims, key=lambda s: self.active[s].rid)
+        if self.prefix_cache:
+            s = max(victims, key=lambda s: (
+                self.pm.reclaimable_pages(self.active[s].rid),
+                self.active[s].rid))
+        else:
+            s = max(victims, key=lambda s: self.active[s].rid)
         req = self.active[s]
         self.pm.free_seq(req.rid)
         req.n_preempted += 1
-        self.queue.appendleft(req)
+        self.queues[req.tenant].appendleft(req)
         self.active[s] = None
         if self.telemetry is not None:
             self.telemetry.registry.counter(
@@ -364,15 +450,67 @@ class ContinuousBatcher:
         return True
 
     # -- internals -----------------------------------------------------------
+    def _pick_tenant(self) -> Optional[str]:
+        """Weighted round-robin with anti-starvation aging: among
+        backlogged tenants, pick the one minimising ``vtime[tenant] -
+        aging * steps_waited`` for its queue head. Lowest virtual time
+        (least service per unit weight) wins, and every waiting head's
+        score falls by ``aging`` per step — so no tenant starves
+        regardless of the weight ratio. Ties break on oldest request."""
+        best, best_score = None, None
+        for t, q in self.queues.items():
+            if not q:
+                continue
+            score = (self._vtime.get(t, 0.0)
+                     - self.aging * (self.steps - q[0].step_submit))
+            if best is None or score < best_score or \
+                    (score == best_score
+                     and q[0].rid < self.queues[best][0].rid):
+                best, best_score = t, score
+        return best
+
     def _admit(self):
         for s in range(self.B):
-            if self.active[s] is None and self.queue:
-                req = self.queue[0]
-                # recompute prefill: original prompt plus anything generated
-                # before a preemption (empty for fresh requests)
-                full = np.concatenate(
-                    [req.prompt, np.asarray(req.out_tokens, np.int32)])
-                P = len(full)
+            if self.active[s] is not None:
+                continue
+            tenant = self._pick_tenant()
+            if tenant is None:
+                break
+            req = self.queues[tenant][0]
+            # recompute prefill: original prompt plus anything generated
+            # before a preemption (empty for fresh requests)
+            full = np.concatenate(
+                [req.prompt, np.asarray(req.out_tokens, np.int32)])
+            P = len(full)
+            n_cached = 0
+            if self.backend == "paged" and self.prefix_cache:
+                # gate admission on pages for the non-cached tail + first
+                # decode token; matched pages are reused, not claimed
+                if not self.pm.can_allocate_prefix(full, 1):
+                    break
+                self.queues[tenant].popleft()
+                _, n_cached = self.pm.allocate_prefix(req.rid, full)
+                suffix = full[n_cached:]
+                # bucket on the *suffix* length — a hash hit compiles and
+                # computes only the tail
+                Sb = self.prefill_ladder.fit(len(suffix)) \
+                    if self.prefill_ladder else len(suffix)
+                padded = np.zeros(Sb, np.int32)
+                padded[:len(suffix)] = suffix
+                lens = jnp.full((1,), P, jnp.int32)
+                start = jnp.full((1,), n_cached, jnp.int32)
+                bt_row = self._block_tables_for([req.rid])
+                pb = {"tokens": jnp.asarray(padded)[None]}
+                lg, self.pools, h1 = self._prefill_suffix(
+                    self.params, pb, self.pools, bt_row, start, lens)
+                self.pm.commit_prefix(req.rid, full)
+                self._prefix_tokens_hit += n_cached
+                self._prefix_tokens_total += P
+                req.n_cached_tokens = n_cached
+                self._record_key(("prefill", self.backend, Sb),
+                                 self._prefill_suffix, self.params, pb,
+                                 self.pools, bt_row, start, lens)
+            else:
                 # pad the prompt up to its capture bucket; the per-row
                 # ``lengths`` makes the padding exactly invisible
                 Sb = self.prefill_ladder.fit(P) if self.prefill_ladder \
@@ -384,14 +522,14 @@ class ContinuousBatcher:
                     # gate admission on pages for the prefill + first decode
                     if not self.pm.can_allocate(P + 1):
                         break
-                    self.queue.popleft()
+                    self.queues[tenant].popleft()
                     self.pm.allocate(req.rid, P)
                     bt_row = self._block_tables_for([req.rid])
                     lg, self.pools, h1 = self._prefill(
                         self.params, {"tokens": jnp.asarray(padded)[None]},
                         self.pools, bt_row, lens)
                 else:
-                    self.queue.popleft()
+                    self.queues[tenant].popleft()
                     if self._rich_prefill:
                         lg, caches1, h1 = self._prefill(
                             self.params,
@@ -415,26 +553,36 @@ class ContinuousBatcher:
                                      lens)
                 else:
                     self._record_key(pk, self._prefill, self.params, pb)
-                self.key, k = jax.random.split(self.key)
-                tok, _ = sample_token(k, lg, temperature=self.temperature,
-                                      top_k=self.top_k)
-                self.active[s] = req
-                self.pos[s] = P
-                self.last_tok[s] = int(tok[0])
-                req.out_tokens.append(int(tok[0]))
-                if self.spec_decode:
-                    self.h_last = self.h_last.at[s].set(h1[0])
-                if self.telemetry is not None:
-                    reg = self.telemetry.registry
-                    reg.counter("serving_admissions_total",
-                                "admissions incl. preemption re-admits").inc()
-                    # latency only for first admission: a re-admit's wait is
-                    # a preemption artifact, not queueing delay
-                    if req.n_preempted == 0:
-                        reg.histogram(
-                            "serving_admission_latency_s",
-                            "submit -> first admission wall time").observe(
-                            time.perf_counter() - req.t_submit)
+            # charge the tenant's virtual time for the service footprint
+            # it just claimed (prompt + remaining generation budget)
+            cost = P + req.max_new_tokens - len(req.out_tokens)
+            self._vtime[tenant] = self._vtime.get(tenant, 0.0) \
+                + cost / max(self.tenant_weights.get(tenant, 1.0), 1e-9)
+            self.key, k = jax.random.split(self.key)
+            tok, _ = sample_token(k, lg, temperature=self.temperature,
+                                  top_k=self.top_k)
+            self.active[s] = req
+            self.pos[s] = P
+            self.last_tok[s] = int(tok[0])
+            req.out_tokens.append(int(tok[0]))
+            if self.spec_decode:
+                self.h_last = self.h_last.at[s].set(h1[0])
+            if self.telemetry is not None:
+                reg = self.telemetry.registry
+                reg.counter("serving_admissions_total",
+                            "admissions incl. preemption re-admits").inc()
+                if n_cached:
+                    reg.counter(
+                        "paged_prefix_hit_tokens_total",
+                        "prompt tokens served from the prefix cache").inc(
+                        n_cached)
+                # latency only for first admission: a re-admit's wait is
+                # a preemption artifact, not queueing delay
+                if req.n_preempted == 0:
+                    reg.histogram(
+                        "serving_admission_latency_s",
+                        "submit -> first admission wall time").observe(
+                        time.perf_counter() - req.t_submit)
 
     def _retire(self):
         done = []
@@ -604,7 +752,7 @@ class ContinuousBatcher:
         dur_us = tr.now_us() - t0_us
         cc = self.compile_cache
         args = {"tokens": n_tokens, "retired": n_done,
-                "queued": len(self.queue),
+                "queued": self.n_queued,
                 "active": sum(r is not None for r in self.active),
                 "recompiles": cc.recompiles,
                 "kv_reserved_bytes": self.kv_reserved_bytes()}
@@ -638,6 +786,24 @@ class ContinuousBatcher:
             cow.inc(st.n_cow_copies - cow.value())
             forks = reg.counter("paged_forks_total", "sequence forks")
             forks.inc(st.n_forks - forks.value())
+            if self.prefix_cache:
+                reg.gauge("paged_prefix_cached_pages",
+                          "zero-ref pages parked in the prefix LRU").set(
+                    self.pm.num_cached_pages)
+                reg.gauge("paged_prefix_cached_bytes",
+                          "KV bytes held by parked prefix pages").set(
+                    self.pm.cached_bytes())
+                reg.gauge("serving_prefix_hit_rate",
+                          "cumulative prompt tokens served from cache").set(
+                    self.prefix_hit_rate())
+                hits = reg.counter("paged_prefix_hits_total",
+                                   "pages reused via prefix match")
+                hits.inc(st.n_prefix_hits - hits.value())
+                ev = reg.counter("paged_prefix_evictions_total",
+                                 "parked pages evicted under pool pressure")
+                ev.inc(st.n_prefix_evictions - ev.value())
+                args.update(prefix_cached_pages=self.pm.num_cached_pages,
+                            prefix_hit_rate=round(self.prefix_hit_rate(), 4))
             tr.sample("pages", {"in_use": st.pages_in_use,
                                 "free": self.pm.num_pages - st.pages_in_use},
                       ts_us=t0_us + dur_us)
@@ -665,7 +831,7 @@ class ContinuousBatcher:
             from repro.rlhf.trainer import live_device_bytes
             live = live_device_bytes()
             self.flight.note("serve_step", step=self.steps,
-                             live_bytes=live, queued=len(self.queue),
+                             live_bytes=live, queued=self.n_queued,
                              kv_reserved_bytes=self.kv_reserved_bytes())
             at = self.attributor
             self.flight.check(
@@ -712,11 +878,32 @@ class ContinuousBatcher:
         finished = []
         for _ in range(max_steps):
             finished.extend(self.step())
-            if not self.queue and all(r is None for r in self.active):
+            if not self.n_queued and all(r is None for r in self.active):
                 break
         return finished
 
+    # -- weight updates ------------------------------------------------------
+    def update_params(self, params, *,
+                      weight_version: Optional[int] = None) -> None:
+        """Swap serving weights (an RLHF iteration just updated the
+        policy). With the prefix cache on this *must* be the entry point:
+        the pool's weight version is bumped and every cached prefix is
+        invalidated, so KV produced under old weights is never matched
+        again. In-flight sequences are unaffected — callers swap weights
+        between rollouts, when nothing is active."""
+        self.params = params
+        if self.backend == "paged" and self.prefix_cache:
+            self.pm.set_weight_version(
+                self.pm.weight_version + 1 if weight_version is None
+                else weight_version)
+
     # -- introspection -------------------------------------------------------
+    def prefix_hit_rate(self) -> float:
+        """Cumulative fraction of admitted prompt tokens served from the
+        prefix cache (0.0 before any admission)."""
+        if not self._prefix_tokens_total:
+            return 0.0
+        return self._prefix_tokens_hit / self._prefix_tokens_total
     def kv_reserved_bytes(self) -> int:
         """Bytes of KV/state the backend currently reserves. Dense reserves
         the whole [B, capacity] cache up front (measured from the actual

@@ -1,0 +1,438 @@
+"""Cross-request prefix caching: page-index semantics (park / revive /
+evict / invalidate), warm-suffix-prefill bit-identity against cold
+prefill, greedy serving identity with the cache on vs off (base and hydra
+merged weights), and multi-tenant fairness under adversarial arrivals."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.paged import PageManager, PagePoolExhausted
+from repro.serving import ContinuousBatcher
+
+
+def _tiny_cfg():
+    return dataclasses.replace(
+        get_config("llama3_2_3b").smoke(), num_layers=2, d_model=128,
+        d_ff=256, vocab_size=64, num_heads=4, num_kv_heads=2, head_dim=32)
+
+
+# ---------------------------------------------------------------------------
+# PageManager prefix-index semantics
+# ---------------------------------------------------------------------------
+def test_commit_and_match_prefix():
+    pm = PageManager(8, 4)
+    toks = np.arange(12)
+    pm.allocate(0, 12)
+    assert pm.commit_prefix(0, toks) == 3        # 3 full pages indexed
+    # a longer prompt sharing the prefix matches all three committed pages
+    probe = np.concatenate([toks, [7, 7]])
+    pages, n = pm.match_prefix(probe)
+    assert n == 12 and pages == pm.block_table(0)
+    # the same 12-token prompt only matches up to the hashable cap (the
+    # final prompt token is always recomputed — its logits seed decoding)
+    assert pm.hashable_prefix_tokens(12) == 8
+    _, n = pm.match_prefix(toks)
+    assert n == 8
+    # a diverging prompt matches nothing past the divergence point
+    _, n = pm.match_prefix(np.concatenate([toks[:4], [9] * 8]))
+    assert n == 4
+    pm.check_invariants()
+
+
+def test_allocate_prefix_shares_pages_and_counts_hits():
+    pm = PageManager(8, 4)
+    toks = np.arange(12)
+    pm.allocate(0, 12)
+    pm.commit_prefix(0, toks)
+    probe = np.concatenate([toks, [7, 7]]).astype(np.int64)
+    bt, n_cached = pm.allocate_prefix(1, probe)
+    assert n_cached == 12
+    assert bt[:3] == pm.block_table(0)           # shared, not re-allocated
+    assert all(pm._refcount[p] == 2 for p in bt[:3])
+    assert pm.stats.n_prefix_hits == 3 and pm.stats.n_prefix_queries == 1
+    pm.check_invariants()
+
+
+def test_freed_indexed_pages_park_and_revive_without_refill():
+    pm = PageManager(8, 4)
+    toks = np.arange(8)
+    pm.allocate(0, 8)
+    pm.commit_prefix(0, toks)
+    frees_before = pm.stats.n_page_free
+    pm.free_seq(0)
+    # indexed pages park in the LRU: still resident, free event deferred
+    assert pm.num_cached_pages == 2
+    assert pm.stats.pages_in_use == 2
+    assert pm.stats.n_page_free == frees_before
+    # a matching request revives them — refcount bump, no fresh allocation
+    allocs_before = pm.stats.n_page_alloc
+    probe = np.concatenate([toks, [3]])
+    _, n_cached = pm.allocate_prefix(1, probe)
+    assert n_cached == 8 and pm.num_cached_pages == 0
+    assert pm.stats.n_page_alloc == allocs_before + 1   # just the tail page
+    pm.check_invariants()
+
+
+def test_eviction_reclaims_only_zero_ref_parked_pages():
+    pm = PageManager(4, 4)
+    pm.allocate(0, 8)
+    pm.commit_prefix(0, np.arange(8))
+    pm.free_seq(0)                               # 2 parked, 2 free
+    live_bt = pm.allocate(1, 8)                  # claims the 2 free pages
+    assert pm.num_cached_pages == 2 and pm.num_free_pages == 0
+    # pool pressure: fresh allocation evicts the parked pages, never the
+    # live sequence's
+    pm.allocate(2, 8)
+    assert pm.stats.n_prefix_evictions == 2
+    assert pm.block_table(1) == live_bt
+    assert all(pm._refcount[p] == 1 for p in live_bt)
+    # everything is referenced now — exhaustion, not eviction
+    with pytest.raises(PagePoolExhausted):
+        pm.allocate(3, 4)
+    assert pm.stats.n_prefix_evictions == 2
+    pm.check_invariants()
+
+
+def test_weight_version_bump_invalidates_cached_prefixes():
+    pm = PageManager(8, 4)
+    toks = np.arange(8)
+    pm.allocate(0, 8)
+    pm.commit_prefix(0, toks)
+    pm.free_seq(0)
+    assert pm.num_cached_pages == 2
+    pm.set_weight_version(1)
+    # parked pages are truly freed, the index is empty
+    assert pm.num_cached_pages == 0 and pm.num_free_pages == 8
+    assert pm.match_prefix(np.concatenate([toks, [3]]))[1] == 0
+    assert pm.stats.n_prefix_invalidations == 1
+    pm.set_weight_version(1)                     # same version: no-op
+    assert pm.stats.n_prefix_invalidations == 1
+    # a live sequence survives invalidation with its pages intact
+    bt = pm.allocate(1, 8)
+    pm.commit_prefix(1, toks)
+    pm.set_weight_version(2)
+    assert pm.block_table(1) == bt
+    assert pm.match_prefix(np.concatenate([toks, [3]]))[1] == 0
+    pm.check_invariants()
+
+
+def test_sole_owner_mutation_deindexes_page():
+    pm = PageManager(8, 4)
+    toks = np.arange(12)
+    pm.allocate(0, 12)
+    pm.commit_prefix(0, toks)
+    probe = np.concatenate([toks, [9]])
+    assert pm.match_prefix(probe)[1] == 12
+    # truncate into the last indexed page, then append: the digest no
+    # longer describes the content, so the page must leave the index
+    pm.truncate(0, 9)
+    pm.append_token(0)
+    assert pm.match_prefix(probe)[1] == 8
+    pm.check_invariants()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 6), st.integers(0, 19)),
+                min_size=1, max_size=80))
+def test_prefix_cache_invariants_random_traffic(ops):
+    """Refcounts never underflow and pages are conserved under random
+    interleavings of prefix-allocate/commit, fork, append (CoW), truncate,
+    free and whole-index invalidation. ``check_invariants`` asserts the
+    full zero-ref <=> free-or-parked bijection after every op."""
+    pm = PageManager(24, 4)
+    base = np.arange(12)                  # shared 3-page prefix pool-wide
+    next_id = 0
+    live = {}                             # seq_id -> logical length
+
+    def prompt(v):
+        return np.concatenate([base, np.full(v % 3 + 1, 20 + v % 5)])
+
+    for op, arg in ops:
+        ids = sorted(live)
+        try:
+            if op == 0 or not ids:                        # prefix allocate
+                toks = prompt(arg)
+                pm.allocate_prefix(next_id, toks)
+                pm.commit_prefix(next_id, toks)
+                live[next_id] = len(toks)
+                next_id += 1
+            elif op == 1:                                 # fork
+                pm.fork(ids[arg % len(ids)], next_id)
+                live[next_id] = live[ids[arg % len(ids)]]
+                next_id += 1
+            elif op == 2:                                 # append (CoW)
+                sid = ids[arg % len(ids)]
+                pm.append_token(sid)
+                live[sid] += 1
+            elif op == 3:                                 # truncate
+                sid = ids[arg % len(ids)]
+                new_len = arg % (live[sid] + 1)
+                pm.truncate(sid, new_len)
+                live[sid] = new_len
+            elif op == 4:                                 # free
+                sid = ids[arg % len(ids)]
+                pm.free_seq(sid)
+                del live[sid]
+            elif op == 5:                                 # invalidate all
+                pm.invalidate_prefix_cache()
+            else:                                         # re-commit
+                sid = ids[arg % len(ids)]
+                pm.commit_prefix(sid, prompt(arg))
+        except PagePoolExhausted:
+            pass
+        pm.check_invariants()
+    for sid in list(live):
+        pm.free_seq(sid)
+    pm.invalidate_prefix_cache()
+    pm.check_invariants()
+    assert pm.num_free_pages == 24                # nothing leaked
+
+
+# ---------------------------------------------------------------------------
+# Warm suffix prefill == cold prefill, bitwise
+# ---------------------------------------------------------------------------
+def test_warm_suffix_prefill_bit_identical_to_cold():
+    """A hash-hit prompt prefills only its suffix against the cached
+    prefix pages. At equal bucket widths the result must be
+    *bit-identical* to the cold computation — prefix KV revived from the
+    cache (shared pages, arbitrary physical ids) is indistinguishable
+    from prefix KV privately written a moment earlier — and numerically
+    equal to the one-shot dense-compute ``paged_prefill`` path (different
+    reduction shapes => ULP tolerance, not bitwise)."""
+    cfg = _tiny_cfg()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dtype = jax.tree.leaves(params)[0].dtype
+    ps = 8
+    toks_a = (np.arange(16) * 3) % cfg.vocab_size
+    toks_b = np.concatenate([toks_a, [5, 9, 2, 7, 1, 4]])     # 22 tokens
+
+    def suffix_prefill(pm, pools, seq_id, start):
+        suffix = np.zeros(8, np.int32)            # bucket of 8, both legs
+        suffix[:len(toks_b) - start] = toks_b[start:]
+        bt = jnp.asarray(pm.block_table_array([seq_id], 4))
+        return model.paged_prefill_suffix(
+            params, {"tokens": jnp.asarray(suffix)[None]}, pools, bt,
+            jnp.asarray([start], jnp.int32),
+            jnp.asarray([len(toks_b)], jnp.int32))
+
+    # cold: private pages, prefix written by a width-16 prefill, then the
+    # 6-token tail through the suffix kernel
+    pm = PageManager(16, ps)
+    pools = model.init_paged_pools(16, ps, dtype)
+    pm.allocate(0, len(toks_b))
+    bt = jnp.asarray(pm.block_table_array([0], 4))
+    _, pools = model.paged_prefill(
+        params, {"tokens": jnp.asarray(toks_a, jnp.int32)[None]}, pools,
+        bt, jnp.asarray([16], jnp.int32))
+    logits_cold, _ = suffix_prefill(pm, pools, 0, 16)
+
+    # warm: prefill A (same width-16 call), commit, then B revives A's
+    # cached 16-token prefix and prefills only its tail
+    pm = PageManager(16, ps)
+    pools = model.init_paged_pools(16, ps, dtype)
+    pm.allocate(0, len(toks_a))
+    bt_a = jnp.asarray(pm.block_table_array([0], 4))
+    _, pools = model.paged_prefill(
+        params, {"tokens": jnp.asarray(toks_a, jnp.int32)[None]}, pools,
+        bt_a, jnp.asarray([len(toks_a)], jnp.int32))
+    pm.commit_prefix(0, toks_a)
+    pm.free_seq(0)                                # park -> revive on match
+    _, n_cached = pm.allocate_prefix(1, toks_b)
+    assert n_cached == 16
+    logits_warm, _ = suffix_prefill(pm, pools, 1, 16)
+    assert np.array_equal(np.asarray(logits_warm), np.asarray(logits_cold))
+
+    # and the one-shot dense-compute prefill path agrees numerically
+    pm2 = PageManager(16, ps)
+    pools2 = model.init_paged_pools(16, ps, dtype)
+    pm2.allocate(0, len(toks_b))
+    bt2 = jnp.asarray(pm2.block_table_array([0], 4))
+    logits_dense, _ = model.paged_prefill(
+        params, {"tokens": jnp.asarray(toks_b, jnp.int32)[None]}, pools2,
+        bt2, jnp.asarray([len(toks_b)], jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits_warm),
+                               np.asarray(logits_dense), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Serving identity: cache on == cache off == dense, greedily, bitwise
+# ---------------------------------------------------------------------------
+def _greedy_serve(model, cfg, params, prompts, *, backend, prefix_cache,
+                  num_pages=None):
+    cb = ContinuousBatcher(model, cfg, params, slots=2, capacity=48,
+                           temperature=0.0, seed=3, cache_backend=backend,
+                           page_size=8, num_pages=num_pages,
+                           prefix_cache=prefix_cache)
+    reqs = [cb.submit(p, 12) for p in prompts]
+    cb.run_until_drained()
+    cb.pm.check_invariants() if backend == "paged" else None
+    return [r.out_tokens for r in reqs], cb
+
+
+def test_batcher_prefix_cache_greedy_identity():
+    cfg = _tiny_cfg()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    base = np.arange(16) % cfg.vocab_size
+    prompts = [np.concatenate([base, [i, i + 1, i + 2]]) for i in range(4)]
+    dense, _ = _greedy_serve(model, cfg, params, prompts,
+                             backend="dense", prefix_cache=False)
+    off, _ = _greedy_serve(model, cfg, params, prompts,
+                           backend="paged", prefix_cache=False)
+    on, cb = _greedy_serve(model, cfg, params, prompts,
+                           backend="paged", prefix_cache=True)
+    assert dense == off == on
+    assert cb.prefix_hit_rate() > 0.4            # prefix actually reused
+    assert cb.pm.stats.n_prefix_hits > 0
+
+
+def test_batcher_prefix_cache_greedy_identity_hydra_merged():
+    """The cache must be transparent under hydra *merged* weights too —
+    the serving path RLHF actually uses (merge adapter, serve, unmerge)."""
+    cfg = _tiny_cfg()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ad = model.init_adapter(jax.random.PRNGKey(1), params, 4)
+    leaves, treedef = jax.tree.flatten(ad)
+    ks = jax.random.split(jax.random.PRNGKey(2), len(leaves))
+    ad = jax.tree.unflatten(treedef, [
+        0.05 * jax.random.normal(k, l.shape, l.dtype)
+        for k, l in zip(ks, leaves)])
+    merged = model.merge_adapter(params, ad)
+    base = (np.arange(16) * 5) % cfg.vocab_size
+    prompts = [np.concatenate([base, [i, i + 3]]) for i in range(3)]
+    off, _ = _greedy_serve(model, cfg, merged, prompts,
+                           backend="paged", prefix_cache=False)
+    on, cb = _greedy_serve(model, cfg, merged, prompts,
+                           backend="paged", prefix_cache=True)
+    assert off == on
+    assert cb.prefix_hit_rate() > 0.3
+
+
+def test_batcher_prefix_cache_reduces_peak_pages():
+    cfg = _tiny_cfg()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    base = np.arange(24) % cfg.vocab_size        # 3 shared full pages
+    prompts = [np.concatenate([base, [i]]) for i in range(6)]
+    _, cb_off = _greedy_serve(model, cfg, params, prompts,
+                              backend="paged", prefix_cache=False,
+                              num_pages=32)
+    _, cb_on = _greedy_serve(model, cfg, params, prompts,
+                             backend="paged", prefix_cache=True,
+                             num_pages=32)
+    assert cb_on.pm.stats.peak_pages_in_use \
+        < cb_off.pm.stats.peak_pages_in_use
+
+
+def test_update_params_invalidates_prefix_cache():
+    cfg = _tiny_cfg()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cb = ContinuousBatcher(model, cfg, params, slots=2, capacity=48,
+                           temperature=0.0, seed=0, cache_backend="paged",
+                           page_size=8, prefix_cache=True)
+    prompt = np.arange(17) % cfg.vocab_size
+    cb.submit(prompt, 8)
+    cb.run_until_drained()
+    assert cb.pm.match_prefix(np.concatenate([prompt, [1]]))[1] > 0
+    # an RLHF weight update must flush every cached prefix: the old KV
+    # was produced under the old policy
+    cb.update_params(params, weight_version=1)
+    assert cb.pm.match_prefix(np.concatenate([prompt, [1]]))[1] == 0
+    assert cb.pm.stats.n_prefix_invalidations == 1
+    # and serving continues correctly after the flush
+    r = cb.submit(prompt, 8)
+    cb.run_until_drained()
+    assert len(r.out_tokens) == 8
+    cb.pm.check_invariants()
+
+
+def test_grpo_group_fork_matches_repeat_with_fewer_pages():
+    """Rollout(group_size=G) prefills each unique prompt once and forks G
+    children sharing its pages CoW. The sampled stream (tokens AND logp,
+    at temperature > 0) must be bit-identical to pre-repeating the
+    prompts through the unshared path, with a strictly lower page peak."""
+    from repro.rlhf import Rollout
+    cfg = _tiny_cfg()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jnp.asarray(
+        np.stack([np.arange(8), np.arange(8) + 3]) % cfg.vocab_size)
+    key = jax.random.PRNGKey(5)
+    ro = Rollout(model, cfg, capacity=20, temperature=0.8, top_k=20,
+                 backend="paged", page_size=4)
+    fork = ro.generate(params, {"tokens": prompts}, 12, key, group_size=3)
+    pm_fork = ro.page_manager
+    rep = ro.generate(params, {"tokens": jnp.repeat(prompts, 3, axis=0)},
+                      12, key)
+    pm_rep = ro.page_manager
+    assert np.array_equal(np.asarray(fork.tokens), np.asarray(rep.tokens))
+    assert np.array_equal(np.asarray(fork.logp), np.asarray(rep.logp))
+    assert pm_fork.stats.n_forks == 4              # (G-1) * B
+    assert pm_fork.stats.peak_pages_in_use < pm_rep.stats.peak_pages_in_use
+    pm_fork.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant fairness
+# ---------------------------------------------------------------------------
+def test_tenant_fairness_bounds_starvation():
+    """Adversarial arrivals: one tenant floods the queue before a light
+    tenant's requests trickle in. Weighted round-robin with aging must
+    admit the light tenant long before the flood drains — under global
+    FIFO (rid order) it would wait behind every flooded request."""
+    cfg = _tiny_cfg()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cb = ContinuousBatcher(model, cfg, params, slots=1, capacity=32,
+                           temperature=0.0, seed=0, cache_backend="paged",
+                           page_size=8, num_pages=8,
+                           tenant_weights={"heavy": 1.0, "light": 1.0})
+    heavy = [cb.submit(np.arange(8) + (i % 4), 8, tenant="heavy")
+             for i in range(10)]
+    light = [cb.submit(np.arange(8) * 2 % cfg.vocab_size, 8,
+                       tenant="light") for _ in range(2)]
+    admit_step = {}
+    while cb.n_queued or any(r is not None for r in cb.active):
+        cb.step()
+        for r in heavy + light:
+            if r.out_tokens and r.rid not in admit_step:
+                admit_step[r.rid] = cb.steps
+    assert all(len(r.out_tokens) == 8 for r in heavy + light)
+    last_heavy = max(admit_step[r.rid] for r in heavy)
+    # equal weights => interleaved admission: both light requests beat the
+    # flood's tail by a wide margin instead of queueing behind all of it
+    assert all(admit_step[r.rid] < last_heavy - 8 for r in light)
+
+
+def test_tenant_weights_shape_admission_order():
+    """4:1 weights => the favored tenant's backlog is admitted ~4x as
+    often; its mean admission step must come strictly earlier."""
+    cfg = _tiny_cfg()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cb = ContinuousBatcher(model, cfg, params, slots=1, capacity=32,
+                           temperature=0.0, seed=0, cache_backend="paged",
+                           page_size=8, num_pages=8,
+                           tenant_weights={"gold": 4.0, "bronze": 1.0})
+    gold = [cb.submit(np.arange(8) + i % 3, 6, tenant="gold")
+            for i in range(6)]
+    bronze = [cb.submit(np.arange(8) + i % 3, 6, tenant="bronze")
+              for i in range(6)]
+    admit_step = {}
+    while cb.n_queued or any(r is not None for r in cb.active):
+        cb.step()
+        for r in gold + bronze:
+            if r.out_tokens and r.rid not in admit_step:
+                admit_step[r.rid] = cb.steps
+    mean = lambda rs: sum(admit_step[r.rid] for r in rs) / len(rs)  # noqa
+    assert mean(gold) < mean(bronze)
+    assert all(len(r.out_tokens) == 6 for r in gold + bronze)  # no loss
