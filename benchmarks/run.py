@@ -12,6 +12,7 @@ CSV rows (and the detailed tables beneath).
   obs        — runtime telemetry: phase spans, sim-vs-measured, overhead,
                per-owner HBM attribution + flight-recorder dump (PR 8)
   zero       — mesh-sharded ZeRO RLHF smoke on 8 forced host devices
+  tp         — TP x ZeRO composition smoke: dp x tp allclose + byte cuts
   kernels    — wall-time microbenches of the XLA flash twin vs dense sdpa
   roofline   — summary of roofline_baseline.json if present
 
@@ -1102,6 +1103,51 @@ def bench_zero():
          f"gather_transient_cut_pct={metrics['gather_transient_cut_pct']}")
 
 
+def bench_tp():
+    """Beyond-paper: tensor parallelism as a runtime axis composed with
+    ZeRO, validated on 8 forced host devices (subprocess — the flag must
+    be set before jax initializes). Asserts 2-step PPO loss ALLCLOSE
+    (reduction-order drift only — TP splits contractions, so the pure-DP
+    bit-identity bar does not apply; DESIGN.md §9) between ndp=1,ntp=1 and
+    ndp=2,ntp=2 on BOTH engines, dense+paged rollout identity from the
+    TP-sharded state (paged KV pool kv-head-sharded), the pure-TP
+    per-device param+opt cut (>=40% at ntp=2, ZeRO off), and that the
+    simulator's traced dp x tp curve brackets the measured one. See
+    benchmarks/tp_smoke.py."""
+    import subprocess
+    t0 = time.time()
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(root, "src"),
+               JAX_PLATFORMS="cpu",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    r = subprocess.run([sys.executable, "-m", "benchmarks.tp_smoke"],
+                       env=env, cwd=root, capture_output=True, text=True,
+                       timeout=3000)
+    print("\n== TP x ZeRO sharded RLHF smoke (8 forced host devices) ==")
+    out = r.stdout or ""
+    print("\n".join(l for l in out.splitlines()
+                    if not l.startswith("TP_METRICS")))
+    assert r.returncode == 0, f"tp_smoke failed:\n{out}\n{r.stderr[-3000:]}"
+    metrics = json.loads(
+        [l for l in out.splitlines()
+         if l.startswith("TP_METRICS ")][-1][len("TP_METRICS "):])
+    assert metrics["separate_tp_allclose"] and metrics["hydra_tp_allclose"]
+    assert metrics["separate_rollout_identical"]
+    assert metrics["hydra_rollout_identical"]
+    assert metrics["sim_bracket_ok"]
+    assert metrics["separate_tp_cut_pct"] >= 40.0
+    _gate("separate_tp_cut_pct", metrics["separate_tp_cut_pct"], "higher")
+    _gate("separate_tp_zero3_cut_pct",
+          metrics["separate_tp_zero3_cut_pct"], "higher")
+    _gate("hydra_tp_zero3_cut_pct",
+          metrics["hydra_tp_zero3_cut_pct"], "higher")
+    _csv("tp", (time.time() - t0) * 1e6,
+         f"separate_tp_cut_pct={metrics['separate_tp_cut_pct']};"
+         f"separate_tp_zero3_cut_pct={metrics['separate_tp_zero3_cut_pct']};"
+         f"hydra_tp_zero3_cut_pct={metrics['hydra_tp_zero3_cut_pct']}")
+
+
 def bench_zero_tpu():
     """Beyond-paper: the R2 strategy comparison on the real TPU mesh
     (subprocess — needs 512 forced host devices before jax init)."""
@@ -1169,6 +1215,7 @@ BENCHES = {
     "offload": bench_offload,
     "obs": bench_obs,
     "zero": bench_zero,
+    "tp": bench_tp,
     "kernels": bench_kernels,
     "grpo": bench_grpo,
     "zero_tpu": bench_zero_tpu,

@@ -52,6 +52,11 @@ def main():
     ap.add_argument("--zero-stage", type=int, default=3,
                     choices=(0, 1, 2, 3),
                     help="ZeRO stage for --ndp > 1 (DESIGN.md §2)")
+    ap.add_argument("--ntp", type=int, default=1,
+                    help="tensor-parallel degree: Megatron column/row "
+                         "sharding over a (data=ndp, model=ntp) mesh, "
+                         "composed with the ZeRO stage (DESIGN.md §9); "
+                         "needs ndp*ntp local devices")
     ap.add_argument("--lr", type=float, default=0.0,
                     help="0 = engine default (adapters train at ~10x the "
                          "full-finetune rate: LoRA's B=0 init scales the "
@@ -107,13 +112,17 @@ def main():
                     offload=args.offload, spec_decode=args.spec_decode,
                     spec_k=args.spec_k, capture_buckets=buckets)
     shard = None
-    if args.ndp > 1:
-        from repro.sharding import ShardedContext
-        assert len(jax.devices()) >= args.ndp, \
-            f"--ndp {args.ndp} needs that many local devices; run under " \
-            f"XLA_FLAGS=--xla_force_host_platform_device_count={args.ndp}"
-        shard = ShardedContext.create(args.ndp, zero_stage=args.zero_stage)
-        print(f"mesh-sharded: ndp={args.ndp} zero_stage={args.zero_stage}")
+    if args.ndp > 1 or args.ntp > 1:
+        from repro.sharding import ShardedContext, validate_tp
+        validate_tp(cfg, args.ntp)   # eager: clear error, not an XLA shape one
+        need = args.ndp * args.ntp
+        assert len(jax.devices()) >= need, \
+            f"--ndp {args.ndp} --ntp {args.ntp} needs {need} local devices; " \
+            f"run under XLA_FLAGS=--xla_force_host_platform_device_count={need}"
+        shard = ShardedContext.create(args.ndp, zero_stage=args.zero_stage,
+                                      model=args.ntp)
+        print(f"mesh-sharded: ndp={args.ndp} ntp={args.ntp} "
+              f"zero_stage={args.zero_stage}")
     trainer = RLHFTrainer(cfg, cfg, rl, jax.random.PRNGKey(0),
                           reward_fn=make_target_token_reward(7), shard=shard,
                           telemetry=telemetry)

@@ -86,6 +86,7 @@ class RunResult:
     peak_host_bytes: int = 0       # peak parked on host (offload)
     swapped_bytes: int = 0         # cumulative host<->device swap traffic
     ndp: int = 1                   # DP/ZeRO domain size the run modelled
+    ntp: int = 1                   # TP domain size the run modelled
 
     def row(self) -> dict:
         GB = 1 << 30
@@ -110,7 +111,8 @@ def _should_empty(policy: str, phase_kind: str) -> bool:
 
 def run_iteration(plans, persistent: PersistentBuffers,
                   strategy: MemoryStrategy, policy: str = "none", *,
-                  ndp: int = 4, trainable_fraction: float = 1.0,
+                  ndp: int = 4, ntp: int = 1,
+                  trainable_fraction: float = 1.0,
                   capacity: int = 24 << 30,
                   timeline: bool = False,
                   offload: Optional[str] = None) -> RunResult:
@@ -118,7 +120,14 @@ def run_iteration(plans, persistent: PersistentBuffers,
     iteration (varying generation lengths) — or a single phase list.
     ``capacity`` models the device HBM (24 GB RTX-3090 for Table 1,
     80 GB A100 for Table 2). ``offload`` (default: ``strategy.offload``)
-    selects the runtime-offload level; see the module docstring."""
+    selects the runtime-offload level; see the module docstring.
+
+    ``ntp`` records the TP domain of the run being modelled. The per-tag
+    *fractions* of a TP run come in through ``strategy.traced`` (built on
+    the dp x tp mesh by ``strategies.traced_strategy`` when
+    ``strategy.ntp > 1``); the closed-form fallback stays the paper's
+    pure-DP model, so passing ``ntp`` without a traced strategy only
+    labels the result."""
     if plans and isinstance(plans[0], Phase):
         plans = [plans]
     offload = offload if offload is not None else \
@@ -263,4 +272,4 @@ def run_iteration(plans, persistent: PersistentBuffers,
         time_s=time_s, phase_records=records,
         timeline=alloc.timeline if timeline else [],
         offload=offload, peak_host_bytes=peak_host,
-        swapped_bytes=swapped_total, ndp=ndp)
+        swapped_bytes=swapped_total, ndp=ndp, ntp=ntp)

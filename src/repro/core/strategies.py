@@ -107,6 +107,12 @@ class MemoryStrategy:
     # traced "layer_slice" entry; the closed-form fallback stays at the
     # per-layer schedule.
     gather_mode: str = "layer"
+    # TP degree of the runtime being modelled (rules.ShardingStrategy.ntp).
+    # Only the traced entries realize it — the closed-form fallback stays
+    # the paper's pure-DP 1/ndp model — so set it through
+    # :func:`traced_strategy`, which rebuilds the spec trees on a
+    # (data=ndp, model=ntp) SpecMesh.
+    ntp: int = 1
     # traced per-device byte fractions from the *real* sharded spec trees
     # (built by :func:`traced_strategy` / :func:`traced_zero_scales`):
     # entries keyed "state:tag" (exact, per persistent group) with "tag"
@@ -212,6 +218,7 @@ def traced_zero_scales(actor_cfg, critic_cfg=None, *, ndp: int,
                        zero_stage: int, engine: str = "separate",
                        lora_rank: int = 128,
                        gather_mode: str = "layer",
+                       ntp: int = 1,
                        ) -> Tuple[Tuple[str, float], ...]:
     """Per-device byte fractions of every persistent RLHF state group,
     traced from the REAL sharded spec trees (``jax.eval_shape`` of the
@@ -222,9 +229,20 @@ def traced_zero_scales(actor_cfg, critic_cfg=None, *, ndp: int,
     ``core.phases.build_rlhf_phases`` (so the simulator charges e.g. the
     hydra value heads at full size — they cannot shard — while the trunk
     shards to 1/ndp), plus byte-weighted ``"param"/"opt"/"grad"``
-    aggregates as fallback for trace-level events. ``merged_rollout`` is
-    pinned at 1.0: merged generation runs from a *gathered* compute copy
-    by the runtime contract (DESIGN.md §3).
+    aggregates as fallback for trace-level events. ``merged_rollout``
+    carries the *compute-layout* fraction of the adapted subtree: merged
+    generation runs from a DP-gathered copy by the runtime contract
+    (DESIGN.md §3), but a gather only ever moves the DP dimension — TP
+    entries survive it (DESIGN.md §9) — so the fraction is 1.0 at
+    ``ntp=1`` and ~``1/ntp`` under tensor parallelism.
+
+    ``ntp`` adds the tensor-parallel axis: the spec trees are rebuilt on
+    a ``(data=ndp, model=ntp)`` mesh with the Megatron column/row rules
+    of ``rules.param_pspecs``, so every fraction (params, optimizer,
+    grads, the merged copy) reflects the composed ``dp x tp`` layout
+    rather than an analytic ``1/(ndp*ntp)`` guess — value heads, biases
+    and non-divisible dims stay replicated exactly as the runtime keeps
+    them.
 
     ``gather_mode`` sets the ZeRO-3 transient term: each traced
     ``layer_slice`` event (one sliced layer period of the scan) is
@@ -239,9 +257,14 @@ def traced_zero_scales(actor_cfg, critic_cfg=None, *, ndp: int,
                                       adapter_pspecs, param_pspecs,
                                       zero_opt_pspecs)
     assert engine in ("separate", "hydra"), engine
-    mesh = SpecMesh({"data": ndp})
-    strat = ShardingStrategy(zero_stage=zero_stage, tensor_parallel=False,
-                             expert_parallel=False)
+    assert ntp >= 1, ntp
+    # ntp=1 keeps the historical {"data"} mesh (and tensor_parallel off) so
+    # the pure-DP traced entries — and everything cached against them — are
+    # byte-for-byte what they were before the TP axis existed.
+    axes = {"data": ndp, "model": ntp} if ntp > 1 else {"data": ndp}
+    mesh = SpecMesh(axes)
+    strat = ShardingStrategy(zero_stage=zero_stage, tensor_parallel=ntp > 1,
+                             expert_parallel=False, ntp=ntp)
     key = jax.random.PRNGKey(0)
     actor = Model(actor_cfg)
     a_shapes = jax.eval_shape(actor.init, key)
@@ -264,11 +287,16 @@ def traced_zero_scales(actor_cfg, critic_cfg=None, *, ndp: int,
         ad_specs = adapter_pspecs(mesh, strat, a_ad)
         cad_specs = adapter_pspecs(mesh, strat, c_ad)
         from repro.models.lora import adapted_subtree
-        import numpy as np
+        from repro.sharding.context import _strip_dp
+        from jax.sharding import PartitionSpec as P
         merged = adapted_subtree(a_shapes, a_ad["lora"])
-        nb_merged = float(sum(
-            np.prod(l.shape) * jax.numpy.dtype(l.dtype).itemsize
-            for l in jax.tree.leaves(merged)))
+        # the merged rollout copy is DP-gathered but keeps its TP entries:
+        # charge it at the compute layout (strip-DP of the base specs over
+        # the adapted sites) — exactly (nb, nb) i.e. 1.0 when ntp == 1
+        merged_specs = jax.tree.map(
+            lambda s: _strip_dp(s, mesh),
+            adapted_subtree(a_specs, a_ad["lora"]),
+            is_leaf=lambda x: isinstance(x, P))
         groups = {
             "base_params": ("param", _tree_fraction(a_specs, a_shapes, mesh)),
             "actor_params": ("param", _tree_fraction(ad_specs, a_ad, mesh)),
@@ -276,9 +304,8 @@ def traced_zero_scales(actor_cfg, critic_cfg=None, *, ndp: int,
             "reward_params": ("param", _tree_fraction(cad_specs, c_ad, mesh)),
             "actor_opt": ("opt", opt_entry(ad_specs, a_ad, actor_cfg)),
             "critic_opt": ("opt", opt_entry(cad_specs, c_ad, actor_cfg)),
-            # merged generation runs from a gathered (replicated) copy:
-            # per-device == total, fraction pinned at 1.0
-            "merged_rollout": ("param", (nb_merged, nb_merged)),
+            "merged_rollout": ("param",
+                               _tree_fraction(merged_specs, merged, mesh)),
         }
         trainables = [("actor_params", ad_specs, a_ad, actor_cfg),
                       ("critic_params", cad_specs, c_ad, actor_cfg)]
@@ -307,12 +334,24 @@ def traced_zero_scales(actor_cfg, critic_cfg=None, *, ndp: int,
     for tag, (tot, dev) in agg.items():
         out.append((tag, dev / tot if tot else 1.0))
     # grads: ZeRO>=2 re-shards them onto the optimizer layout of the
-    # trainable trees; below that they stay replicated
+    # trainable trees; below that they stay at the compute layout — fully
+    # replicated in pure DP, TP-sharded (strip-DP of the param specs, i.e.
+    # dW inherits W's model entries through the backward pass) under TP
     if zero_stage >= 2:
         gt = gd = 0.0
         for _, pspecs, shapes, _cfg in trainables:
             o_specs = zero_opt_pspecs(pspecs, shapes, mesh, strat)
             t, d = _tree_fraction(o_specs, shapes, mesh)
+            gt, gd = gt + t, gd + d
+        out.append(("grad", gd / gt if gt else 1.0))
+    elif ntp > 1:
+        from jax.sharding import PartitionSpec as P
+        from repro.sharding.context import _strip_dp
+        gt = gd = 0.0
+        for _, pspecs, shapes, _cfg in trainables:
+            comp = jax.tree.map(lambda s: _strip_dp(s, mesh), pspecs,
+                                is_leaf=lambda x: isinstance(x, P))
+            t, d = _tree_fraction(comp, shapes, mesh)
             gt, gd = gt + t, gd + d
         out.append(("grad", gd / gt if gt else 1.0))
     else:
@@ -330,9 +369,10 @@ def traced_zero_scales(actor_cfg, critic_cfg=None, *, ndp: int,
 def traced_strategy(base: MemoryStrategy, actor_cfg, critic_cfg=None, *,
                     ndp: int, engine: str = "separate",
                     lora_rank: Optional[int] = None) -> MemoryStrategy:
-    """``base`` with its ndp axis traced from the real sharded trees."""
+    """``base`` with its ndp (and, via ``base.ntp``, tp) axis traced from
+    the real sharded trees."""
     return dataclasses.replace(
         base, traced=traced_zero_scales(
             actor_cfg, critic_cfg, ndp=ndp, zero_stage=base.zero_stage,
-            engine=engine, gather_mode=base.gather_mode,
+            engine=engine, gather_mode=base.gather_mode, ntp=base.ntp,
             lora_rank=base.lora_rank if lora_rank is None else lora_rank))

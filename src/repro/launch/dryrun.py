@@ -27,7 +27,8 @@ from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.models import Model
 from repro.sharding import (ShardedContext, ShardingStrategy, batch_pspecs,
-                            cache_pspecs, opt_shardings, to_named)
+                            cache_pspecs, opt_shardings, to_named,
+                            validate_tp)
 from repro.steps import (cache_specs, decode_window, input_specs,
                          make_decode_step, make_prefill_step, make_train_step,
                          sds)
@@ -85,6 +86,9 @@ def build_lowerable(arch: str, shape_name: str, mesh,
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     strat = strat or ShardingStrategy()
+    # eager Megatron divisibility check (DESIGN.md §9): fail here with the
+    # offending dims named, not as an XLA shape error deep inside lower()
+    validate_tp(cfg, strat.ntp)
     # the same context the RLHF trainer threads: param/opt specs come from
     # its TreePlans, so the launch path and the runtime engines cannot
     # disagree about what a ZeRO stage means
@@ -170,8 +174,11 @@ def _cache_pspec_tree(model, cfg, shape, mesh, strat):
 
 
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
-            strat: ShardingStrategy = None, verbose: bool = True) -> dict:
-    mesh = make_production_mesh(multi_pod=multi_pod)
+            strat: ShardingStrategy = None, verbose: bool = True,
+            mesh=None) -> dict:
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_desc = "x".join(str(s) for s in dict(mesh.shape).values())
     t0 = time.time()
     fn, args, in_sh, out_sh, donate = build_lowerable(arch, shape_name, mesh,
                                                       strat)
@@ -187,8 +194,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         ca = ca[0] if ca else {}
     coll = collective_bytes(compiled.as_text())
     rec = {
-        "arch": arch, "shape": shape_name,
-        "mesh": "2x16x16" if multi_pod else "16x16",
+        "arch": arch, "shape": shape_name, "mesh": mesh_desc,
         "ok": True,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "bytes_per_device": {
@@ -214,32 +220,51 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--zero-stage", type=int, default=3, choices=(1, 2, 3),
                     help="ZeRO stage for the sharding strategy (paper R2)")
+    ap.add_argument("--ndp", type=int, default=0,
+                    help="with --ntp: data-parallel size of an explicit "
+                         "(data=ndp, model=ntp) zero mesh instead of the "
+                         "production mesh")
+    ap.add_argument("--ntp", type=int, default=0,
+                    help="declared TP degree: builds the mesh via "
+                         "launch.mesh.make_zero_mesh(ndp, model=ntp), sets "
+                         "ShardingStrategy.ntp, and eagerly validates the "
+                         "Megatron divisibility contract (DESIGN.md §9)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
-    strat = ShardingStrategy(zero_stage=args.zero_stage)
+    mesh = None
+    if args.ndp or args.ntp:
+        from repro.launch.mesh import make_zero_mesh
+        ndp, ntp = max(args.ndp, 1), max(args.ntp, 1)
+        strat = ShardingStrategy(zero_stage=args.zero_stage, ntp=ntp)
+        mesh = make_zero_mesh(ndp, model=ntp)
+    else:
+        strat = ShardingStrategy(zero_stage=args.zero_stage)
 
     combos = []
     if args.all:
         combos = [(a, s) for a in ASSIGNED_ARCHS for s in SHAPES]
     else:
-        combos = [(args.arch, args.shape)]
+        # default to the smallest assigned arch / shortest shape so a bare
+        # `--ndp 2 --ntp 2` invocation has something to compile
+        combos = [(args.arch or ASSIGNED_ARCHS[0], args.shape or "train_4k")]
 
     records = []
     for arch, shape in combos:
         try:
             rec = run_one(arch, shape, multi_pod=args.multi_pod,
-                          strat=strat, verbose=not args.all)
+                          strat=strat, verbose=not args.all, mesh=mesh)
             status = "OK"
         except Exception as e:
             rec = {"arch": arch, "shape": shape,
-                   "mesh": "2x16x16" if args.multi_pod else "16x16",
+                   "mesh": ("x".join(str(s) for s in dict(mesh.shape).values())
+                            if mesh is not None else
+                            ("2x16x16" if args.multi_pod else "16x16")),
                    "ok": False, "error": f"{type(e).__name__}: {e}",
                    "trace": traceback.format_exc()[-2000:]}
             status = f"FAIL {type(e).__name__}"
         records.append(rec)
         print(f"[dryrun] {arch:25s} {shape:12s} "
-              f"{'2x16x16' if args.multi_pod else '16x16':8s} {status}",
-              flush=True)
+              f"{rec['mesh']:8s} {status}", flush=True)
         if args.out:
             with open(args.out, "w") as f:
                 json.dump(records, f, indent=1)

@@ -77,8 +77,13 @@ class ModelEngine:
                 with_value=role in self.VALUE_ROLES)
         # ZeRO placement (sharding.ShardedContext): the frozen trunk shards
         # over the DP/FSDP domain per zero_stage; per-role adapters are
-        # replicated-or-sharded by rule (rules.adapter_pspecs). Init values
-        # are unchanged — only the committed layout moves.
+        # replicated-or-sharded by rule (rules.adapter_pspecs). Under TP
+        # (strat.ntp > 1) both trees additionally carry the Megatron
+        # "model" entries — adapter factors partition consistently with
+        # their base matmul (column sites shard B's d_out, row sites A's
+        # d_in), so merge_adapter's base + A@B stays shard-local and the
+        # hydra merge is exact at every dp x tp layout (DESIGN.md §9).
+        # Init values are unchanged — only the committed layout moves.
         self.shard = shard
         self.base_plan = None
         self.adapter_plans: Dict[str, Any] = {}

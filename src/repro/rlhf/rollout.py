@@ -91,6 +91,32 @@ def spec_verify_step(model: Model, spec_k: int, verify_fn, params, h_last,
     return greedy, logp, n_acc, h_new, state
 
 
+def place_kv_tp(tree, mesh):
+    """Commit eagerly-built KV state (paged pools, dense caches) TP-sharded:
+    the kv-head axis (dim -2 of each ``[..., kv_heads, head_dim]`` leaf)
+    partitions over the model axis, mirroring ``rules.cache_pspecs``; when
+    kv heads don't divide, head_dim is tried, else the leaf replicates —
+    per device the KV footprint drops to ~1/ntp. No-op without a mesh, so
+    the pure-DP layout (and its byte accounting) is unchanged."""
+    if mesh is None:
+        return tree
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.ctx import resolve_entry
+
+    def place(x):
+        entries = [None] * x.ndim
+        if x.ndim >= 2:
+            e = resolve_entry(mesh, "model", x.shape[-2])
+            if e is not None:
+                entries[-2] = e
+            else:
+                entries[-1] = resolve_entry(mesh, "model", x.shape[-1])
+        return jax.device_put(x, NamedSharding(mesh, P(*entries)))
+
+    return jax.tree.map(place, tree)
+
+
 class Rollout:
     def __init__(self, model: Model, cfg: ModelConfig, *, capacity: int,
                  temperature: float = 1.0, top_k: int = 0,
@@ -98,7 +124,8 @@ class Rollout:
                  donate: bool = True, backend: str = "dense",
                  page_size: int = 16,
                  capture_buckets: Optional[Sequence[int]] = None,
-                 spec_decode: bool = False, spec_k: int = 2):
+                 spec_decode: bool = False, spec_k: int = 2,
+                 mesh=None):
         assert backend in ("dense", "paged"), backend
         self.model, self.cfg = model, cfg
         self.capacity = capacity
@@ -108,6 +135,12 @@ class Rollout:
         self.backend = backend
         self.page_size = page_size
         self.page_manager = None        # populated per generate() when paged
+        # TP mesh (DESIGN.md §9): generation runs under ``ctx.use_mesh`` so
+        # the model's "model"-axis constraint hints bake into the prefill /
+        # decode programs, and paged KV pools are committed sharded over
+        # the kv-head axis. None (the default, and every pure-DP caller)
+        # keeps the historical mesh-free trace.
+        self.mesh = mesh
 
         from repro.serving.buckets import BucketLadder, CompileCache
         self.compile_cache = CompileCache()
@@ -193,6 +226,9 @@ class Rollout:
 
             self._spec = jax.jit(spec_dense, donate_argnums=(1,))
 
+    def _place_pools(self, pools):
+        return place_kv_tp(pools, self.mesh)
+
     # -- bucketed prefill helpers -------------------------------------------
     def _bucketed_prompt(self, tokens):
         """Pad [B, P] prompts up to their capture bucket; returns the
@@ -212,12 +248,15 @@ class Rollout:
         needed. Marks the compile cache warmed either way."""
         if self.prefill_ladder is not None and self.backend == "dense" \
                 and self._rich:
-            for Sb in self.prefill_ladder.up_to(
-                    max_prompt_len or self.capacity):
-                batch = {"tokens": jnp.zeros((batch_size, Sb), jnp.int32)}
-                lens = jnp.zeros((batch_size,), jnp.int32)
-                self._prefill(params, batch, lens)
-                self.compile_cache.warm(("prefill", self.backend, Sb))
+            from repro.sharding import ctx as _sctx
+            with _sctx.use_mesh(self.mesh):
+                for Sb in self.prefill_ladder.up_to(
+                        max_prompt_len or self.capacity):
+                    batch = {"tokens": jnp.zeros((batch_size, Sb),
+                                                 jnp.int32)}
+                    lens = jnp.zeros((batch_size,), jnp.int32)
+                    self._prefill(params, batch, lens)
+                    self.compile_cache.warm(("prefill", self.backend, Sb))
         self.compile_cache.finish_warmup()
 
     def generate(self, params, batch, max_new_tokens: int, key,
@@ -242,6 +281,14 @@ class Rollout:
         — same sampling stream as the repeat path (the prefill logits are
         replicated row-wise before sampling), at 1/G of the prefill
         compute and shared prompt KV."""
+        from repro.sharding import ctx as _sctx
+        with _sctx.use_mesh(self.mesh):
+            return self._generate_inner(params, batch, max_new_tokens, key,
+                                        adapter=adapter,
+                                        group_size=group_size)
+
+    def _generate_inner(self, params, batch, max_new_tokens: int, key,
+                        adapter=None, group_size: int = 1):
         if adapter is not None:
             from repro.models.lora import delete_merged
             merged = self.model.merge_adapter(params, adapter)
@@ -348,7 +395,8 @@ class Rollout:
             * self.cfg.num_layers)
         for b in range(B):
             pm.allocate(b * G, P)           # group parent row
-        pools = self.model.init_paged_pools(num_pages, ps, dtype)
+        pools = self._place_pools(
+            self.model.init_paged_pools(num_pages, ps, dtype))
         bt = jnp.asarray(pm.block_table_array(
             [b * G for b in range(B)], nb))
         pbatch, lens, Sb = self._bucketed_prompt(tokens)
@@ -425,7 +473,8 @@ class Rollout:
                 * self.cfg.num_layers)
             for b in range(B):
                 pm.allocate(b, P)
-            pools = self.model.init_paged_pools(B * nb, ps, dtype)
+            pools = self._place_pools(
+                self.model.init_paged_pools(B * nb, ps, dtype))
             seq_ids = list(range(B))
             bt = jnp.asarray(pm.block_table_array(seq_ids, nb))
             logits, state, h_last = self._prefill(params, pbatch, pools, bt,

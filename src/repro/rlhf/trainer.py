@@ -412,6 +412,12 @@ class RLHFTrainer:
         self.actor_cfg, self.critic_cfg = actor_cfg, critic_cfg
         self.reward_fn = reward_fn
         self.shard = shard
+        # ambient mesh for the scoring/rollout programs: only a TP context
+        # (ntp > 1) activates it, so the in-jit "model" constraint hints
+        # resolve — pure-DP runs keep the historical mesh-free traces and
+        # their bitwise contract intact (DESIGN.md §3 vs §9)
+        self._tp_mesh = shard.mesh if shard is not None and \
+            getattr(shard, "ntp", 1) > 1 else None
         self.telemetry = telemetry          # obs.RunTelemetry | None
         self._sim_attached = False
         self._gather_step_bytes: Optional[int] = None
@@ -426,7 +432,7 @@ class RLHFTrainer:
             temperature=0.0 if rl.spec_decode else rl.temperature,
             top_k=0 if rl.spec_decode else rl.top_k,
             spec_decode=rl.spec_decode, spec_k=rl.spec_k,
-            capture_buckets=rl.capture_buckets)
+            capture_buckets=rl.capture_buckets, mesh=self._tp_mesh)
         self.offload = self.offload_lot = None
         if rl.offload != "none":
             self._init_offload(rl)
@@ -462,9 +468,15 @@ class RLHFTrainer:
         at.register("critic_opt", lambda: self.critic_state["opt"])
         # the ZeRO-3 rollout gather copies register BEFORE merged_rollout:
         # the merged tree's non-adapted leaves alias the gathered trunk,
-        # and they are gather traffic, not freshly merged weights
+        # and they are gather traffic, not freshly merged weights.
+        # Under TP (shard.ntp > 1) the same copies are DP-gathered but stay
+        # model-sharded at 1/ntp per device — a different animal in an OOM
+        # report, so they get their own ``tp_gather`` owner (the _gen paths
+        # pick the key by ntp; exactly one of the two is ever populated)
         at.register("zero_gather",
                     lambda: self._live_buffers.get("zero_gather"))
+        at.register("tp_gather",
+                    lambda: self._live_buffers.get("tp_gather"))
         at.register("merged_rollout",
                     lambda: self._live_buffers.get("merged_rollout"))
         at.register("rollout_buffers",
@@ -474,6 +486,13 @@ class RLHFTrainer:
         self.memory.attributor = at
 
     # ------------------------------------------------------------- sharding
+    @property
+    def _gather_key(self) -> str:
+        """Attribution owner of the rollout gather copies: ``zero_gather``
+        in pure DP, ``tp_gather`` when the mesh has a model axis (the
+        copies are DP-gathered but TP-resident at 1/ntp per device)."""
+        return "tp_gather" if self._tp_mesh is not None else "zero_gather"
+
     def per_device_state_bytes(self) -> int:
         """Max-over-devices bytes of the persistent role state (params +
         optimizer moments) — the figure the ZeRO stages cut. Replicated
@@ -696,12 +715,12 @@ class RLHFTrainer:
             p, owned = self.actor_state["params"], False
             if self.actor_plan is not None:
                 p, owned = self.actor_plan.gather_copy(p)
-                self._live_buffers["zero_gather"] = {"actor": p}
+                self._live_buffers[self._gather_key] = {"actor": p}
             try:
                 return self.rollout.generate(p, {"tokens": prompts},
                                              self.rl.gen_len, key)
             finally:
-                self._live_buffers.pop("zero_gather", None)
+                self._live_buffers.pop(self._gather_key, None)
                 if owned:
                     delete_tree(p)
 
@@ -802,7 +821,7 @@ class RLHFTrainer:
                 # the gather copies are live Python-held trees for the
                 # whole generation — own them in the attribution table
                 # (the merged tree's non-adapted leaves alias ``base``)
-                self._live_buffers["zero_gather"] = {
+                self._live_buffers[self._gather_key] = {
                     "base": base, "adapter": adapter}
             merged = self.actor.merge_adapter(base, adapter)
             # visible to the attribution engine for the duration of the
@@ -828,7 +847,7 @@ class RLHFTrainer:
                 # only the freshly-merged leaves may die).
                 delete_merged(merged, adapter.get("lora"))
                 self._live_buffers.pop("merged_rollout", None)
-                self._live_buffers.pop("zero_gather", None)
+                self._live_buffers.pop(self._gather_key, None)
                 if owned_a:
                     delete_tree(adapter)
                 if owned_b:
@@ -906,11 +925,26 @@ class RLHFTrainer:
                     ppo_epochs=self.rl.ppo_epochs, min_bytes=2048)
             finally:
                 _L.FLASH_MIN_ELEMS = flash_min
+            strat = MemoryStrategy(
+                "None", offload=self.rl.offload,
+                grad_ckpt=(self.actor_cfg.remat == "full"))
+            ndp = ntp = 1
+            if self.shard is not None:
+                # predict the run's REAL dp x tp layout: per-group
+                # fractions traced from the same spec trees the runtime
+                # placed its state with (core.strategies.traced_strategy)
+                from repro.core.strategies import traced_strategy
+                ndp, ntp = self.shard.ndp, self.shard.ntp
+                strat = dataclasses.replace(
+                    strat, zero_stage=self.shard.zero_stage,
+                    gather_mode=self.shard.strat.gather_mode, ntp=ntp)
+                strat = traced_strategy(
+                    strat, self.actor_cfg, self.critic_cfg, ndp=ndp,
+                    engine=self.rl.engine, lora_rank=self.rl.lora_rank)
             r = run_iteration(
-                ph, persist,
-                MemoryStrategy("None", offload=self.rl.offload,
-                               grad_ckpt=(self.actor_cfg.remat == "full")),
-                "none", ndp=1, trainable_fraction=1.0, capacity=None)
+                ph, persist, strat,
+                "none", ndp=ndp, ntp=ntp, trainable_fraction=1.0,
+                capacity=None)
             sim: Dict[str, dict] = {}
             for rec in r.phase_records:
                 name = "rollout" if rec.name.startswith("rollout") \
@@ -1020,7 +1054,14 @@ class RLHFTrainer:
         """Phases 1-5: rollout + the four scoring inferences -> experience.
         Straight-line over the engine-bound callables from ``_init_*``, in
         the canonical order of ``core.phases.RLHF_PHASE_SEQUENCE`` (the
-        order the offload plan prefetches against)."""
+        order the offload plan prefetches against). Under TP the whole
+        sequence runs with the mesh ambient (``ctx.use_mesh``) so the
+        scoring programs trace with their "model" constraint hints live."""
+        from repro.sharding import ctx as _sctx
+        with _sctx.use_mesh(self._tp_mesh):
+            return self._make_experience_inner(prompts, key)
+
+    def _make_experience_inner(self, prompts: jax.Array, key):
         mm = self.memory
         ro = self._gen(prompts, key)
         self._live_buffers["rollout"] = {

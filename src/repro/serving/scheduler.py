@@ -65,7 +65,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import Model
-from repro.rlhf.rollout import sample_token, spec_verify_step
+from repro.rlhf.rollout import place_kv_tp, sample_token, spec_verify_step
+from repro.sharding import ctx as shctx
 from repro.serving.buckets import BucketLadder, CompileCache
 
 
@@ -94,8 +95,15 @@ class ContinuousBatcher:
                  spec_decode: bool = False, spec_k: int = 2,
                  warmup: bool = True, prefix_cache: bool = False,
                  tenant_weights: Optional[Dict[str, float]] = None,
-                 aging: float = 1.0):
+                 aging: float = 1.0, mesh=None):
         assert cache_backend in ("dense", "paged"), cache_backend
+        # TP mesh (DESIGN.md §9): serving params arrive model-sharded from
+        # the trainer's compute layout, the KV pool/cache commits sharded
+        # over the kv-head axis, and every jitted program (prefill, decode,
+        # spec verify) traces under ``ctx.use_mesh`` so its "model"
+        # constraint hints resolve. None = the historical single-device /
+        # pure-DP layout, byte-for-byte.
+        self.mesh = mesh
         assert not (prefix_cache and cache_backend != "paged"), \
             "prefix caching needs the paged backend"
         self.telemetry = telemetry          # obs.RunTelemetry | None
@@ -160,7 +168,8 @@ class ContinuousBatcher:
 
         if cache_backend == "dense":
             self.caches = model.init_cache(slots, capacity, cache_dtype)
-            self.caches = {"segments": self.caches, "cross_kv": None}
+            self.caches = {"segments": place_kv_tp(self.caches, mesh),
+                           "cross_kv": None}
 
             def decode(params, caches, tok, pos, key, live):
                 logits, caches = model.decode_step(params, caches, tok, pos)
@@ -205,8 +214,9 @@ class ContinuousBatcher:
             self.pm = PageManager(
                 num_pages, page_size,
                 bytes_per_token=layer_token_bytes * cfg.num_layers)
-            self.pools = model.init_paged_pools(num_pages, page_size,
-                                                cache_dtype)
+            self.pools = place_kv_tp(
+                model.init_paged_pools(num_pages, page_size, cache_dtype),
+                mesh)
 
             def decode(params, pools, tok, pos, bt, key, live):
                 logits, pools = model.paged_decode_step(params, pools, tok,
@@ -251,7 +261,13 @@ class ContinuousBatcher:
         calls on the live caches with only dead writes (``lengths = 0``,
         ``position = -1``), so it must precede admission — which it does:
         construction is the one moment both backends are guaranteed empty.
-        After this, any post-warmup compile-cache miss is a recompile."""
+        After this, any post-warmup compile-cache miss is a recompile.
+        Traces run under the TP mesh (if any), so every bucket's program
+        bakes in the same model-sharded layout ``step`` serves with."""
+        with shctx.use_mesh(self.mesh):
+            self._warmup_inner(max_prompt_len)
+
+    def _warmup_inner(self, max_prompt_len: Optional[int]) -> None:
         cc = self.compile_cache
         if self.prefill_ladder is not None:
             for Sb in self.prefill_ladder.up_to(
@@ -817,7 +833,8 @@ class ContinuousBatcher:
         is captured (owner table, top buffers, recent serve steps) before
         the re-raise."""
         try:
-            done = self._step_inner()
+            with shctx.use_mesh(self.mesh):
+                done = self._step_inner()
         except Exception as e:
             fl = self.flight
             if fl is not None and fl.is_oom(e):

@@ -1,13 +1,27 @@
+"""One public surface over the two sharding faces (see each module's
+docstring): ``context`` — out-of-jit ShardedContext/TreePlan spec trees —
+and ``ctx`` — the ambient-mesh GSPMD constraint hints model code uses
+in-jit. Both resolve axis names from ``rules`` (DP_AXIS_NAMES/MODEL_AXIS),
+so hints and explicit specs always agree about the mesh."""
+from repro.sharding import ctx
 from repro.sharding.context import (ShardedContext, TreePlan, delete_tree,
                                     tree_per_device_bytes)
-from repro.sharding.rules import (ShardingStrategy, SpecMesh, adapter_pspecs,
-                                  batch_pspecs, cache_pspecs, dp_axes,
-                                  opt_shardings, param_pspecs,
+from repro.sharding.ctx import (constrain, constrain_spec, current_mesh,
+                                resolve_entry, set_current_mesh, use_mesh)
+from repro.sharding.rules import (DP_AXIS_NAMES, MODEL_AXIS, TP_COL_SITES,
+                                  TP_ROW_SITES, ShardingStrategy, SpecMesh,
+                                  adapter_pspecs, batch_pspecs, cache_pspecs,
+                                  dp_axes, opt_shardings, param_pspecs,
                                   spec_device_fraction, to_named,
-                                  zero_opt_pspecs)
+                                  validate_tp, zero_opt_pspecs)
 
-__all__ = ["ShardedContext", "ShardingStrategy", "SpecMesh", "TreePlan",
-           "adapter_pspecs", "batch_pspecs", "cache_pspecs", "delete_tree",
+__all__ = ["DP_AXIS_NAMES", "MODEL_AXIS", "ShardedContext",
+           "ShardingStrategy", "SpecMesh", "TP_COL_SITES", "TP_ROW_SITES",
+           "TreePlan",
+           "adapter_pspecs", "batch_pspecs", "cache_pspecs", "constrain",
+           "constrain_spec", "ctx", "current_mesh", "delete_tree",
            "dp_axes",
-           "opt_shardings", "param_pspecs", "spec_device_fraction",
-           "to_named", "tree_per_device_bytes", "zero_opt_pspecs"]
+           "opt_shardings", "param_pspecs", "resolve_entry",
+           "set_current_mesh", "spec_device_fraction", "to_named",
+           "tree_per_device_bytes", "use_mesh", "validate_tp",
+           "zero_opt_pspecs"]

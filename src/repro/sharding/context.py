@@ -14,6 +14,13 @@ hydra LoRA adapters alike) — that know
   * the **compute specs** — the state specs with the DP entries stripped
     (tensor-parallel entries survive): what a forward/backward gathers to.
 
+TP composes orthogonally (DESIGN.md §9): with ``strat.ntp > 1`` every
+spec set above carries the Megatron column/row "model" entries from
+``rules.param_pspecs``/``adapter_pspecs``, and every gather in this module
+— ``gather``, ``gather_copy``, the per-layer ``layer_specs`` — moves ONLY
+the DP dimension. TP entries are never gathered: the model-sharded layout
+IS the compute layout, at every ZeRO stage and in both gather modes.
+
 The execution contract (validated bit-level on forced multi-device CPU,
 see ``benchmarks/zero_smoke.py``): step functions gather parameters to the
 compute specs *before* any matmul, run the loss/gradient computation on
@@ -188,7 +195,10 @@ class TreePlan:
     def gather_copy(self, params):
         """Materialize a DP-gathered copy of ``params`` (committed
         ``device_put`` onto the compute shardings) for rollout / merged
-        generation. Returns ``(tree, owned)``:
+        generation. Under TP the copies stay model-sharded — only the DP
+        dimension is gathered, so the per-device cost of a rollout copy is
+        1/ntp of the tree (the trainer attributes it to the ``tp_gather``
+        owner instead of ``zero_gather``). Returns ``(tree, owned)``:
 
           * ``owned=False`` (below ZeRO-3): the compute specs equal the
             state specs, so the returned tree is the SAME buffers as the
@@ -260,20 +270,33 @@ class ShardedContext:
     def create(cls, ndp: int = 1, *, zero_stage: int = 3, model: int = 1,
                gather_mode: str = "layer",
                devices=None) -> "ShardedContext":
-        """Build a ``(data=ndp, model=...)`` mesh from the first
+        """Build a ``(data=ndp, model=ntp)`` mesh from the first
         ``ndp * model`` local devices (so an 8-device process can host both
-        the ndp=1 baseline and the ndp=8 sharded run)."""
+        the ndp=1 baseline and the ndp=8 sharded run). ``model`` is the TP
+        degree: the strategy records it as ``ntp`` so every spec the
+        context emits partitions over dp x tp (DESIGN.md §9). Callers with
+        a concrete ModelConfig should run ``rules.validate_tp(cfg, model)``
+        first for the friendly divisibility error."""
         from repro.launch.mesh import make_zero_mesh
         assert gather_mode in ("layer", "tree"), gather_mode
         mesh = make_zero_mesh(ndp, model=model, devices=devices)
+        # model == 1 keeps tensor_parallel off so the size-1 "model" axis
+        # never decorates specs — the pre-TP (pure-ZeRO) spec trees, and
+        # their bit-identity contract, are byte-for-byte unchanged
         return cls(mesh, ShardingStrategy(zero_stage=zero_stage,
                                           tensor_parallel=model > 1,
+                                          ntp=model,
                                           gather_mode=gather_mode))
 
     @property
     def ndp(self) -> int:
         from repro.sharding.rules import _axsize, dp_axes
         return _axsize(self.mesh, dp_axes(self.mesh))
+
+    @property
+    def ntp(self) -> int:
+        """Runtime TP degree — the mesh's "model" axis size (1 without)."""
+        return dict(self.mesh.shape).get("model", 1)
 
     @property
     def zero_stage(self) -> int:

@@ -2,10 +2,22 @@
 
 Model code calls ``constrain(x, "dp", None, "model")`` at key activation
 points; when no mesh is active (CPU smoke tests) it is a no-op. Entries:
-``"dp"`` resolves to the data-parallel axes (("pod","data") on the multi-pod
-mesh), ``"model"`` to tensor parallelism. Any entry whose dim is not
-divisible by the axis size is dropped (replicated) — this is what lets the
-same model code lower on 1-device CPU, 256- and 512-chip meshes.
+``"dp"`` resolves to the data-parallel axes (``rules.DP_AXIS_NAMES`` —
+("pod","data") on the multi-pod mesh), ``"model"`` (``rules.MODEL_AXIS``)
+to tensor parallelism. Any entry whose dim is not divisible by the axis
+size is dropped (replicated) — this is what lets the same model code lower
+on 1-device CPU, 256- and 512-chip meshes.
+
+Division of labour with ``sharding.context`` (one public surface, both
+re-exported from ``repro.sharding``): *this* module is the in-jit,
+tree-free face — an ambient mesh plus per-activation GSPMD hints that
+model code sprinkles without threading a plan around; ``context`` is the
+out-of-jit face — ``ShardedContext``/``TreePlan`` build and commit whole
+spec trees for params/opt/grads. Both resolve axis names from
+``sharding.rules`` (``DP_AXIS_NAMES``/``MODEL_AXIS``), so a ``constrain``
+hint and an explicit ``TreePlan`` spec always mean the same devices. The
+runtime threads the two together by running its jitted programs under
+``use_mesh(shard.mesh)``.
 """
 from __future__ import annotations
 
@@ -15,6 +27,8 @@ from typing import Optional
 import jax
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
+
+from repro.sharding.rules import DP_AXIS_NAMES, MODEL_AXIS
 
 _MESH: Optional[Mesh] = None
 
@@ -29,7 +43,10 @@ def current_mesh() -> Optional[Mesh]:
 
 
 @contextmanager
-def use_mesh(mesh: Mesh):
+def use_mesh(mesh: Optional[Mesh]):
+    """Scoped ambient mesh. ``use_mesh(None)`` is the explicit "no mesh"
+    scope (constraints become no-ops) — the unsharded trainer path uses it
+    so a leaked global can never bleed into an ndp=1 baseline."""
     global _MESH
     prev = _MESH
     _MESH = mesh
@@ -49,10 +66,14 @@ def _axsize(mesh, axes) -> int:
 
 
 def resolve_entry(mesh: Mesh, entry, dim: int):
+    """Resolve a hint entry against ``mesh``: "dp" -> the DP axis-name
+    subset present (``rules.DP_AXIS_NAMES``), "model" (``rules.MODEL_AXIS``)
+    or any literal axis name -> itself; non-divisible or absent -> None
+    (replicate). The same names ``ShardedContext`` specs use."""
     if entry is None:
         return None
     if entry == "dp":
-        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        axes = tuple(a for a in DP_AXIS_NAMES if a in mesh.axis_names)
         if not axes:
             return None
         if dim % _axsize(mesh, axes) == 0:
@@ -60,6 +81,8 @@ def resolve_entry(mesh: Mesh, entry, dim: int):
         # try data alone
         if "data" in axes and dim % mesh.shape["data"] == 0:
             return "data"
+        return None
+    if entry == MODEL_AXIS and MODEL_AXIS not in mesh.axis_names:
         return None
     if entry not in mesh.axis_names:
         return None

@@ -29,8 +29,17 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig, ShapeConfig
 
 
+# Canonical mesh axis names. ``DP_AXIS_NAMES`` together form the
+# data-parallel (ZeRO/FSDP) domain; ``MODEL_AXIS`` carries tensor/expert
+# parallelism. ``sharding.ctx`` resolves its constraint-hint entries
+# ("dp" / "model") from these same names, so GSPMD hints and explicit
+# TreePlan specs can never disagree about which axis is which.
+DP_AXIS_NAMES = ("pod", "data")
+MODEL_AXIS = "model"
+
+
 def dp_axes(mesh: Mesh):
-    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return tuple(a for a in DP_AXIS_NAMES if a in mesh.axis_names)
 
 
 def _axsize(mesh: Mesh, axes) -> int:
@@ -65,6 +74,20 @@ class ShardingStrategy:
     zero_stage: int = 3          # 0 | 1 | 2 | 3  (0 = fully replicated DP)
     tensor_parallel: bool = True
     expert_parallel: bool = True
+    # Declared TP degree: the size the "model" mesh axis must have when this
+    # strategy runs (1 = hints-only TP, the pre-TP-runtime behaviour). The
+    # runtime (ShardedContext.create(model=ntp)) sets it from the mesh; the
+    # traced simulator builds a SpecMesh with a matching model axis. A
+    # strategy with ntp > 1 refuses meshes whose model axis disagrees, so
+    # specs and devices can never silently diverge.
+    ntp: int = 1
+    # TP layout recipe. "megatron" is the column/row-parallel split
+    # (DESIGN.md §9): QKV/up-projections column-parallel (output dim over
+    # "model"), down/out-projections row-parallel (input dim over "model"),
+    # embeddings/lm-head vocab-parallel. The only mode today; the knob
+    # exists so alternate layouts (e.g. sequence-parallel-only) get a name
+    # instead of a boolean explosion.
+    tp_mode: str = "megatron"
     # ZeRO-3 all-gather granularity (DESIGN.md §3.7): "layer" gathers one
     # scanned layer period per scan iteration inside the forward/backward
     # (the FSDP discipline — transient peak is ONE layer period), "tree"
@@ -79,6 +102,55 @@ class ShardingStrategy:
     offload_optimizer: bool = False
     remat: Optional[str] = None       # override cfg.remat if set
 
+    def __post_init__(self):
+        if self.ntp < 1:
+            raise ValueError(f"ntp must be >= 1, got {self.ntp}")
+        if self.tp_mode != "megatron":
+            raise ValueError(f"unknown tp_mode {self.tp_mode!r} "
+                             "(supported: 'megatron')")
+        if self.ntp > 1 and not self.tensor_parallel:
+            raise ValueError("ntp > 1 requires tensor_parallel=True")
+
+
+# Megatron site classification for the LoRA adapter rules: COLUMN-parallel
+# base matmuls shard their OUTPUT dim over "model" (x stays replicated on
+# the model axis going in), ROW-parallel ones shard their INPUT dim (x
+# arrives model-sharded, the matmul ends in an all-reduce). Mirrors the
+# per-name entries in param_pspecs below.
+TP_COL_SITES = ("wq", "wk", "wv", "w_in", "w_gate", "in_proj",
+                "q_up", "kv_up", "proj")
+TP_ROW_SITES = ("wo", "w_out", "out_proj")
+
+
+def validate_tp(cfg: ModelConfig, ntp: int) -> None:
+    """Eagerly reject a (config, TP degree) pair the Megatron layout cannot
+    shard: heads, FFN width and vocab must all divide ``ntp``. Raising here
+    — at launch/mesh-construction time — replaces the XLA shape-mismatch
+    error a bad combination would otherwise surface deep inside jit."""
+    if ntp <= 1:
+        return
+    bad = []
+    if cfg.num_heads % ntp:
+        bad.append(f"num_heads={cfg.num_heads}")
+    if cfg.d_ff and cfg.d_ff % ntp:
+        bad.append(f"d_ff={cfg.d_ff}")
+    if cfg.vocab_size % ntp:
+        bad.append(f"vocab_size={cfg.vocab_size}")
+    if bad:
+        raise ValueError(
+            f"config {cfg.name!r} cannot run tensor-parallel at ntp={ntp}: "
+            f"{', '.join(bad)} must be divisible by ntp. Pick a TP degree "
+            f"dividing all of (num_heads, d_ff, vocab_size) or adjust the "
+            f"config.")
+
+
+def _check_tp_mesh(mesh, strat: ShardingStrategy) -> None:
+    if strat.ntp > 1:
+        size = dict(mesh.shape).get("model")
+        assert size == strat.ntp, \
+            (f"strategy declares ntp={strat.ntp} but the mesh's 'model' "
+             f"axis is {size} ({tuple(mesh.axis_names)})")
+
 
 def _div(mesh, dim: int, axes) -> bool:
     return dim % _axsize(mesh, axes) == 0 and _axsize(mesh, axes) > 1
@@ -88,6 +160,7 @@ def param_pspecs(cfg: ModelConfig, mesh: Mesh,
                  strat: ShardingStrategy, params_shape) -> dict:
     """PartitionSpec pytree matching ``params_shape`` (a ShapeDtypeStruct
     pytree from jax.eval_shape of model.init)."""
+    _check_tp_mesh(mesh, strat)
     dp = dp_axes(mesh)
     mp = "model" if (strat.tensor_parallel and "model" in mesh.axis_names) else None
     fsdp = dp if strat.zero_stage >= 3 else None
@@ -209,27 +282,50 @@ def adapter_pspecs(mesh: Mesh, strat: ShardingStrategy, adapter_shape) -> dict:
         domain at ZeRO-3 (the rank dim is tiny and stays whole);
       * ``b`` factors ``[*lead, r, d_out]`` shard ``d_out`` likewise;
       * value heads / biases are replicated (scalar-output leaves);
-      * below ZeRO-3 the whole adapter is replicated — the per-role trees
-        are paper-small, so only the FSDP stage bothers cutting them.
+      * below ZeRO-3 the DP entries drop — the per-role trees are
+        paper-small, so only the FSDP stage bothers cutting them over DP.
 
-    Divisibility falls back to replication per-leaf, same as
-    :func:`param_pspecs`."""
+    Under TP (a mesh with a "model" axis and ``strat.tensor_parallel``)
+    each factor additionally partitions CONSISTENTLY with its base matmul
+    (DESIGN.md §9), so the hydra merge ``base + A @ B`` is shard-local and
+    the merged tree lands in exactly the base layout:
+
+      * column-parallel sites (``TP_COL_SITES``: base output dim over
+        "model") put "model" on ``b``'s ``d_out`` — each model shard holds
+        the full ``A`` and its own columns of ``B``/``base``;
+      * row-parallel sites (``TP_ROW_SITES``: base input dim over "model")
+        put "model" on ``a``'s ``d_in`` — each shard holds its rows of
+        ``A``/``base`` and the full ``B``.
+
+    A dim takes the TP entry *or* the FSDP entry, TP first (the base rule
+    never stacks both on one dim either). Divisibility falls back per-leaf,
+    same as :func:`param_pspecs`."""
+    _check_tp_mesh(mesh, strat)
     dp = dp_axes(mesh)
     fsdp = dp if strat.zero_stage >= 3 else None
+    mp = "model" if (strat.tensor_parallel and "model" in mesh.axis_names) \
+        else None
 
     def fs(dim: int):
         return fsdp if (fsdp and dim % _axsize(mesh, fsdp) == 0) else None
 
+    def tp(dim: int):
+        return mp if (mp and dim % _axsize(mesh, mp) == 0) else None
+
     def spec_for(path: Tuple[str, ...], leaf) -> P:
         shape = leaf.shape
         name = path[-1]
+        site = path[-2] if len(path) >= 2 else ""
         if "value_head" in path or len(shape) < 2:
             return P(*([None] * len(shape)))
         lead = (None,) * (len(shape) - 2)
+        row_par = site in TP_ROW_SITES
         if name == "a":
-            return P(*lead, fs(shape[-2]), None)
+            e = (tp(shape[-2]) or fs(shape[-2])) if row_par else fs(shape[-2])
+            return P(*lead, e, None)
         if name == "b":
-            return P(*lead, None, fs(shape[-1]))
+            e = fs(shape[-1]) if row_par else (tp(shape[-1]) or fs(shape[-1]))
+            return P(*lead, None, e)
         return P(*([None] * len(shape)))
 
     flat = jax.tree_util.tree_flatten_with_path(adapter_shape)[0]

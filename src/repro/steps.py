@@ -153,6 +153,18 @@ def _accumulated_grads(loss_fn, params, batch, N: int, acc_dtype):
             jax.tree.map(lambda g: g / N, grads))
 
 
+def _trace_mesh(*shards):
+    """Ambient mesh the sharded step programs trace under. TP needs the
+    in-jit activation hints (``ctx.constrain`` "model" entries in the model
+    forward) resolved against the real mesh, so any TP plan activates it;
+    pure-DP plans return None — the historical mesh-free trace — so the
+    ZeRO bit-identity contract (DESIGN.md §3) sees an unchanged program."""
+    for shard in shards:
+        if shard is not None and getattr(shard.strat, "ntp", 1) > 1:
+            return shard.mesh
+    return None
+
+
 def _make_sharded_update(optimizer, shard, lr):
     """Update half of a ZeRO step: a jit whose operands (moments, grads,
     params) all arrive eagerly pre-placed on the SAME param-shaped update
@@ -264,10 +276,13 @@ def make_train_step(model: Model, cfg: ModelConfig, *, lr: float = 3e-5,
 
     jit_grads = jax.jit(grads_and_metrics)
     jit_update = _make_sharded_update(optimizer, shard, lr)
+    mesh = _trace_mesh(shard)
 
     def train_step(state, batch):
-        grads, metrics = jit_grads(state, batch)
-        return _run_sharded_update(jit_update, shard, state, grads), metrics
+        with ctx.use_mesh(mesh):
+            grads, metrics = jit_grads(state, batch)
+            new_state = _run_sharded_update(jit_update, shard, state, grads)
+        return new_state, metrics
 
     train_step.optimizer = optimizer
     train_step.prejitted = True     # callers must NOT wrap in jax.jit
@@ -358,10 +373,13 @@ def make_lora_train_step(model: Model, cfg: ModelConfig, *, lr: float = 3e-5,
     assert shard is not None, "base_shard without an adapter plan"
     jit_grads = jax.jit(grads_and_metrics)
     jit_update = _make_sharded_update(optimizer, shard, lr)
+    mesh = _trace_mesh(base_shard, shard)
 
     def train_step(state, base_params, batch):
-        grads, metrics = jit_grads(state, base_params, batch)
-        return _run_sharded_update(jit_update, shard, state, grads), metrics
+        with ctx.use_mesh(mesh):
+            grads, metrics = jit_grads(state, base_params, batch)
+            new_state = _run_sharded_update(jit_update, shard, state, grads)
+        return new_state, metrics
 
     train_step.optimizer = optimizer
     train_step.prejitted = True     # callers must NOT wrap in jax.jit

@@ -1,0 +1,399 @@
+"""Tensor parallelism as a runtime axis (DESIGN.md §9): Megatron spec
+rules, TP x ZeRO composition, and the dp x tp runtime smokes.
+
+Spec-structure checks run in-process on one device (SpecMesh — no device
+state touched); the runtime allclose/identity smokes spawn forced-device
+subprocesses and run in the CI multidevice job, like test_zero_rlhf.py.
+
+The correctness bar under TP is ALLCLOSE, not bitwise: TP splits matmul
+contractions, so partial sums reduce in a different order than the
+single-device program (~1 ulp of the accumulation dtype per layer). The
+pure-DP ZeRO contract (test_zero_rlhf.py) stays bit-identical because DP
+never splits a contraction.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+# runs (also) in the CI multidevice job's forced-device topology
+pytestmark = pytest.mark.multidevice
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+runtime_smoke = pytest.mark.skipif(
+    "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""),
+    reason="runtime TP smokes run in the multidevice CI job (set "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8 to enable)")
+
+
+def _run(code: str, devices: int = 8, timeout: int = 1200):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(_ROOT, "src"),
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, \
+        f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+# f32 params + greedy rollout: reduction-order drift stays ~1e-7 relative
+# and the trajectories cannot fork on it, so allclose compares numerics,
+# not diverged experience (see benchmarks/tp_smoke.py).
+_SMOKE_PRELUDE = """
+    import dataclasses, jax, jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.rlhf import RLHFConfig, RLHFTrainer
+    from repro.rlhf.reward import make_target_token_reward
+    from repro.sharding import ShardedContext
+
+    cfg = dataclasses.replace(
+        get_config("llama3_2_3b").smoke(), num_layers=2, d_model=128,
+        d_ff=256, vocab_size=64, num_heads=4, num_kv_heads=2, head_dim=32,
+        param_dtype="float32")
+    P, G, B = 8, 12, 4
+    key = jax.random.PRNGKey(1)
+    prompts = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
+
+    def run(engine, shard, steps=2):
+        rl = RLHFConfig(prompt_len=P, gen_len=G, lr=1e-3, critic_lr=1e-3,
+                        kl_coef=0.0, top_k=0, temperature=0.0,
+                        engine=engine, lora_rank=8)
+        tr = RLHFTrainer(cfg, cfg, rl, jax.random.PRNGKey(0),
+                         reward_fn=make_target_token_reward(7), shard=shard)
+        ms = [tr.train_step(prompts, jax.random.fold_in(key, s))
+              for s in range(steps)]
+        return tr, ms
+
+    def assert_allclose(m1, m2, label, rtol=1e-4, atol=1e-6):
+        for a, b in zip(m1, m2):
+            for k in ("loss", "ppo_loss", "vf_loss"):
+                if k in a:
+                    d = abs(a[k] - b[k])
+                    assert d <= atol + rtol * abs(a[k]), \\
+                        (label, k, a[k], b[k])
+"""
+
+
+@runtime_smoke
+@pytest.mark.parametrize("engine", ["separate", "hydra"])
+@pytest.mark.parametrize("zero_stage", [0, 3])
+def test_tp_allclose_grid(engine, zero_stage):
+    """2-step PPO losses allclose between (ndp=1, ntp=1) and
+    (ndp=2, ntp=2) at ZeRO off AND ZeRO-3, both engines — the axes
+    compose. Every layout must also cut per-device persistent state."""
+    _run(_SMOKE_PRELUDE + f"""
+    tr1, m1 = run("{engine}", None)
+    sc = ShardedContext.create(2, zero_stage={zero_stage}, model=2)
+    tr2, m2 = run("{engine}", sc)
+    assert_allclose(m1, m2, "{engine}-z{zero_stage}-tp2")
+    b1, b2 = tr1.per_device_state_bytes(), tr2.per_device_state_bytes()
+    assert b2 < b1, (b2, b1)
+    print("OK", b1, b2)
+    """)
+
+
+@runtime_smoke
+def test_tp_pure_cut_separate():
+    """Pure TP (zero_stage=0, DP replicated) cuts per-device param+opt
+    bytes >= 40% at ntp=2 for the separate engine — the acceptance bar
+    for the new axis on its own."""
+    _run(_SMOKE_PRELUDE + """
+    tr1, _ = run("separate", None, steps=1)
+    sc = ShardedContext.create(2, zero_stage=0, model=2)
+    tr2, _ = run("separate", sc, steps=1)
+    b1, b2 = tr1.per_device_state_bytes(), tr2.per_device_state_bytes()
+    assert b2 <= 0.60 * b1, (b2, b1)
+    print("cut to", 100 * b2 / b1, "%")
+    """)
+
+
+@runtime_smoke
+def test_tp_rollout_identity_dense_and_paged():
+    """Greedy rollout from the TP-sharded, DP-gathered actor — dense AND
+    paged decode, the paged pool itself kv-head-sharded over "model" —
+    matches the unsharded tokens exactly (separate engine)."""
+    _run(_SMOKE_PRELUDE + """
+    from repro.rlhf import Rollout
+    tr1, _ = run("separate", None, steps=1)
+    sc = ShardedContext.create(2, zero_stage=3, model=2)
+    tr2, _ = run("separate", sc, steps=1)
+    tok1 = Rollout(tr1.actor, cfg, capacity=P + G, temperature=0.0,
+                   top_k=0).generate(tr1.actor_state["params"],
+                                     {"tokens": prompts}, G, key).tokens
+    p2, owned = tr2.actor_plan.gather_copy(tr2.actor_state["params"])
+    assert owned
+    for backend in ("dense", "paged"):
+        ro = Rollout(tr2.actor, cfg, capacity=P + G, temperature=0.0,
+                     top_k=0, backend=backend, mesh=sc.mesh).generate(
+            p2, {"tokens": prompts}, G, key)
+        assert bool(jnp.array_equal(tok1, ro.tokens)), backend
+    print("rollout identical (dense+paged, tp2)")
+    """)
+
+
+@runtime_smoke
+def test_tp_hydra_merged_rollout_identity():
+    """Hydra under TP: adapters partition consistently with their base
+    matmuls (rules.adapter_pspecs), so the shard-local base + A @ B merge
+    is exact — the merged rollout reproduces the unsharded tokens."""
+    _run(_SMOKE_PRELUDE + """
+    from repro.rlhf import Rollout
+    tr1, _ = run("hydra", None, steps=1)
+    p1 = tr1.actor.merge_adapter(tr1.base_params, tr1.actor_state["params"])
+    tok1 = Rollout(tr1.actor, cfg, capacity=P + G, temperature=0.0,
+                   top_k=0).generate(p1, {"tokens": prompts}, G, key).tokens
+    sc = ShardedContext.create(2, zero_stage=3, model=2)
+    tr2, _ = run("hydra", sc, steps=1)
+    base2, ob = tr2.engine.base_plan.gather_copy(tr2.base_params)
+    ad2, oa = tr2.engine.adapter_plans["actor"].gather_copy(
+        tr2.actor_state["params"])
+    assert ob and oa
+    p2 = tr2.actor.merge_adapter(base2, ad2)
+    for backend in ("dense", "paged"):
+        ro = Rollout(tr2.actor, cfg, capacity=P + G, temperature=0.0,
+                     top_k=0, backend=backend, mesh=sc.mesh).generate(
+            p2, {"tokens": prompts}, G, key)
+        assert bool(jnp.array_equal(tok1, ro.tokens)), backend
+    print("hydra merged rollout identical under tp2")
+    """)
+
+
+# ---------------------------------------------------------------------------
+# Spec-level checks: no devices needed (fast lane)
+# ---------------------------------------------------------------------------
+def _entries(spec, leaf):
+    return list(spec) + [None] * (len(leaf.shape) - len(spec))
+
+
+def _site_specs(specs, shapes):
+    """{path: (spec entries, shape)} with stringified paths."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    leaves = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    out = {}
+    for (kp, spec), (_, leaf) in zip(flat, leaves):
+        path = tuple(str(getattr(k, "key", k)) for k in kp)
+        out[path] = (_entries(spec, leaf), leaf.shape)
+    return out
+
+
+def test_param_pspecs_megatron_sites():
+    """The Megatron mapping (DESIGN.md §9 table): QKV/up column-parallel
+    (output dim over "model"), down/out row-parallel (input dim), embed
+    and lm_head vocab-parallel — with the ZeRO-3 DP entry on the OTHER
+    dim, so the axes never stack."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.sharding import ShardingStrategy, SpecMesh, param_pspecs
+
+    cfg = get_config("llama3_2_3b")
+    shapes = jax.eval_shape(Model(cfg).init, jax.random.PRNGKey(0))
+    mesh = SpecMesh({"data": 2, "model": 2})
+    strat = ShardingStrategy(zero_stage=3, ntp=2)
+    sites = _site_specs(param_pspecs(cfg, mesh, strat, shapes), shapes)
+    checked = {"col": 0, "row": 0, "vocab": 0}
+    for path, (entries, shape) in sites.items():
+        name = path[-1]
+        # stacked segment trees carry a leading None
+        body = entries[1:] if entries and entries[0] is None and \
+            any(p.startswith("segment") for p in path) else entries
+        if name in ("wq", "wk", "wv", "w_in", "w_gate") and len(body) == 2:
+            assert body[-1] == "model", (path, entries)
+            assert body[-2] != "model", (path, entries)
+            checked["col"] += 1
+        if name in ("wo", "w_out") and len(body) == 2:
+            assert body[-2] == "model", (path, entries)
+            assert body[-1] != "model", (path, entries)
+            checked["row"] += 1
+        if name == "embed":
+            assert entries[0] == "model", (path, entries)
+            checked["vocab"] += 1
+        if name == "lm_head":
+            assert entries[-1] == "model", (path, entries)
+            checked["vocab"] += 1
+        # TP and DP never share a dim
+        for e in entries:
+            assert e != ("data", "model"), (path, entries)
+    assert all(v > 0 for v in checked.values()), checked
+
+
+def test_adapter_pspecs_tp_consistency():
+    """Adapter factors partition consistently with their base matmul:
+    column sites put "model" on b's d_out, row sites on a's d_in — so the
+    merge base + A @ B needs no collective and lands in the base layout."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.sharding import (TP_COL_SITES, TP_ROW_SITES,
+                                ShardingStrategy, SpecMesh, adapter_pspecs)
+
+    cfg = get_config("llama3_2_3b")
+    model = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    base = jax.eval_shape(model.init, key)
+    ad = jax.eval_shape(
+        lambda k: model.init_adapter(k, base, 128, with_value=True), key)
+    mesh = SpecMesh({"data": 2, "model": 2})
+    specs = adapter_pspecs(mesh, ShardingStrategy(zero_stage=0, ntp=2), ad)
+    sites = _site_specs(specs, ad)
+    n_col = n_row = 0
+    for path, (entries, shape) in sites.items():
+        name, site = path[-1], (path[-2] if len(path) >= 2 else "")
+        if "value_head" in path:
+            assert all(e is None for e in entries), (path, entries)
+            continue
+        if name == "a" and site in TP_ROW_SITES:
+            assert entries[-2] == "model", (path, entries)
+            n_row += 1
+        if name == "b" and site in TP_COL_SITES and shape[-1] % 2 == 0:
+            assert entries[-1] == "model", (path, entries)
+            n_col += 1
+        if name == "a" and site in TP_COL_SITES:
+            assert "model" not in entries, (path, entries)
+        if name == "b" and site in TP_ROW_SITES:
+            assert "model" not in entries, (path, entries)
+    assert n_col > 0 and n_row > 0, (n_col, n_row)
+
+
+def test_validate_tp_divisibility():
+    """The eager launch-time validator names every offending dim instead
+    of leaving an XLA shape error inside jit."""
+    import dataclasses
+
+    import pytest as _pytest
+
+    from repro.configs import get_config
+    from repro.sharding import ShardingStrategy, validate_tp
+
+    cfg = dataclasses.replace(
+        get_config("llama3_2_3b").smoke(), num_heads=4, num_kv_heads=2,
+        d_ff=256, vocab_size=64)
+    validate_tp(cfg, 1)
+    validate_tp(cfg, 2)
+    with _pytest.raises(ValueError, match="num_heads"):
+        validate_tp(cfg, 3)
+    with _pytest.raises(ValueError, match="ntp"):
+        ShardingStrategy(ntp=0)
+    with _pytest.raises(ValueError, match="tensor_parallel"):
+        ShardingStrategy(ntp=2, tensor_parallel=False)
+    with _pytest.raises(ValueError, match="tp_mode"):
+        ShardingStrategy(tp_mode="colwise")
+
+
+def test_tp_mesh_degree_mismatch_rejected():
+    """A strategy declaring ntp=2 refuses a mesh whose model axis is a
+    different size — specs and devices can never silently diverge."""
+    import jax
+
+    import pytest as _pytest
+
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.sharding import ShardingStrategy, SpecMesh, param_pspecs
+
+    cfg = get_config("llama3_2_3b")
+    shapes = jax.eval_shape(Model(cfg).init, jax.random.PRNGKey(0))
+    strat = ShardingStrategy(zero_stage=3, ntp=2)
+    with _pytest.raises(AssertionError, match="model"):
+        param_pspecs(cfg, SpecMesh({"data": 2, "model": 4}), strat, shapes)
+    with _pytest.raises(AssertionError, match="model"):
+        param_pspecs(cfg, SpecMesh({"data": 4}), strat, shapes)
+
+
+def test_strip_dp_preserves_model_entries():
+    """The ZeRO-3 gather target layout: DP entries drop, TP entries stay
+    — a gather moves ONLY the DP dimension."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding import SpecMesh
+    from repro.sharding.context import _strip_dp
+
+    mesh = SpecMesh({"data": 2, "model": 2})
+    assert _strip_dp(P("data", "model"), mesh) == P(None, "model")
+    assert _strip_dp(P("model", "data"), mesh) == P("model", None)
+    assert _strip_dp(P(None, "model"), mesh) == P(None, "model")
+    assert _strip_dp(P("data", None), mesh) == P(None, None)
+
+
+def test_zero_opt_pspecs_keep_tp_entries():
+    """ZeRO-1/2 optimizer sharding picks a dim the param spec leaves
+    unsharded — under TP that choice must keep every "model" entry, so
+    opt state is cut by BOTH axes (1/(ndp*ntp) for 2-D matmul leaves)."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.sharding import (ShardingStrategy, SpecMesh, param_pspecs,
+                                zero_opt_pspecs)
+
+    cfg = get_config("llama3_2_3b")
+    shapes = jax.eval_shape(Model(cfg).init, jax.random.PRNGKey(0))
+    mesh = SpecMesh({"data": 2, "model": 2})
+    strat = ShardingStrategy(zero_stage=1, ntp=2)
+    pspecs = param_pspecs(cfg, mesh, strat, shapes)
+    ospecs = zero_opt_pspecs(pspecs, shapes, mesh, strat)
+
+    def count(tree, want):
+        return sum(1 for spec in jax.tree.leaves(
+            tree, is_leaf=lambda x: isinstance(x, P))
+            for e in spec if e == want)
+
+    assert count(ospecs, "model") == count(pspecs, "model") > 0
+    # and the DP entry landed somewhere the params left whole
+    assert count(ospecs, "data") > count(pspecs, "data")
+    flat_p = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+    flat_o = jax.tree.leaves(ospecs, is_leaf=lambda x: isinstance(x, P))
+    for ps, os_ in zip(flat_p, flat_o):
+        for pe, oe in zip(ps, os_):
+            if pe is not None:
+                assert oe == pe, (ps, os_)   # opt never moves a TP entry
+
+
+def test_traced_scales_tp_fractions():
+    """The traced simulator realizes the axis: param fractions compose to
+    ~1/(ndp*ntp) at ZeRO-3, the hydra merged-rollout fraction is exactly
+    1.0 at ntp=1 (DP gather restores the full tree) and ~1/ntp under TP
+    (the gathered copy stays TP-sharded), and ntp=1 reproduces the
+    pre-TP pure-DP numbers byte-for-byte."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.core import traced_zero_scales
+
+    cfg = dataclasses.replace(
+        get_config("llama3_2_3b").smoke(), num_layers=2, d_model=1024,
+        d_ff=2048, vocab_size=64, num_heads=8, num_kv_heads=4, head_dim=128)
+
+    t_dp = dict(traced_zero_scales(cfg, cfg, ndp=2, zero_stage=3))
+    t_tp = dict(traced_zero_scales(cfg, cfg, ndp=2, zero_stage=3, ntp=2))
+    for group in ("actor_params:param", "critic_params:param",
+                  "actor_opt:opt", "critic_opt:opt"):
+        f_dp, f_tp = t_dp[group], t_tp[group]
+        assert 0.5 <= f_dp <= 0.7, (group, f_dp)    # ~1/2 + unshardables
+        assert 0.25 <= f_tp <= 0.45, (group, f_tp)  # ~1/4 + unshardables
+        assert f_tp < 0.75 * f_dp, (group, f_dp, f_tp)
+
+    # the merged-rollout copy is a DP-gather: exactly full-size at ntp=1
+    # (the invariant test_zero_rlhf's accounting grid relies on), ~1/ntp
+    # under TP because the gather leaves the model axis sharded
+    h_dp = dict(traced_zero_scales(cfg, cfg, ndp=2, zero_stage=3,
+                                   engine="hydra", lora_rank=16))
+    h_tp = dict(traced_zero_scales(cfg, cfg, ndp=2, zero_stage=3,
+                                   engine="hydra", lora_rank=16, ntp=2))
+    assert h_dp["merged_rollout:param"] == 1.0
+    assert 0.45 <= h_tp["merged_rollout:param"] <= 0.65, \
+        h_tp["merged_rollout:param"]
+    # the frozen trunk composes both axes too
+    assert h_tp["base_params:param"] < 0.75 * h_dp["base_params:param"]
